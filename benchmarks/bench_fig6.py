@@ -1,0 +1,48 @@
+"""Paper Fig. 6: train loss vs number of training samples (tens of
+thousands of samples are needed to avoid underfitting)."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import CASE_A, EmulatorTrainConfig
+from repro.core.circuit import CircuitParams
+from repro.core.emulator import generate_dataset, train_emulator
+
+
+def run(sizes=(500, 2000, 8000), epochs: int = 50):
+    acfg, cp = AnalogConfig(), CircuitParams()
+    n_test = 500
+    data = generate_dataset(jax.random.PRNGKey(0), max(sizes) + n_test,
+                            CASE_A, acfg, cp)
+    out = []
+    for n in sizes:
+        X, Pf, Y = data
+        sub = (jax.numpy.concatenate([X[:n], X[-n_test:]]),
+               jax.numpy.concatenate([Pf[:n], Pf[-n_test:]]),
+               jax.numpy.concatenate([Y[:n], Y[-n_test:]]))
+        tcfg = EmulatorTrainConfig(
+            n_train=n, n_test=n_test, epochs=epochs, lr=2e-3,
+            lr_halve_at=(epochs // 2, int(0.75 * epochs)), batch_size=256)
+        res = train_emulator(jax.random.PRNGKey(1), CASE_A, acfg, cp, tcfg,
+                             data=sub)
+        out.append({"n": n, "train_mse": res.train_mse,
+                    "test_mse": res.test_mse})
+    return out
+
+
+def main(csv=True):
+    rows = run()
+    dec = all(b["test_mse"] <= a["test_mse"] * 1.3
+              for a, b in zip(rows, rows[1:]))
+    if csv:
+        for r in rows:
+            print(f"fig6_point,{r['n']},train={r['train_mse']:.3e};"
+                  f"test={r['test_mse']:.3e}")
+        print(f"fig6_loss_vs_data,{rows[-1]['test_mse']*1e6:.2f},"
+              f"decreasing={dec}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

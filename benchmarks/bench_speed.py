@@ -1,0 +1,81 @@
+"""The paper's headline claim: emulation is 'incomparably' faster than the
+circuit simulator. Times one computing-block batch through:
+  circuit   -- Newton-Raphson solver (SPICE stand-in)
+  analytic  -- expert analytical model
+  emulator  -- Conv4Xbar (paper conv path, fused path, Pallas kernel)
+and a system-level figure: one AnalogMatmul (K=512, N=32) per backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import QUICK, get_emulator, timed
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import CASE_A
+from repro.core import conv4xbar
+from repro.core.analog import AnalogExecutor
+from repro.core.analytic import analytic_block_response
+from repro.core.circuit import CircuitParams, block_response
+from repro.core.emulator import normalize_features, sample_block_inputs
+
+
+def run(batch: int = 2048, seed: int = 0, tcfg=QUICK):
+    geom, acfg, cp = CASE_A, AnalogConfig(), CircuitParams()
+    res = get_emulator(geom.name, tcfg, seed)
+    key = jax.random.PRNGKey(seed)
+    x, periph = sample_block_inputs(key, batch, geom, acfg)
+    xn = normalize_features(x, acfg)
+
+    fns = {
+        "circuit": jax.jit(lambda a, p: block_response(a, cp, p)),
+        "analytic": jax.jit(lambda a, p: analytic_block_response(a, cp, p)),
+        "emulator_conv": jax.jit(
+            lambda a, p: conv4xbar.apply(res.params, a, p)),
+        "emulator_fused": jax.jit(
+            lambda a, p: conv4xbar.apply_fused(res.params, a, p)),
+    }
+    rows = {}
+    for name, fn in fns.items():
+        arg = x if name in ("circuit", "analytic") else xn
+        dt, _ = timed(fn, arg, periph, iters=3)
+        rows[name] = dt / batch * 1e6          # us per block
+
+    from repro.kernels.emulator_block import emulator_block
+    dt, _ = timed(jax.jit(lambda a, p: emulator_block(res.params, a, p, geom)),
+                  xn, periph, iters=3)
+    rows["emulator_pallas_interp"] = dt / batch * 1e6
+
+    # system level: one matmul through the executor
+    w = jax.random.normal(key, (512, 32)) * 0.2
+    xin = jax.random.normal(jax.random.fold_in(key, 1), (16, 512)) * 0.5
+    sys_rows = {}
+    for backend in ("circuit", "analytic", "emulator"):
+        ex = AnalogExecutor(
+            acfg=dataclasses.replace(acfg, backend=backend), geom=geom,
+            cp=cp, emulator_params=res.params)
+        fn = jax.jit(lambda a: ex.matmul(a, w, "bench"))
+        dt, _ = timed(fn, xin, iters=3)
+        sys_rows[backend] = dt * 1e6
+    dt, _ = timed(jax.jit(lambda a: a @ w), xin, iters=3)
+    sys_rows["digital"] = dt * 1e6
+    return rows, sys_rows
+
+
+def main(csv=True):
+    rows, sys_rows = run()
+    speedup = rows["circuit"] / rows["emulator_fused"]
+    if csv:
+        for k, v in rows.items():
+            print(f"speed_block_{k},{v:.2f},us_per_block")
+        for k, v in sys_rows.items():
+            print(f"speed_matmul_{k},{v:.1f},us_per_matmul_512x32_b16")
+        print(f"speed_emulator_speedup,{speedup:.1f},circuit/emulator_fused"
+              f" (CPU; paper's claim is orders-of-magnitude vs SPICE)")
+    return rows, sys_rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""System-level benchmark: tiny-LM training throughput, digital vs
+analog-emulated execution (SEMULATOR's target use-case: simulating a full
+analog neural system inside an ML framework)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import QUICK, get_emulator, timed
+from repro.configs import get_config, reduced
+from repro.configs.base import AnalogConfig, ParallelConfig, TrainConfig
+from repro.configs.rram_ps32 import CASE_A
+from repro.core.analog import AnalogExecutor
+from repro.core.circuit import CircuitParams
+from repro.data import SyntheticLMData
+from repro.models.common import use_dense_hook
+from repro.runtime import steps as S
+
+
+def run(arch: str = "gemma3-1b", seq: int = 64, batch: int = 4):
+    cfg = reduced(get_config(arch))
+    pcfg = ParallelConfig(attn_block_kv=seq, xent_chunk=seq, scan_chunk=32)
+    tcfg = TrainConfig(total_steps=50, warmup_steps=1)
+    data = SyntheticLMData(cfg, seq, batch)
+    state = S.init_train_state(jax.random.PRNGKey(0), cfg)
+    batch0 = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    step = S.make_train_step(cfg, pcfg, tcfg)
+
+    out = {}
+    dt, _ = timed(jax.jit(step), state, batch0, warmup=1, iters=3)
+    out["digital_us_per_step"] = dt * 1e6
+
+    res = get_emulator(CASE_A.name, QUICK)
+    ex = AnalogExecutor(
+        acfg=AnalogConfig(enabled=True, backend="emulator", layers=("mlp",)),
+        geom=CASE_A, cp=CircuitParams(), emulator_params=res.params)
+    with use_dense_hook(ex.hook):
+        jstep = jax.jit(step)
+        dt, r = timed(jstep, state, batch0, warmup=1, iters=1)
+    out["analog_emulated_us_per_step"] = dt * 1e6
+    out["tokens_per_s_digital"] = batch * seq / (out["digital_us_per_step"] / 1e6)
+    return out
+
+
+def main(csv=True):
+    out = run()
+    if csv:
+        print(f"system_train_digital,{out['digital_us_per_step']:.0f},"
+              f"us_per_step;tok_s={out['tokens_per_s_digital']:.0f}")
+        print(f"system_train_analog_emulated,"
+              f"{out['analog_emulated_us_per_step']:.0f},us_per_step")
+    return out
+
+
+if __name__ == "__main__":
+    main()

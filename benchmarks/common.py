@@ -1,0 +1,64 @@
+"""Shared benchmark plumbing: trained-emulator cache + timing helper."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import BLOCKS, BlockGeometry, EmulatorTrainConfig
+from repro.core.circuit import CircuitParams
+from repro.core.emulator import EmulatorResult, train_emulator
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                         "emulator_cache")
+
+# "quick" protocol for the CPU-only CI budget; --full uses the paper's
+QUICK = EmulatorTrainConfig(n_train=10_000, n_test=1_000, epochs=200,
+                            lr=2e-3, lr_halve_at=(100, 140, 170),
+                            batch_size=512)
+FULL = EmulatorTrainConfig()          # 50k samples, 2000 epochs (paper)
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 5):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters, out
+
+
+def get_emulator(geom_name: str, tcfg: EmulatorTrainConfig = QUICK,
+                 seed: int = 0, refresh: bool = False) -> EmulatorResult:
+    """Train (or load from cache) one emulator per block geometry."""
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    tag = f"{geom_name}_n{tcfg.n_train}_e{tcfg.epochs}_s{seed}"
+    path = os.path.join(CACHE_DIR, tag + ".npz")
+    geom = BLOCKS[geom_name]
+    acfg = AnalogConfig()
+    cp = CircuitParams()
+    if os.path.exists(path) and not refresh:
+        data = np.load(path, allow_pickle=True)
+        params = {k: jax.numpy.asarray(v) for k, v in data.items()
+                  if not k.startswith("__")}
+        meta = data["__meta"].item() if "__meta" in data else {}
+        return EmulatorResult(params=params, history={},
+                              train_mse=meta.get("train_mse", float("nan")),
+                              test_mse=meta.get("test_mse", float("nan")),
+                              test_mae=meta.get("test_mae", float("nan")),
+                              bound=meta.get("bound", float("nan")),
+                              accepted=bool(meta.get("accepted", False)),
+                              sig_prob=meta.get("sig_prob", float("nan")))
+    res = train_emulator(jax.random.PRNGKey(seed), geom, acfg, cp, tcfg,
+                         log_every=max(1, tcfg.epochs // 8))
+    np.savez(path,
+             __meta=np.array({"train_mse": res.train_mse,
+                              "test_mse": res.test_mse,
+                              "test_mae": res.test_mae, "bound": res.bound,
+                              "accepted": res.accepted,
+                              "sig_prob": res.sig_prob}, dtype=object),
+             **{k: np.asarray(v) for k, v in res.params.items()})
+    return res

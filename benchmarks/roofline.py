@@ -1,0 +1,144 @@
+"""Roofline analysis over the dry-run records (results/dryrun/*.json).
+
+Hardware model (TPU v5e-like, per chip):
+  PEAK_FLOPS = 197e12 bf16 FLOP/s
+  HBM_BW     = 819e9  B/s
+  ICI_BW     = 50e9   B/s effective collective bandwidth per chip (one
+               link-pair busy; a conservative single-link model -- v5e has
+               multiple ICI links but collectives on a 2D mesh typically
+               bottleneck on one axis at a time)
+
+Terms (seconds, per step, per chip -- all inputs are per-device values from
+the SPMD-partitioned program, with while-loop bodies multiplied by trip
+count by benchmarks.hlo_analysis):
+  compute    = flops / PEAK_FLOPS
+  memory     = hbm_bytes / HBM_BW
+  collective = collective_bytes / ICI_BW
+
+MODEL_FLOPS (the useful-work floor): 6*N*tokens for training (2*N forward
++ 4*N backward), 2*N_active*tokens for prefill, 2*N_active*batch per decode
+step. ratio = MODEL_FLOPS / (chips * HLO_flops_per_chip) shows how much of
+compiled compute is useful (catches remat/causal-masking/replication waste).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def model_flops(rec: Dict) -> float:
+    """Global useful FLOPs per step."""
+    n_active = rec["active_params"]
+    B, S = rec["global_batch"], rec["seq_len"]
+    mode = rec["mode"]
+    if mode == "train":
+        return 6.0 * n_active * B * S
+    if mode == "prefill":
+        return 2.0 * n_active * B * S
+    return 2.0 * n_active * B          # decode: one token
+
+
+def analyze_record(rec: Dict) -> Dict:
+    ana = rec["hlo_analysis"]
+    chips = rec["n_chips"]
+    t_comp = ana["flops"] / PEAK_FLOPS
+    t_mem = ana["hbm_bytes"] / HBM_BW
+    t_coll = ana.get("collective_bytes", 0.0) / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    useful_ratio = mf / max(ana["flops"] * chips, 1.0)
+    # roofline fraction: useful work per step / (bound step time * peak)
+    step_time = max(terms.values())
+    frac = (mf / chips / PEAK_FLOPS) / max(step_time, 1e-12)
+    suggestions = {
+        "compute": "reduce non-useful FLOPs (remat policy, causal-block "
+                   "skipping, replicated attention)",
+        "memory": "shrink fp32 temporaries / fuse elementwise chains / "
+                  "quantize the KV cache",
+        "collective": "cheaper weight gathers (bf16 once per step), larger "
+                      "microbatches, int8 gradient compression, resharding",
+    }
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "mode": rec["mode"], "chips": chips,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": useful_ratio,
+        "roofline_fraction": frac,
+        "next_lever": suggestions[dominant],
+        "temp_gb": rec["memory"]["temp_bytes"] / 1e9,
+        "compile_s": rec.get("compile_s", 0.0),
+    }
+
+
+def load_records(results_dir: str = RESULTS_DIR, mesh: Optional[str] = None,
+                 tag: str = "") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") != "ok":
+            recs.append(r)
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        if (r.get("tag") or "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def markdown_table(results_dir: str = RESULTS_DIR, mesh: str = "single",
+                   tag: str = "") -> str:
+    rows = []
+    skips = []
+    for r in load_records(results_dir, tag=tag):
+        if r.get("status") == "skipped":
+            if r["mesh" if "mesh" in r else "shape"]:
+                skips.append(r)
+            continue
+        if r["mesh"] != mesh:
+            continue
+        rows.append(analyze_record(r))
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant "
+           "| useful/HLO | roofline-frac | next lever |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3g} | "
+            f"{r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {r['next_lever']} |")
+    seen = set()
+    for s in skips:
+        key = (s["arch"], s["shape"])
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(f"| {s['arch']} | {s['shape']} | -- | -- | -- | skipped | "
+                   f"-- | -- | {s.get('reason','')[:60]} |")
+    return "\n".join(out)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    print(markdown_table(mesh=args.mesh, tag=args.tag))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,fig4,...]
+
+Each bench maps to one paper artifact (see DESIGN.md §6):
+  table1  -- emulator MAE vs circuit for both RRAM+PS32 geometries
+  fig4    -- train/test loss trajectory (lr-halving schedule)
+  fig5    -- DO(V, G) response heatmap structure + emulator agreement
+  fig6    -- loss vs number of training samples
+  speed   -- circuit vs analytic vs emulator timing (headline claim)
+  system  -- tiny-LM train throughput, digital vs analog-emulated
+Emits name,value,derived CSV lines.
+"""
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale protocols (hours on CPU)")
+    ap.add_argument("--only", default="")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (bench_table1, bench_fig4, bench_fig5, bench_fig6,
+                            bench_speed, bench_system)
+    benches = {
+        "table1": bench_table1.main,
+        "fig4": bench_fig4.main,
+        "fig5": bench_fig5.main,
+        "fig6": bench_fig6.main,
+        "speed": bench_speed.main,
+        "system": bench_system.main,
+    }
+    only = [s for s in args.only.split(",") if s]
+    failures = 0
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED:", flush=True)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Serve a small model with batched requests: prefill + KV-cache decode
+(ring buffers for local/chunked layers, state caches for SSM layers).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py --arch recurrentgemma-2b
+"""
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    if "--arch" not in sys.argv:
+        sys.argv += ["--arch", "recurrentgemma-2b"]
+    if "--reduced" not in sys.argv:
+        sys.argv += ["--reduced"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Mesh-agnostic checkpointing: every leaf is saved as its full logical
+array (npz shards by pytree key), so restore can re-shard onto ANY mesh --
+the basis of elastic re-scaling (lose a pod -> restart on a smaller mesh).
+
+Durability: atomic tmp+rename directories, keep-last-k GC, optional async
+save on a background thread (device->host transfer is the only sync part).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    leaves = jax.tree.flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): leaf for path, leaf in leaves}
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ #
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, d, "MANIFEST.json")):
+                    out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------------ #
+    def save(self, state, step: int, extra: Optional[dict] = None):
+        """Device->host synchronously; serialization possibly async."""
+        host = {k: np.asarray(jax.device_get(v))
+                for k, v in _flatten(state).items()}
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(host, step, extra), daemon=True)
+            self._thread.start()
+        else:
+            self._write(host, step, extra)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, host: Dict[str, np.ndarray], step: int,
+               extra: Optional[dict]):
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "keys": sorted(host.keys()),
+            "shapes": {k: list(v.shape) for k, v in host.items()},
+            "dtypes": {k: str(v.dtype) for k, v in host.items()},
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------ #
+    def restore(self, abstract_state, step: Optional[int] = None):
+        """Restore into the shardings of `abstract_state` (any mesh)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self._step_dir(step)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        flat_abs = _flatten(abstract_state)
+
+        def put(k, ab):
+            arr = data[k]
+            if hasattr(ab, "sharding") and ab.sharding is not None:
+                return jax.device_put(arr.astype(ab.dtype), ab.sharding)
+            return jax.device_put(arr.astype(ab.dtype))
+
+        vals = {k: put(k, ab) for k, ab in flat_abs.items()}
+        leaves, treedef = jax.tree.flatten(abstract_state)
+        paths = [jax.tree_util.keystr(p)
+                 for p, _ in jax.tree.flatten_with_path(abstract_state)[0]]
+        return jax.tree.unflatten(treedef, [vals[p] for p in paths]), step

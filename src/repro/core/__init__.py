@@ -1,0 +1,10 @@
+"""SEMULATOR core: the paper's contribution as a composable JAX module.
+
+  theory     -- Theorem 4.1 acceptance bounds
+  crossbar   -- weight->conductance mapping, tiling, block tensors
+  circuit    -- Newton-Raphson 1T1R + PS32 solver (SPICE stand-in)
+  analytic   -- expert analytical baseline
+  conv4xbar  -- the emulator network (Table 2), conv + fused paths
+  emulator   -- dataset generation + regression training + acceptance
+  analog     -- AnalogMatmul executor wired into repro.models via dense()
+"""

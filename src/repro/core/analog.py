@@ -1,0 +1,170 @@
+"""AnalogMatmul: execute dense projections on emulated crossbar hardware.
+
+Backends (config ``analog.backend``):
+  digital   -- plain matmul (technique off; baseline)
+  analytic  -- expert analytical model (paper's strawman)
+  circuit   -- Newton-Raphson circuit solver (exact, slow; SPICE stand-in)
+  emulator  -- trained Conv4Xbar regression net (the paper's contribution)
+
+Execution model (see core/crossbar.py): weights are tiled onto differential
+1T1R crossbars; activations drive wordlines dual-rail (v+ = relu(x),
+v- = relu(-x)); blocks of D tiles accumulate in analog, block groups sum
+digitally; a per-layer affine calibration maps block output voltages back to
+logical units. The backward pass is the straight-through digital gradient
+(hardware-aware training), via custom_vjp.
+
+Install into a model with ``use_dense_hook(executor.hook)`` -- every
+``dense()`` in repro.models routes through here.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import BlockGeometry, CASE_A
+from repro.core import conv4xbar
+from repro.core.analytic import analytic_block_response
+from repro.core.circuit import CircuitParams, block_response
+from repro.core.crossbar import (build_block_tensor, pad_rows, tile_inputs,
+                                 tile_matrix)
+from repro.core.emulator import normalize_features
+
+
+def _blockify(v01: jax.Array, w: jax.Array, acfg: AnalogConfig,
+              geom: BlockGeometry):
+    """v01: (B, K) wordline drive in [0,1]; w: (K, N).
+    Returns X (B*NB*NO, 2, D, H, W), shapes for reassembly, and w_scale.
+    NB = block groups over K; NO = output groups over N."""
+    B, K = v01.shape
+    N = w.shape[1]
+    gp, gn = tile_matrix(w, acfg)                     # (T, H, N)
+    vt = tile_inputs(v01, acfg)                       # (B, T, H)
+    T = gp.shape[0]
+    D = geom.tiles
+    padT = (-T) % D
+    if padT:
+        gp = jnp.pad(gp, ((0, padT), (0, 0), (0, 0)))
+        gn = jnp.pad(gn, ((0, padT), (0, 0), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, padT), (0, 0)))
+    NB = (T + padT) // D
+    no = geom.outputs
+    padN = (-N) % no
+    if padN:
+        gp = jnp.pad(gp, ((0, 0), (0, 0), (0, padN)))
+        gn = jnp.pad(gn, ((0, 0), (0, 0), (0, padN)))
+    NO = (N + padN) // no
+
+    # (B, NB, D, H) voltages; (NB, D, H, NO, no) conductances
+    vb = vt.reshape(B, NB, D, -1)
+    gpb = gp.reshape(NB, D, gp.shape[1], NO, no)
+    gnb = gn.reshape(NB, D, gn.shape[1], NO, no)
+    # X: (B, NB, NO, 2, D, H, 2*no)
+    g = jnp.stack([gpb, gnb], axis=-1).reshape(NB, D, gp.shape[1], NO, 2 * no)
+    g = jnp.broadcast_to(g[None, :, :, :, :, :].transpose(0, 1, 4, 2, 3, 5),
+                         (B, NB, NO, D, gp.shape[1], 2 * no))
+    v = jnp.broadcast_to(vb[:, :, None, :, :, None],
+                         (B, NB, NO, D, vb.shape[-1], 2 * no))
+    x = jnp.stack([v, g], axis=3)                     # (B, NB, NO, 2, D, H, W)
+    x = x.reshape(B * NB * NO, 2, D, vb.shape[-1], 2 * no)
+    return x, (B, NB, NO, no, N)
+
+
+def _assemble(outs: jax.Array, shapes) -> jax.Array:
+    B, NB, NO, no, N = shapes
+    y = outs.reshape(B, NB, NO * no)[:, :, :N]        # (B, NB, N)
+    return y.sum(axis=1)                              # digital block-group sum
+
+
+@dataclass
+class AnalogExecutor:
+    acfg: AnalogConfig
+    geom: BlockGeometry = CASE_A
+    cp: CircuitParams = field(default_factory=CircuitParams)
+    emulator_params: Optional[dict] = None
+    calibration: Dict[str, tuple] = field(default_factory=dict)
+    fused_emulator: bool = True
+
+    # ------------------------------------------------------------------ #
+    def _backend_fn(self):
+        b = self.acfg.backend
+        if b == "circuit":
+            return lambda x, p: block_response(x, self.cp, p)
+        if b == "analytic":
+            return lambda x, p: analytic_block_response(x, self.cp, p)
+        if b == "emulator":
+            assert self.emulator_params is not None, \
+                "emulator backend needs trained params (core.emulator)"
+            ap = (conv4xbar.apply_fused if self.fused_emulator
+                  else conv4xbar.apply)
+            return lambda x, p: ap(self.emulator_params,
+                                   normalize_features(x, self.acfg), p)
+        raise ValueError(b)
+
+    def block_outputs(self, x: jax.Array) -> jax.Array:
+        """x: (NBLK, 2, D, H, W) raw-feature block tensors -> (NBLK, O)."""
+        periph = jnp.concatenate(
+            [jnp.ones((x.shape[0], 1), x.dtype),
+             jnp.zeros((x.shape[0], 1), x.dtype)], axis=-1)
+        return self._backend_fn()(x, periph)
+
+    def raw_matmul(self, x2d: jax.Array, w: jax.Array) -> jax.Array:
+        """Analog forward for (B,K) @ (K,N): dual-rail inputs, tiled blocks,
+        digital block-group accumulation. Output in volts (uncalibrated)."""
+        xp = jnp.clip(x2d, 0.0, None)
+        xn = jnp.clip(-x2d, 0.0, None)
+        x_scale = jnp.maximum(jnp.max(jnp.abs(x2d)), 1e-9)
+        out = None
+        for rail, sign in ((xp, 1.0), (xn, -1.0)):
+            xb, shapes = _blockify(rail / x_scale, w, self.acfg, self.geom)
+            y = self.block_outputs(xb.astype(jnp.float32))
+            y = _assemble(y, shapes) * sign
+            out = y if out is None else out + y
+        return out, x_scale
+
+    def calibrate(self, key, w: jax.Array, tag: str, n: int = 256):
+        """Fit the per-layer affine volts->logical map against digital."""
+        xc = jax.random.normal(key, (n, w.shape[0])) * 0.5
+        yv, xs = self.raw_matmul(xc, w)
+        yd = (xc @ w) / xs
+        yv_flat = yv.reshape(-1)
+        A = jnp.stack([yv_flat, jnp.ones_like(yv_flat)], axis=1)
+        sol, *_ = jnp.linalg.lstsq(A, yd.reshape(-1))
+        self.calibration[tag] = (float(sol[0]), float(sol[1]))
+        return self.calibration[tag]
+
+    def matmul(self, x: jax.Array, w: jax.Array, tag: str = "") -> jax.Array:
+        """Calibrated analog matmul with straight-through digital gradient."""
+        a, b = self.calibration.get(tag, (1.0, 0.0))
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        w = w.astype(jnp.float32)
+
+        @jax.custom_vjp
+        def f(x2, w):
+            yv, xs = self.raw_matmul(x2, w)
+            return (a * yv + b) * xs
+
+        def fwd(x2, w):
+            return f(x2, w), (x2, w)
+
+        def bwd(res, ct):
+            x2, w = res
+            return ct @ w.T, x2.T @ ct     # straight-through digital grads
+
+        f.defvjp(fwd, bwd)
+        y = f(x2, w)
+        return y.reshape(*lead, w.shape[1]).astype(x.dtype)
+
+    # ------------------------------------------------------------------ #
+    def hook(self, x: jax.Array, w: jax.Array, tag: str):
+        """dense()-hook: route configured projections to the analog path."""
+        if self.acfg.backend == "digital":
+            return None
+        if not any(tag.startswith(l) for l in self.acfg.layers):
+            return None
+        return self.matmul(x, w, tag)

@@ -1,0 +1,32 @@
+"""The 'human-expert analytical model' baseline the paper criticises
+(Section 3.1): crossbar as an ideal linear MAC plus a hand-written clipping
+nonlinearity for the peripheral. Cheap, differentiable, and -- as the paper
+argues -- systematically wrong about the cell's threshold/power-law response
+(it assumes i = g*v with no access-transistor physics, no IR drop).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.circuit import CircuitParams
+
+
+def analytic_block_response(x: jax.Array, cp: CircuitParams,
+                            periph: jax.Array | None = None) -> jax.Array:
+    """x: (B, 2, D, H, W) as in circuit.block_response. Linear model:
+    i = g * v_eff with a fitted effective transconductance, then the same
+    integrator transfer (the expert knows the peripheral's gain but models
+    the cell linearly)."""
+    v = x[:, 0, :, :, 0]                              # (B, D, H)
+    g = x[:, 1]                                       # (B, D, H, W)
+    # linear cell: the expert calibrates a single slope around the bias point
+    v_eff = jnp.maximum(v - cp.v_th, 0.0)             # knows the threshold...
+    i = g * (0.55 * v_eff)[..., None]                 # ...but not the curvature
+    i_cols = i.sum(axis=(1, 2)).reshape(x.shape[0], -1)
+    i_pos = i_cols[..., 0::2]
+    i_neg = i_cols[..., 1::2]
+    q = (i_pos - i_neg) * cp.t_int / cp.c_int
+    gain = 1.0 if periph is None else periph[:, 0:1]
+    offset = 0.0 if periph is None else periph[:, 1:2]
+    return jnp.clip(gain * q, -cp.v_sat, cp.v_sat) + offset

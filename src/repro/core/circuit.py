@@ -1,0 +1,151 @@
+"""SPICE stand-in: a batched Newton-Raphson nonlinear circuit solver for
+1T1R crossbar tiles with a PS32-style saturating integrator peripheral.
+
+This is the *data generator* for the emulator (the paper uses SPYCE/SPICE;
+offline here we solve the same class of nonlinear circuit equations
+numerically -- a non-analytic function obtained by iteration, which is the
+qualitative object the emulator must learn).
+
+Cell model (series 1T1R):
+  access transistor, gate driven by the wordline voltage V (the activation):
+    square-law NMOS with threshold V_th, transconductance k_t, channel-length
+    modulation lambda; cut off for V <= V_th  (=> the Fig.5 threshold)
+  memristor programmed to conductance g with a mild quadratic nonlinearity:
+    i_m = g * v_m * (1 + beta * v_m)
+  solved for the internal node v_x with vectorized NR (all cells at once).
+
+Bitline: integrator virtual ground with finite input resistance r_bl =>
+IR-drop feedback (fixed-point, 3 iterations).
+
+Peripheral (PS32): differential current integrated over t_int onto c_int
+with a tanh() op-amp saturation at v_sat, gain/offset being *peripheral
+features* exposed to the emulator.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AnalogConfig
+
+
+@dataclass(frozen=True)
+class CircuitParams:
+    v_th: float = 0.08            # transistor threshold (V) -- Fig.5 V_const
+    k_t: float = 2.2e-3           # transconductance (A/V^2)
+    lam: float = 0.05             # channel-length modulation (1/V)
+    beta: float = 0.6             # memristor quadratic nonlinearity (1/V)
+    r_bl: float = 400.0           # bitline/integrator input resistance (ohm)
+    t_int: float = 3.2e-6         # integration time (s)  (32 pulses x 100ns)
+    c_int: float = 1.0e-9         # integration cap (F)
+    v_sat: float = 1.0            # op-amp saturation (V)
+    nr_iters: int = 12
+    ir_iters: int = 3
+
+
+def transistor_current(v_gs: jax.Array, v_ds: jax.Array,
+                       cp: CircuitParams) -> jax.Array:
+    """Square-law NMOS, smooth blend triode/saturation, cut off below V_th."""
+    vov = jnp.maximum(v_gs - cp.v_th, 0.0)
+    v_ds = jnp.maximum(v_ds, 0.0)
+    vd_eff = jnp.minimum(v_ds, vov)
+    i = cp.k_t * (vov * vd_eff - 0.5 * vd_eff * vd_eff) * (1.0 + cp.lam * v_ds)
+    return i
+
+
+def _transistor_gds(v_gs, v_ds, cp: CircuitParams):
+    """d i_t / d v_ds (for NR)."""
+    vov = jnp.maximum(v_gs - cp.v_th, 0.0)
+    v_ds = jnp.maximum(v_ds, 0.0)
+    triode = v_ds < vov
+    g_tri = cp.k_t * (vov - v_ds) * (1.0 + cp.lam * v_ds) \
+        + cp.k_t * (vov * v_ds - 0.5 * v_ds ** 2) * cp.lam
+    g_sat = cp.k_t * 0.5 * vov ** 2 * cp.lam
+    return jnp.where(triode, g_tri, g_sat) + 1e-9
+
+
+def memristor_current(g: jax.Array, v_m: jax.Array, cp: CircuitParams):
+    return g * v_m * (1.0 + cp.beta * v_m)
+
+
+def _memristor_gm(g, v_m, cp: CircuitParams):
+    return g * (1.0 + 2.0 * cp.beta * v_m) + 1e-12
+
+
+def cell_current(v_wl: jax.Array, g: jax.Array, v_bl: jax.Array,
+                 cp: CircuitParams) -> jax.Array:
+    """Series 1T1R cell current via NR on the internal node v_x.
+
+    v_wl: gate voltage (= activation-scaled v_read); g: memristor
+    conductance; v_bl: bitline voltage (IR drop). All broadcastable.
+    Cell stack: drain at v_dd_read = v_wl ... we drive the memristor top
+    electrode at a fixed read rail v_r = 0.2 V, transistor source at the
+    bitline. Memristor from rail to v_x; transistor from v_x to bitline.
+    """
+    v_rail = 0.2
+    v_lo = v_bl
+    v_x = jnp.broadcast_to(0.5 * (v_rail + v_lo),
+                           jnp.broadcast_shapes(v_wl.shape, g.shape,
+                                                jnp.shape(v_bl))).astype(jnp.float32)
+
+    def body(i, v_x):
+        i_m = memristor_current(g, v_rail - v_x, cp)
+        i_t = transistor_current(v_wl - v_lo, v_x - v_lo, cp)
+        f = i_m - i_t                                  # KCL at v_x
+        df = -_memristor_gm(g, v_rail - v_x, cp) - _transistor_gds(
+            v_wl - v_lo, v_x - v_lo, cp)
+        step = f / df
+        v_new = v_x - jnp.clip(step, -0.1, 0.1)
+        return jnp.clip(v_new, v_lo, v_rail)
+
+    v_x = jax.lax.fori_loop(0, cp.nr_iters, body, v_x)
+    return transistor_current(v_wl - v_lo, v_x - v_lo, cp)
+
+
+def solve_tile_currents(v: jax.Array, g: jax.Array,
+                        cp: CircuitParams) -> jax.Array:
+    """Column currents with bitline IR-drop fixed point.
+
+    v: (..., H) wordline voltages; g: (..., H, W) conductances.
+    Returns (..., W) column currents."""
+    vv = v[..., :, None]
+
+    def ir_step(_, i_col):
+        v_bl = cp.r_bl * i_col[..., None, :]          # (..., 1, W)
+        i_cell = cell_current(vv, g, v_bl, cp)
+        return i_cell.sum(axis=-2)
+
+    i0 = cell_current(vv, g, jnp.zeros_like(g[..., :1, :]), cp).sum(axis=-2)
+    return jax.lax.fori_loop(0, cp.ir_iters, ir_step, i0)
+
+
+def ps32_output(i_pos: jax.Array, i_neg: jax.Array, cp: CircuitParams,
+                gain: jax.Array = 1.0, offset: jax.Array = 0.0) -> jax.Array:
+    """Differential integrate + saturate: the computing block's output voltage.
+
+    gain/offset are the *peripheral features* (vary per fabricated block)."""
+    q = (i_pos - i_neg) * cp.t_int / cp.c_int
+    return cp.v_sat * jnp.tanh(gain * q / cp.v_sat) + offset
+
+
+def block_response(x: jax.Array, cp: CircuitParams,
+                   periph: jax.Array | None = None) -> jax.Array:
+    """Full computing-block response for emulator input tensors.
+
+    x: (B, 2, D, H, W) with channel 0 = wordline voltage, channel 1 =
+    conductance, W = 2*n_out interleaved (G+, G-).
+    periph: (B, 2) [gain, offset] or None.
+    Returns (B, n_out) output voltages.
+    """
+    v = x[:, 0, :, :, 0]                              # (B, D, H) -- same V per col
+    g = x[:, 1]                                       # (B, D, H, W)
+    i_cols = solve_tile_currents(v, g, cp)            # (B, D, W)
+    i_cols = i_cols.sum(axis=1)                       # analog tile accumulation
+    i_pos = i_cols[..., 0::2]
+    i_neg = i_cols[..., 1::2]
+    if periph is None:
+        return ps32_output(i_pos, i_neg, cp)
+    return ps32_output(i_pos, i_neg, cp, periph[:, 0:1], periph[:, 1:2])

@@ -1,0 +1,163 @@
+"""Conv4Xbar: the paper's emulator architecture (Fig. 3, Table 2).
+
+A 3D-CNN whose kernels have depth 1 (tiles axis) and grow along the row axis
+(H: 1 -> 2 -> 4 -> 8 with matching strides), mirroring column-wise current
+accumulation; then a (1,1,2) conv across the differential column pairs; then
+an FCNN 'circuit equation solver' head (128/256 -> 32 -> 16 -> O), CELU
+everywhere. Peripheral-circuit features are concatenated before the head.
+
+Two apply paths:
+  apply()       -- paper-faithful lax.conv_general_dilated stack
+  apply_fused() -- TPU-native algebraic rewrite: each depth-1 strided conv is
+                   a blocked matmul over reshaped row groups (MXU-friendly;
+                   validated equal to apply() in tests). See DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.rram_ps32 import BlockGeometry
+from repro.models.common import ParamSchema
+
+
+@dataclass(frozen=True)
+class ConvStage:
+    c_in: int
+    c_out: int
+    kernel: Tuple[int, int, int]     # (D, H, W)
+    stride: Tuple[int, int, int]
+
+
+def build_stages(geom: BlockGeometry) -> List[ConvStage]:
+    """Table 2 stack, generalized to any (C, D, H, W) geometry."""
+    stages = [ConvStage(geom.features, 16, (1, 1, 1), (1, 1, 1))]
+    h = geom.rows
+    plan = [(16, 8, 2), (8, 4, 4), (4, 32, 8)]
+    for c_in, c_out, k in plan:
+        k = min(k, h)
+        stages.append(ConvStage(c_in, c_out, (1, k, 1), (1, k, 1)))
+        h = h // k
+    # across differential column pairs; stride 2 when W > 2 (case B: the
+    # paper's Linear(256, 32) implies stride (1,1,2) -- Table 2 typo)
+    w_stride = 1 if geom.cols <= 2 else 2
+    stages.append(ConvStage(32, 32, (1, 1, 2), (1, 1, w_stride)))
+    return stages
+
+
+def _out_size(size, k, s):
+    return (size - k) // s + 1
+
+
+def flat_features(geom: BlockGeometry) -> int:
+    d, h, w = geom.tiles, geom.rows, geom.cols
+    for st in build_stages(geom):
+        d = _out_size(d, st.kernel[0], st.stride[0])
+        h = _out_size(h, st.kernel[1], st.stride[1])
+        w = _out_size(w, st.kernel[2], st.stride[2])
+    return 32 * d * h * w
+
+
+def conv4xbar_schema(geom: BlockGeometry, n_periph: int = 0,
+                     head: Sequence[int] = (32, 16)):
+    """Parameter schema (shapes + shardings + init) for one emulator."""
+    s = {}
+    for i, st in enumerate(build_stages(geom)):
+        fan_in = st.c_in * int(np.prod(st.kernel))
+        s[f"conv{i}_w"] = ParamSchema(
+            (st.c_out, st.c_in) + st.kernel, P(None), "normal",
+            math.sqrt(2.0 / fan_in))
+        s[f"conv{i}_b"] = ParamSchema((st.c_out,), P(None), "zeros")
+    d_in = flat_features(geom) + n_periph
+    dims = [d_in, *head, geom.outputs]
+    for i in range(len(dims) - 1):
+        s[f"fc{i}_w"] = ParamSchema((dims[i], dims[i + 1]), P(None), "normal",
+                                    math.sqrt(2.0 / dims[i]))
+        s[f"fc{i}_b"] = ParamSchema((dims[i + 1],), P(None), "zeros")
+    s["_meta"] = ParamSchema((3,), P(None), "zeros")   # (n_stages, n_fc, n_periph)
+    return s
+
+
+def _head(params, h, n_fc):
+    for i in range(n_fc):
+        h = h @ params[f"fc{i}_w"] + params[f"fc{i}_b"]
+        if i < n_fc - 1:
+            h = jax.nn.celu(h)
+    return h
+
+
+def _n_stages(params):
+    return len([k for k in params if k.startswith("conv") and k.endswith("_w")])
+
+
+def _n_fc(params):
+    return len([k for k in params if k.startswith("fc") and k.endswith("_w")])
+
+
+def apply(params, x: jax.Array, periph: jax.Array | None = None) -> jax.Array:
+    """Paper-faithful path. x: (B, C, D, H, W) -> (B, O)."""
+    h = x
+    for i in range(_n_stages(params)):
+        w = params[f"conv{i}_w"]
+        stride = _stride_of(w, h)
+        h = jax.lax.conv_general_dilated(
+            h, w, window_strides=stride, padding="VALID",
+            dimension_numbers=("NCDHW", "OIDHW", "NCDHW"))
+        h = jax.nn.celu(h + params[f"conv{i}_b"][None, :, None, None, None])
+    h = h.reshape(h.shape[0], -1)
+    if periph is not None:
+        h = jnp.concatenate([h, periph.astype(h.dtype)], axis=-1)
+    return _head(params, h, _n_fc(params))
+
+
+def _stride_of(w, h):
+    """Recover the stage stride from kernel shape (stride == kernel except
+    the final (1,1,2) stage where stride_w is 2 iff W_in > 2)."""
+    kd, kh, kw = w.shape[2], w.shape[3], w.shape[4]
+    if (kd, kh, kw) == (1, 1, 2):
+        return (1, 1, 1 if h.shape[4] <= 2 else 2)
+    return (kd, kh, kw)
+
+
+def apply_fused(params, x: jax.Array, periph: jax.Array | None = None) -> jax.Array:
+    """TPU-native path: every depth-1 conv rewritten as a reshape + matmul.
+
+    Stage with kernel (1,k,1)/stride (1,k,1):  (B,C,D,H,W) -> group H into
+    (H/k, k) and contract (C,k) -> C'.  Final (1,1,2) stage groups W.
+    Bit-exact vs apply() (same weights, same arithmetic order up to matmul
+    association)."""
+    h = x
+    for i in range(_n_stages(params)):
+        w = params[f"conv{i}_w"]                      # (O, I, kd, kh, kw)
+        O, I, kd, kh, kw = w.shape
+        B, C, D, H, W = h.shape
+        if (kh, kw) == (1, 1):
+            # pointwise: (B,C,DHW) x (C,O)
+            hm = h.reshape(B, C, D * H * W)
+            y = jnp.einsum("bcn,co->bon", hm, w[:, :, 0, 0, 0].T)
+            h = y.reshape(B, O, D, H, W)
+        elif kw == 1:
+            hg = h.reshape(B, C, D, H // kh, kh, W)
+            wk = w[:, :, 0, :, 0]                     # (O, I, kh)
+            h = jnp.einsum("bcdgkw,ock->bodgw", hg, wk)
+            h = h.reshape(B, O, D, H // kh, W)
+        else:
+            stride_w = _stride_of(w, h)[2]
+            wk = w[:, :, 0, 0, :]                     # (O, I, kw)
+            if stride_w == kw:
+                hg = h.reshape(B, C, D, H, W // kw, kw)
+                h = jnp.einsum("bcdhgk,ock->bodhg", hg, wk)
+            else:                                      # stride 1, kernel 2
+                h = (jnp.einsum("bcdhw,oc->bodhw", h[..., :-1], wk[:, :, 0])
+                     + jnp.einsum("bcdhw,oc->bodhw", h[..., 1:], wk[:, :, 1]))
+        h = jax.nn.celu(h + params[f"conv{i}_b"][None, :, None, None, None])
+    h = h.reshape(h.shape[0], -1)
+    if periph is not None:
+        h = jnp.concatenate([h, periph.astype(h.dtype)], axis=-1)
+    return _head(params, h, _n_fc(params))

@@ -1,0 +1,110 @@
+"""Crossbar geometry: mapping real-valued weight matrices onto tiled
+differential 1T1R crossbar arrays, and building the (C, D, H, W) cell-feature
+tensors the paper's emulator consumes.
+
+Layout (matching paper Table 1 geometries):
+  * a weight column j (output j) maps to a differential bitline pair
+    (G+ holds w>0, G- holds -w<0), so W = 2 * outs_per_block columns/tile
+  * the K input rows are split into tiles of `rows`; `tiles_per_block` tiles
+    are accumulated *in analog* inside one computing block; remaining tiles
+    go to further blocks summed digitally.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import BlockGeometry
+
+
+def weights_to_conductance(w: jax.Array, acfg: AnalogConfig,
+                           w_scale: jax.Array):
+    """w: (K, N) real -> (g_pos, g_neg): (K, N) conductances in [g_min,g_max].
+
+    w_scale: per-output (N,) or scalar normalization (max |w|)."""
+    span = acfg.g_max - acfg.g_min
+    wn = w / jnp.maximum(w_scale, 1e-12)
+    g_pos = acfg.g_min + span * jnp.clip(wn, 0.0, 1.0)
+    g_neg = acfg.g_min + span * jnp.clip(-wn, 0.0, 1.0)
+    return g_pos, g_neg
+
+
+def conductance_to_weights(g_pos, g_neg, acfg: AnalogConfig, w_scale):
+    """Inverse mapping (exact for |wn| <= 1)."""
+    span = acfg.g_max - acfg.g_min
+    return (g_pos - g_neg) / span * w_scale
+
+
+def pad_rows(x: jax.Array, rows: int, axis: int = 0) -> jax.Array:
+    k = x.shape[axis]
+    pad = (-k) % rows
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def tile_matrix(w: jax.Array, acfg: AnalogConfig) -> Tuple[jax.Array, jax.Array]:
+    """(K, N) -> (T, rows, N) tiles of G+/G- with zero padding.
+
+    Returns (g_pos_tiles, g_neg_tiles), each (T, rows, N)."""
+    K, N = w.shape
+    w_scale = jnp.max(jnp.abs(w))
+    g_pos, g_neg = weights_to_conductance(w, acfg, w_scale)
+    # zero weight -> both rails g_min (cancels differentially)
+    g_pos = pad_rows(g_pos, acfg.rows)
+    g_neg = pad_rows(g_neg, acfg.rows)
+    T = g_pos.shape[0] // acfg.rows
+    return (g_pos.reshape(T, acfg.rows, N), g_neg.reshape(T, acfg.rows, N))
+
+
+def tile_inputs(v: jax.Array, acfg: AnalogConfig) -> jax.Array:
+    """(B, K) in [0,1] -> (B, T, rows) wordline drive voltages."""
+    B, K = v.shape
+    v = pad_rows(v, acfg.rows, axis=1)
+    T = v.shape[1] // acfg.rows
+    return v.reshape(B, T, acfg.rows) * acfg.v_read
+
+
+def build_block_tensor(v_tiles: jax.Array, gp: jax.Array, gn: jax.Array,
+                       geom: BlockGeometry, out_slice) -> jax.Array:
+    """Assemble the emulator input tensor X (B, C=2, D, H, W) for one block.
+
+    v_tiles: (B, D, H) voltages; gp/gn: (D, H, n_out) conductances for the
+    outputs in `out_slice` (n_out = geom.outputs). W interleaves (G+, G-)
+    per output: W = 2 * n_out.
+    """
+    B, D, H = v_tiles.shape
+    n_out = gp.shape[-1]
+    # conductance channel: (D, H, W)
+    g = jnp.stack([gp, gn], axis=-1).reshape(D, H, 2 * n_out)
+    gch = jnp.broadcast_to(g[None], (B, D, H, 2 * n_out))
+    vch = jnp.broadcast_to(v_tiles[..., None], (B, D, H, 2 * n_out))
+    x = jnp.stack([vch, gch], axis=1)                 # (B, 2, D, H, W)
+    return x
+
+
+@dataclass(frozen=True)
+class MatmulPlan:
+    """How a (K, N) matmul maps onto computing blocks."""
+    K: int
+    N: int
+    rows: int
+    tiles_per_block: int          # D: tiles accumulated in analog
+    outs_per_block: int           # outputs sharing a block
+    n_tiles: int                  # total row tiles (ceil(K / rows))
+    n_block_groups: int           # ceil(n_tiles / D): digital partial sums
+
+
+def plan_matmul(K: int, N: int, acfg: AnalogConfig,
+                geom: BlockGeometry) -> MatmulPlan:
+    n_tiles = -(-K // acfg.rows)
+    d = geom.tiles
+    return MatmulPlan(K=K, N=N, rows=acfg.rows, tiles_per_block=d,
+                      outs_per_block=geom.outputs, n_tiles=n_tiles,
+                      n_block_groups=-(-n_tiles // d))

@@ -1,0 +1,200 @@
+"""Emulator lifecycle: generate circuit data -> train Conv4Xbar by MSE
+regression -> accept via Theorem 4.1 -> deploy as an analog-matmul backend.
+
+Reproduces the paper's training protocol: Adam, lr halved at fixed epochs
+(Fig. 4), 50k samples (Table 1), train/test split, MAE reporting.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+def _n_fc_keys(p) -> int:
+    return len([k for k in p if k.startswith("fc") and k.endswith("_w")])
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import BlockGeometry, EmulatorTrainConfig
+from repro.core import conv4xbar, theory
+from repro.core.circuit import CircuitParams, block_response
+from repro.models.common import init_params
+
+
+def sample_block_inputs(key, n: int, geom: BlockGeometry, acfg: AnalogConfig,
+                        with_periph: bool = True):
+    """Random (V, G) cell features + peripheral features, shaped for the
+    emulator: X (n, 2, D, H, W), periph (n, 2)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    v = jax.random.uniform(k1, (n, geom.tiles, geom.rows)) * acfg.v_read
+    g = jax.random.uniform(k2, (n, geom.tiles, geom.rows, geom.cols),
+                           minval=acfg.g_min, maxval=acfg.g_max)
+    vch = jnp.broadcast_to(v[..., None], g.shape)
+    x = jnp.stack([vch, g], axis=1)                   # (n, 2, D, H, W)
+    if with_periph:
+        gain = jax.random.uniform(k3, (n, 1), minval=0.9, maxval=1.1)
+        off = jax.random.uniform(jax.random.fold_in(k3, 1), (n, 1),
+                                 minval=-0.01, maxval=0.01)
+        periph = jnp.concatenate([gain, off], axis=-1)
+    else:
+        periph = None
+    return x, periph
+
+
+def normalize_features(x: jax.Array, acfg: AnalogConfig) -> jax.Array:
+    """Paper normalizes V and G channels to [0, 1]."""
+    v = x[:, 0] / acfg.v_read
+    g = (x[:, 1] - acfg.g_min) / (acfg.g_max - acfg.g_min)
+    return jnp.stack([v, g], axis=1)
+
+
+def generate_dataset(key, n: int, geom: BlockGeometry, acfg: AnalogConfig,
+                     cp: CircuitParams, batch: int = 2048,
+                     with_periph: bool = True):
+    """Run the circuit solver to label n random block inputs."""
+    solve = jax.jit(lambda x, p: block_response(x, cp, p))
+    xs, ps, ys = [], [], []
+    done = 0
+    while done < n:
+        b = min(batch, n - done)
+        key, sub = jax.random.split(key)
+        x, periph = sample_block_inputs(sub, b, geom, acfg, with_periph)
+        y = solve(x, periph)
+        xs.append(normalize_features(x, acfg))
+        ps.append(periph)
+        ys.append(y)
+        done += b
+    X = jnp.concatenate(xs)
+    Pf = jnp.concatenate(ps) if with_periph else None
+    Y = jnp.concatenate(ys)
+    return X, Pf, Y
+
+
+@dataclass
+class EmulatorResult:
+    params: dict
+    history: Dict[str, List[float]]
+    train_mse: float
+    test_mse: float
+    test_mae: float
+    bound: float
+    accepted: bool
+    sig_prob: float
+
+
+def train_emulator(key, geom: BlockGeometry, acfg: AnalogConfig,
+                   cp: CircuitParams, tcfg: EmulatorTrainConfig,
+                   fused: bool = True, log_every: int = 0,
+                   data=None) -> EmulatorResult:
+    """Full paper protocol. `data` lets callers reuse a pregenerated set.
+
+    Targets are standardized during optimization and the affine is folded
+    exactly into the last FC layer afterwards, so the returned params
+    predict raw volts. fused=True uses the MXU-native algebraic rewrite of
+    the conv stack (bit-equal to the paper's conv path; see tests)."""
+    kd, ki, ks = jax.random.split(key, 3)
+    if data is None:
+        X, Pf, Y = generate_dataset(kd, tcfg.n_train + tcfg.n_test, geom, acfg, cp)
+    else:
+        X, Pf, Y = data
+    n_periph = 0 if Pf is None else Pf.shape[-1]
+    Xtr, Xte = X[:tcfg.n_train], X[tcfg.n_train:]
+    Ytr, Yte = Y[:tcfg.n_train], Y[tcfg.n_train:]
+    Ptr = Pf[:tcfg.n_train] if Pf is not None else None
+    Pte = Pf[tcfg.n_train:] if Pf is not None else None
+
+    y_mean = jnp.mean(Ytr, axis=0)
+    y_std = jnp.maximum(jnp.std(Ytr, axis=0), 1e-6)
+    Ytr_n = (Ytr - y_mean) / y_std
+
+    schema = conv4xbar.conv4xbar_schema(geom, n_periph=n_periph)
+    params = init_params(ki, schema)
+    apply_fn = conv4xbar.apply_fused if fused else conv4xbar.apply
+
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    def loss_fn(p, xb, pb, yb):
+        pred = apply_fn(p, xb, pb)
+        return jnp.mean(jnp.square(pred - yb))
+
+    n = Xtr.shape[0]
+    bs = min(tcfg.batch_size, n)
+    steps_per_epoch = max(1, n // bs)
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+    def epoch_fn(p, m, v, t0, lr, perm):
+        xb = Xtr[perm[:steps_per_epoch * bs]].reshape(
+            (steps_per_epoch, bs) + Xtr.shape[1:])
+        yb = Ytr_n[perm[:steps_per_epoch * bs]].reshape(
+            (steps_per_epoch, bs) + Ytr_n.shape[1:])
+        if Ptr is not None:
+            pb = Ptr[perm[:steps_per_epoch * bs]].reshape(
+                (steps_per_epoch, bs) + Ptr.shape[1:])
+        else:
+            pb = jnp.zeros((steps_per_epoch, bs, 0))
+
+        def step(carry, xs):
+            p, m, v, t = carry
+            xi, pi, yi = xs
+            l, g = jax.value_and_grad(loss_fn)(
+                p, xi, pi if Ptr is not None else None, yi)
+            m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+            v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * jnp.square(b), v, g)
+            t = t + 1
+            bc1 = 1 - 0.9 ** t
+            bc2 = 1 - 0.999 ** t
+            p = jax.tree.map(
+                lambda pp, mm, vv: pp - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + 1e-8),
+                p, m, v)
+            return (p, m, v, t), l
+
+        (p, m, v, t), ls = jax.lax.scan(step, (p, m, v, t0), (xb, pb, yb))
+        return p, m, v, t, ls.mean()
+
+    def unfold(p):
+        """Fold target standardization into the last FC layer (exact)."""
+        nf = _n_fc_keys(p)
+        q = dict(p)
+        q[f"fc{nf-1}_w"] = p[f"fc{nf-1}_w"] * y_std[None, :]
+        q[f"fc{nf-1}_b"] = p[f"fc{nf-1}_b"] * y_std + y_mean
+        return q
+
+    eval_mse = jax.jit(
+        lambda p: jnp.mean(jnp.square(apply_fn(p, Xte, Pte) - Yte)))
+    hist = {"epoch": [], "train": [], "test": [], "lr": []}
+    lr = tcfg.lr
+    t = jnp.zeros((), jnp.float32)
+    rng = np.random.default_rng(tcfg.seed)
+    tr_loss = float("nan")
+    for epoch in range(tcfg.epochs):
+        if epoch in tcfg.lr_halve_at:
+            lr *= 0.5
+        perm = jnp.asarray(rng.permutation(n))
+        params, m, v, t, l = epoch_fn(params, m, v, t, lr, perm)
+        tr_loss = float(l) * float(jnp.mean(y_std) ** 2)
+        if log_every and (epoch % log_every == 0 or epoch == tcfg.epochs - 1):
+            te = float(eval_mse(unfold(params)))
+            hist["epoch"].append(epoch)
+            hist["train"].append(tr_loss)
+            hist["test"].append(te)
+            hist["lr"].append(lr)
+            print(f"  epoch {epoch:5d} lr {lr:.2e} train {tr_loss:.3e} test {te:.3e}",
+                  flush=True)
+
+    params = unfold(params)
+    test_pred = apply_fn(params, Xte, Pte)
+    err = test_pred - Yte
+    test_mse = float(jnp.mean(jnp.square(err)))
+    test_mae = float(jnp.mean(jnp.abs(err)))
+    bound = theory.mse_bound(tcfg.sig_bit, tcfg.prob)
+    sig = float(theory.significance_probability(err, tcfg.sig_bit))
+    return EmulatorResult(
+        params=params, history=hist, train_mse=tr_loss, test_mse=test_mse,
+        test_mae=test_mae, bound=bound,
+        accepted=(test_mse < bound) and (sig > tcfg.prob), sig_prob=sig)

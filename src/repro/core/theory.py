@@ -1,0 +1,44 @@
+"""Theorem 4.1 (SEMULATOR): training-acceptance bound for the emulator.
+
+To guarantee  P(|Y - f(X)| < 0.5 * 10^-s) > p  for a regression network whose
+error is ~ N(0, sigma^2) (Lemma 4.2), the MSE must satisfy
+
+    E[|Y - f(X)|^2] = sigma^2  <  0.5 * (10^-s / erfinv(p))^2
+
+Note: the paper's Theorem statement writes the probability condition with
+0.5 * 10^-s but the proof (and the s=3, p=0.3 -> 6.7e-6 numeric example)
+carries 10^-s through erf. We follow the numeric example for ``mse_bound``
+and expose the strict variant separately.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import erfinv
+
+
+def mse_bound(s: int, p: float) -> float:
+    """Upper bound on MSE (paper's numeric convention; s=3, p=0.3 -> 6.73e-6)."""
+    return float(0.5 * (10.0 ** (-s) / erfinv(jnp.asarray(p))) ** 2)
+
+
+def mse_bound_strict(s: int, p: float) -> float:
+    """Same bound with the Theorem statement's 0.5 * 10^-s inside erf."""
+    return float(0.5 * (0.5 * 10.0 ** (-s) / erfinv(jnp.asarray(p))) ** 2)
+
+
+def significance_probability(errors: jax.Array, s: int) -> jax.Array:
+    """Empirical P(|err| < 0.5 * 10^-s)."""
+    return jnp.mean((jnp.abs(errors) < 0.5 * 10.0 ** (-s)).astype(jnp.float32))
+
+
+def check_significance(errors: jax.Array, s: int, p: float) -> bool:
+    """Does the empirical error distribution satisfy the Thm 4.1 condition?"""
+    return bool(significance_probability(errors, s) > p)
+
+
+def predicted_probability(mse: float, s: int) -> float:
+    """Given an achieved MSE (= sigma^2 under Lemma 4.2), the probability
+    P(|err| < 10^-s) predicted by the Gaussian model: erf(10^-s / sqrt(2 mse))."""
+    import math
+    return math.erf(10.0 ** (-s) / math.sqrt(2.0 * max(mse, 1e-30)))

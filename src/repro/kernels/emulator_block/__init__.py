@@ -1,0 +1,1 @@
+from repro.kernels.emulator_block.ops import emulator_block  # noqa: F401

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: the whole Conv4Xbar emulator evaluated per crossbar
+block, fused in VMEM.
+
+At system level the emulator runs over THOUSANDS of blocks per layer
+(every weight tile of every projection); the hot loop is thousands of tiny
+convs + FC stacks. This kernel keeps one batch-tile of blocks resident in
+VMEM and evaluates the full network (conv stages as blocked matmuls over
+row groups, then the FC head) without touching HBM in between -- the
+emulator's weights (a few KB) stay resident across the whole grid.
+
+Tiling: grid (N / bn); every stage is a dot over (C_in x k) contractions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.conv4xbar import ConvStage
+
+
+def _stage_apply(h, w, b, st: ConvStage):
+    """h: (n, C, D, H, W) fp32; w: (O, I, kd, kh, kw); matches apply_fused."""
+    n, C, D, H, W = h.shape
+    O = w.shape[0]
+    kd, kh, kw = st.kernel
+    if (kh, kw) == (1, 1):
+        y = jnp.einsum("ncdhw,oc->nodhw", h, w[:, :, 0, 0, 0])
+    elif kw == 1:
+        hg = h.reshape(n, C, D, H // kh, kh, W)
+        y = jnp.einsum("ncdgkw,ock->nodgw", hg, w[:, :, 0, :, 0])
+    else:
+        wk = w[:, :, 0, 0, :]
+        if st.stride[2] == kw:
+            hg = h.reshape(n, C, D, H, W // kw, kw)
+            y = jnp.einsum("ncdhgk,ock->nodhg", hg, wk)
+        else:
+            y = (jnp.einsum("ncdhw,oc->nodhw", h[..., :-1], wk[:, :, 0])
+                 + jnp.einsum("ncdhw,oc->nodhw", h[..., 1:], wk[:, :, 1]))
+    return jax.nn.celu(y + b[None, :, None, None, None])
+
+
+def _kernel(*refs, stages: List[ConvStage], n_fc: int, out_dtype):
+    # refs: x, periph, conv_w..., conv_b..., fc_w..., fc_b..., out
+    x_ref, periph_ref = refs[0], refs[1]
+    idx = 2
+    conv = []
+    for _ in stages:
+        conv.append((refs[idx], refs[idx + 1]))
+        idx += 2
+    fcs = []
+    for _ in range(n_fc):
+        fcs.append((refs[idx], refs[idx + 1]))
+        idx += 2
+    o_ref = refs[idx]
+
+    h = x_ref[...].astype(jnp.float32)
+    for (w_ref, b_ref), st in zip(conv, stages):
+        h = _stage_apply(h, w_ref[...].astype(jnp.float32),
+                         b_ref[...].astype(jnp.float32), st)
+    h = h.reshape(h.shape[0], -1)
+    p = periph_ref[...].astype(jnp.float32)
+    h = jnp.concatenate([h, p], axis=-1)
+    for i, (w_ref, b_ref) in enumerate(fcs):
+        h = jnp.dot(h, w_ref[...].astype(jnp.float32),
+                    preferred_element_type=jnp.float32) \
+            + b_ref[...].astype(jnp.float32)
+        if i < n_fc - 1:
+            h = jax.nn.celu(h)
+    o_ref[...] = h.astype(out_dtype)
+
+
+def emulator_block_pallas(params: dict, x: jax.Array, periph: jax.Array,
+                          stages: List[ConvStage], *, block_n: int = 256,
+                          interpret: bool = False) -> jax.Array:
+    """x: (N, C, D, H, W) normalized features; periph: (N, P) -> (N, O)."""
+    N = x.shape[0]
+    bn = min(block_n, N)
+    assert N % bn == 0
+    n_fc = len([k for k in params if k.startswith("fc") and k.endswith("_w")])
+    n_out = params[f"fc{n_fc-1}_w"].shape[1]
+
+    operands = [x, periph]
+    in_specs = [
+        pl.BlockSpec((bn,) + x.shape[1:],
+                     lambda i: (i,) + (0,) * (x.ndim - 1)),
+        pl.BlockSpec((bn, periph.shape[1]), lambda i: (i, 0)),
+    ]
+    for j in range(len(stages)):
+        for suf in ("_w", "_b"):
+            wgt = params[f"conv{j}{suf}"]
+            operands.append(wgt)
+            in_specs.append(pl.BlockSpec(wgt.shape,
+                                         lambda i, nd=wgt.ndim: (0,) * nd))
+    for j in range(n_fc):
+        for suf in ("_w", "_b"):
+            wgt = params[f"fc{j}{suf}"]
+            operands.append(wgt)
+            in_specs.append(pl.BlockSpec(wgt.shape,
+                                         lambda i, nd=wgt.ndim: (0,) * nd))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, stages=stages, n_fc=n_fc,
+                          out_dtype=x.dtype),
+        grid=(N // bn,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bn, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, n_out), x.dtype),
+        interpret=interpret,
+    )(*operands)

@@ -1,0 +1,22 @@
+"""Public wrapper: builds the stage plan from the block geometry."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.configs.rram_ps32 import BlockGeometry
+from repro.core.conv4xbar import build_stages
+from repro.kernels.emulator_block.emulator_block import emulator_block_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def emulator_block(params: dict, x: jax.Array, periph: jax.Array,
+                   geom: BlockGeometry, *, block_n: int = 256):
+    """Fused Conv4Xbar forward. x: (N, C, D, H, W) normalized; -> (N, O)."""
+    stages = build_stages(geom)
+    return emulator_block_pallas(params, x, periph, stages,
+                                 block_n=block_n, interpret=not _on_tpu())

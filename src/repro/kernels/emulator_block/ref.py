@@ -1,0 +1,2 @@
+"""Oracle: the paper-faithful Conv4Xbar apply (lax.conv_general_dilated)."""
+from repro.core.conv4xbar import apply as conv4xbar_apply_ref  # noqa: F401

@@ -1,0 +1,34 @@
+"""Public wrapper: accepts (B, H, S, D), pads D to the 128-lane MXU width,
+flattens (B, H) into the grid's batch axis."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "block_q", "block_kv"))
+def flash_attention(q, k, v, *, causal=True, window=0,
+                    block_q=128, block_kv=128):
+    B, H, S, D = q.shape
+    pad = (-D) % 128 if _on_tpu() else 0
+    if pad:
+        zq = jnp.zeros((B, H, S, pad), q.dtype)
+        q = jnp.concatenate([q, zq], -1)
+        k = jnp.concatenate([k, zq.astype(k.dtype)], -1)
+        v = jnp.concatenate([v, zq.astype(v.dtype)], -1)
+    out = flash_attention_pallas(
+        q.reshape(B * H, S, -1), k.reshape(B * H, S, -1),
+        v.reshape(B * H, S, -1), causal=causal, window=window,
+        scale=D ** -0.5,
+        block_q=block_q, block_kv=block_kv, interpret=not _on_tpu())
+    out = out.reshape(B, H, S, -1)
+    return out[..., :D] if pad else out

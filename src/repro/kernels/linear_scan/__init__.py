@@ -1,0 +1,1 @@
+from repro.kernels.linear_scan.ops import linear_scan  # noqa: F401

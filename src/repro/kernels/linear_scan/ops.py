@@ -1,0 +1,23 @@
+"""Public wrapper: handles h0 by exactly folding it into b[:, 0]."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.linear_scan.linear_scan import linear_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_s"))
+def linear_scan(a, b, h0=None, *, block_d=512, block_s=128):
+    """a, b: (B, S, D); h0: (B, D) or None. Returns (h, h_last)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(b.dtype))
+    h = linear_scan_pallas(a, b, block_d=block_d, block_s=block_s,
+                           interpret=not _on_tpu())
+    return h, h[:, -1]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: diagonal gated linear recurrence h_t = a_t*h_{t-1} + b_t
+along axis 1 (the shared primitive behind Mamba-1 and RG-LRU)."""
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(a, b, h0=None):
+    """a, b: (B, S, D); h0: (B, D) or None -> (h (B,S,D), h_last (B,D))."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def comb(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    aa, bb = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return bb, bb[:, -1]

@@ -1,0 +1,1 @@
+from repro.kernels.xbar_mac.ops import xbar_mac  # noqa: F401

@@ -1,0 +1,22 @@
+"""Public wrapper for the crossbar-MAC kernel: jit'd, interpret=True on CPU
+(the TPU path is selected automatically on TPU backends)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.xbar_mac.xbar_mac import xbar_mac_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("v_th", "beta", "gain", "v_sat",
+                                             "block_b", "block_n", "block_k"))
+def xbar_mac(v, g, *, v_th=0.08, beta=0.6, gain=3200.0, v_sat=1.0,
+             block_b=128, block_n=128, block_k=128):
+    return xbar_mac_pallas(v, g, v_th=v_th, beta=beta, gain=gain, v_sat=v_sat,
+                           block_b=block_b, block_n=block_n, block_k=block_k,
+                           interpret=not _on_tpu())

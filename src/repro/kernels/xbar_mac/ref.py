@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the nonlinear crossbar MAC.
+
+Analog MAC with the analytic 1T1R cell model (threshold + curvature) and a
+saturating integrator -- the per-tile compute the SEMULATOR framework's
+`analytic` backend evaluates for every crossbar tile:
+
+    i_cell = g * max(v - v_th, 0) * (1 + beta * v)
+    out    = v_sat * tanh(gain * sum_k i_cell / v_sat)
+"""
+import jax.numpy as jnp
+
+
+def xbar_mac_ref(v, g, *, v_th=0.08, beta=0.6, gain=3200.0, v_sat=1.0):
+    """v: (B, K) wordline voltages; g: (K, N) conductances -> (B, N)."""
+    drive = jnp.maximum(v - v_th, 0.0) * (1.0 + beta * v)      # (B, K)
+    i = drive.astype(jnp.float32) @ g.astype(jnp.float32)      # (B, N)
+    return v_sat * jnp.tanh(gain * i / v_sat)

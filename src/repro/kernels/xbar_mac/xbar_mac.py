@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: nonlinear crossbar MAC.
+
+Tiling: grid (B/bb, N/bn, K/bk); K is the innermost (sequential) axis so the
+fp32 accumulator scratch lives in VMEM across K steps; the cell nonlinearity
+is fused into the MXU feed and the integrator tanh is applied on the last K
+step. Block shapes default to MXU-aligned (128, 128) tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(v_ref, g_ref, o_ref, acc_ref, *, v_th, beta, gain, v_sat, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    v = v_ref[...].astype(jnp.float32)                 # (bb, bk)
+    g = g_ref[...].astype(jnp.float32)                 # (bk, bn)
+    drive = jnp.maximum(v - v_th, 0.0) * (1.0 + beta * v)
+    acc_ref[...] += jnp.dot(drive, g, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        o_ref[...] = (v_sat * jnp.tanh(gain * acc_ref[...] / v_sat)
+                      ).astype(o_ref.dtype)
+
+
+def xbar_mac_pallas(v, g, *, v_th=0.08, beta=0.6, gain=3200.0, v_sat=1.0,
+                    block_b=128, block_n=128, block_k=128, interpret=False):
+    B, K = v.shape
+    K2, N = g.shape
+    assert K == K2
+    bb, bn, bk = min(block_b, B), min(block_n, N), min(block_k, K)
+    assert B % bb == 0 and N % bn == 0 and K % bk == 0, (B, N, K, bb, bn, bk)
+    nk = K // bk
+    grid = (B // bb, N // bn, nk)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, v_th=v_th, beta=beta, gain=gain,
+                          v_sat=v_sat, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, N), v.dtype),
+        scratch_shapes=[pltpu.VMEM((bb, bn), jnp.float32)],
+        interpret=interpret,
+    )(v, g)

@@ -1,0 +1,203 @@
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell
+with ShapeDtypeStruct stand-ins (nothing is ever allocated), then record
+memory_analysis / cost_analysis / collective traffic for the roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+"""
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices so
+# jax.make_mesh can build the production mesh. Must precede ANY jax import.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from dataclasses import replace
+
+import jax
+
+from repro.configs import ARCH_NAMES, SHAPES_BY_NAME, get_config
+from repro.configs.base import ParallelConfig, TrainConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import use_mesh
+from repro.runtime import steps as S
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def default_pcfg(cfg, shape, mesh_name, overrides=None):
+    kw = dict(overrides or {})
+    dp = 32 if mesh_name == "multi" else 16
+    # Big global-attention KV caches don't fit per-device batch shards:
+    # shard the cache sequence dim over the model axis (flash-decode).
+    if shape.mode == "decode" and any(k == "G" for k in cfg.pattern):
+        kv_bytes = (cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim
+                    * shape.seq_len * 2 * shape.global_batch)
+        if kv_bytes > 64e9:
+            kw.setdefault("decode_seq_shard", True)
+    # Sequence-parallel residual stream (Megatron-SP): the scan-remat stash
+    # shrinks to num_periods x (B_loc, S/tp, D) -> usually no microbatching.
+    if shape.mode in ("train", "prefill"):
+        kw.setdefault("residual_seq_shard", True)
+    # Auto grad-accum: microbatch until one microbatch's stash fits ~5 GB.
+    if shape.mode == "train":
+        b_loc = shape.global_batch // dp
+        tp = 16 if kw.get("residual_seq_shard") else 1
+        stash = cfg.num_periods * b_loc * shape.seq_len * cfg.d_model * 2 / tp
+        m = 1
+        while stash / m > 5e9 and m < b_loc:
+            m *= 2
+        if cfg.moe is not None:
+            m = max(m, 4)       # MoE dispatch buffers scale with microbatch
+        if m > 1:
+            kw.setdefault("grad_accum", m)
+    return ParallelConfig(**kw)
+
+
+def build_lowerable(cfg, shape, mesh, pcfg):
+    """Returns (jitted_fn, example_args) for the cell."""
+    with use_mesh(mesh):
+        if shape.mode == "train":
+            fn = S.make_train_step(cfg, pcfg, TrainConfig())
+            state = S.abstract_train_state(cfg, mesh)
+            batch = S.train_batch_abstract(cfg, shape, mesh)
+            jf = jax.jit(fn, donate_argnums=(0,))
+            return jf, (state, batch)
+        if shape.mode == "prefill":
+            fn = S.make_prefill_step(cfg, pcfg)
+            params = S.abstract_params_bf16(cfg, mesh)
+            batch = S.prefill_batch_abstract(cfg, shape, mesh)
+            jf = jax.jit(fn)
+            return jf, (params, batch)
+        fn = S.make_decode_step(cfg, pcfg)
+        params, token, cache, pos = S.decode_inputs_abstract(
+            cfg, shape, mesh, pcfg)
+        jf = jax.jit(fn, donate_argnums=(2,))
+        return jf, (params, token, cache, pos)
+
+
+def run_cell(arch, shape_name, multi_pod, pcfg_overrides=None,
+             save=True, tag=""):
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    if not cfg.supports_shape(shape):
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "tag": tag,
+               "reason": "full-attention arch: long-context decode has no "
+                         "sub-quadratic structure (see DESIGN.md)"}
+        if save:
+            os.makedirs(RESULTS_DIR, exist_ok=True)
+            suffix = f"_{tag}" if tag else ""
+            with open(os.path.join(
+                    RESULTS_DIR,
+                    f"{arch}_{shape_name}_{mesh_name}{suffix}.json"), "w") as f:
+                json.dump(rec, f, indent=1)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pcfg = default_pcfg(cfg, shape, mesh_name, pcfg_overrides)
+    t0 = time.time()
+    with use_mesh(mesh):
+        jf, args = build_lowerable(cfg, shape, mesh, pcfg)
+        lowered = jf.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+
+    from benchmarks.hlo_analysis import analyze_hlo
+    ana = analyze_hlo(hlo)
+
+    n_chips = mesh.devices.size
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+        "status": "ok",
+        "n_chips": int(n_chips),
+        "pcfg": {k: getattr(pcfg, k) for k in
+                 ("remat", "decode_seq_shard", "attn_block_kv", "xent_chunk",
+                  "scan_chunk", "grad_compression")},
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+        },
+        "xla_cost": {"flops": float(cost.get("flops", -1)),
+                     "bytes": float(cost.get("bytes accessed", -1))},
+        "hlo_analysis": ana,
+        "params": int(cfg.param_count()),
+        "active_params": int(cfg.active_param_count()),
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "mode": shape.mode,
+    }
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        path = os.path.join(RESULTS_DIR,
+                            f"{arch}_{shape_name}_{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCH_NAMES:
+            for s in SHAPES_BY_NAME:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            label = f"{arch} x {shape} x {'multi' if mp else 'single'}"
+            try:
+                rec = run_cell(arch, shape, mp, tag=args.tag)
+                if rec["status"] == "skipped":
+                    print(f"[SKIP] {label}: {rec['reason']}", flush=True)
+                else:
+                    ana = rec["hlo_analysis"]
+                    print(f"[OK]   {label}: compile={rec['compile_s']}s "
+                          f"flops/dev={ana['flops']:.3e} "
+                          f"hbm/dev={ana['hbm_bytes']:.3e} "
+                          f"coll/dev={ana['collective_bytes']:.3e} "
+                          f"temp={rec['memory']['temp_bytes']/1e9:.2f}GB",
+                          flush=True)
+            except Exception as e:
+                failures += 1
+                print(f"[FAIL] {label}: {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --steps 200 \
+      --reduced --backend digital [--analog-layers mlp]
+
+Real configs need a real fleet; on this CPU host use --reduced (same code
+path, small model). --devices N simulates an N-device pod via host devices
+(set before jax initializes).
+"""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="simulate N host devices (0 = real devices)")
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--backend", default="digital",
+                    choices=["digital", "analytic", "circuit", "emulator"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--log", default="")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    import dataclasses
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.configs.base import ParallelConfig, TrainConfig
+    from repro.data import SyntheticLMData
+    from repro.launch.mesh import make_mesh_for
+    from repro.runtime.trainer import Trainer
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    cfg = dataclasses.replace(
+        cfg, analog=dataclasses.replace(cfg.analog,
+                                        enabled=args.backend != "digital",
+                                        backend=args.backend))
+    pcfg = ParallelConfig(attn_block_kv=min(1024, args.seq_len),
+                          xent_chunk=min(2048, args.seq_len),
+                          scan_chunk=min(256, args.seq_len))
+    tcfg = TrainConfig(lr=args.lr, total_steps=args.steps,
+                       warmup_steps=max(1, args.steps // 20),
+                       checkpoint_every=max(10, args.steps // 5))
+    mesh = make_mesh_for(model_axis=args.model_axis) \
+        if len(jax.devices()) > 1 else None
+    data = SyntheticLMData(cfg, args.seq_len, args.global_batch)
+
+    hook = None
+    if cfg.analog.enabled:
+        from repro.core.analog import AnalogExecutor
+        from repro.core.emulator import train_emulator
+        from repro.configs.rram_ps32 import CASE_A, EmulatorTrainConfig
+        from repro.core.circuit import CircuitParams
+        ex = AnalogExecutor(acfg=cfg.analog, geom=CASE_A)
+        if args.backend == "emulator":
+            print("training emulator for the analog backend ...", flush=True)
+            res = train_emulator(jax.random.PRNGKey(0), CASE_A, cfg.analog,
+                                 CircuitParams(),
+                                 EmulatorTrainConfig(n_train=4000, n_test=500,
+                                                     epochs=40,
+                                                     lr_halve_at=(20, 30)))
+            ex.emulator_params = res.params
+        hook = ex.hook
+
+    trainer = Trainer(cfg=cfg, pcfg=pcfg, tcfg=tcfg, mesh=mesh, data=data,
+                      ckpt_dir=args.ckpt_dir, log_path=args.log or None)
+    from repro.models.common import use_dense_hook
+    import contextlib
+    ctx = use_dense_hook(hook) if hook else contextlib.nullcontext()
+    with ctx:
+        summary = trainer.run(args.steps)
+    print("SUMMARY:", summary)
+    losses = [m["loss"] for m in trainer.metrics_log]
+    if len(losses) >= 10:
+        print(f"loss first10 {sum(losses[:10])/10:.4f} "
+              f"last10 {sum(losses[-10:])/10:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,180 @@
+"""Per-layer wiring: norms + residuals + mixer + FFN, for every layer kind.
+
+A layer = (norm -> mixer -> residual) [+ (norm -> FFN/MoE -> residual)].
+Mamba layers are mixer-only (the mixer subsumes the FFN); cohere-style
+``parallel_block`` computes attention and FFN from the same normed input.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (ArchConfig, ParallelConfig, ATTN_KINDS,
+                                GLOBAL_ATTN, LOCAL_ATTN, CHUNKED_ATTN,
+                                BIDIR_ATTN, RECURRENT, MAMBA)
+from repro.models.attention import (attention_schema, attn_mixer,
+                                    attn_cache_schema, _project_kv)
+from repro.models.common import (activation, apply_norm, dense, dense_schema,
+                                 norm_schema, shard)
+from repro.models.moe import moe_schema, moe_mixer
+from repro.models.ssm import (mamba_schema, mamba_mixer, mamba_cache_schema,
+                              rglru_schema, rglru_mixer, rglru_cache_schema)
+
+
+# --------------------------------------------------------------------------- #
+# FFN
+# --------------------------------------------------------------------------- #
+def mlp_schema(cfg: ArchConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    s = {"w_up": dense_schema(d, f),
+         "w_down": dense_schema(f, d, fsdp="model", tp="data")}
+    if cfg.mlp_gated:
+        s["w_gate"] = dense_schema(d, f)
+    return s
+
+
+def mlp_apply(params, x, cfg: ArchConfig, pcfg: ParallelConfig = None):
+    if pcfg is not None and pcfg.residual_seq_shard:
+        x = shard(x, "dp", None, None)        # gather seq -> TP inside
+    act = activation(cfg.mlp_act)
+    up = dense(x, params["w_up"], "mlp.up")
+    if cfg.mlp_gated:
+        g = dense(x, params["w_gate"], "mlp.gate")
+        h = act(g) * up
+    else:
+        h = act(up)
+    h = shard(h, "dp", None, "model")
+    out = dense(h, params["w_down"], "mlp.down")
+    if pcfg is not None and pcfg.residual_seq_shard:
+        out = shard(out, "dp", "model", None)  # reduce-scatter back to SP
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Layer schema / cache schema
+# --------------------------------------------------------------------------- #
+def layer_schema(cfg: ArchConfig, kind: str, *, cross: bool = False):
+    d = cfg.d_model
+    s: Dict[str, Any] = {"norm1": norm_schema(d, cfg.norm)}
+    if kind in ATTN_KINDS:
+        s["attn"] = attention_schema(cfg)
+    elif kind == RECURRENT:
+        s["mixer"] = rglru_schema(cfg)
+    elif kind == MAMBA:
+        s["mixer"] = mamba_schema(cfg)
+    else:
+        raise ValueError(kind)
+
+    if cross:
+        s["norm_cross"] = norm_schema(d, cfg.norm)
+        s["cross"] = attention_schema(cfg, cross=True)
+
+    if kind != MAMBA and not cfg.parallel_block:
+        s["norm2"] = norm_schema(d, cfg.norm)
+    if kind != MAMBA:
+        s["ff"] = moe_schema(cfg) if cfg.moe is not None else mlp_schema(cfg)
+    if cfg.post_norms:
+        s["post_norm1"] = norm_schema(d, cfg.norm)
+        if kind != MAMBA:
+            s["post_norm2"] = norm_schema(d, cfg.norm)
+    return s
+
+
+def layer_cache_schema(cfg: ArchConfig, kind: str, batch: int, s_max: int,
+                       *, cross_len: int = 0, seq_shard: bool = False,
+                       dtype=None):
+    """Returns {name: (shape, dtype, PartitionSpec)} for one layer's cache."""
+    dt = dtype or jnp.bfloat16
+    out: Dict[str, Any] = {}
+    if kind in ATTN_KINDS:
+        out["attn"] = attn_cache_schema(cfg, kind, batch, s_max, dtype=dt,
+                                        seq_shard=seq_shard)
+    elif kind == RECURRENT:
+        out["mixer"] = rglru_cache_schema(cfg, batch, dtype=dt)
+    elif kind == MAMBA:
+        out["mixer"] = mamba_cache_schema(cfg, batch, dtype=dt)
+    if cross_len:
+        shape = (batch, cross_len, cfg.num_kv_heads, cfg.head_dim)
+        spec = P(("pod", "data"), None, None, None)
+        out["cross"] = {"k": (shape, dt, spec),
+                        "v": (shape, dt, spec)}
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Layer application
+# --------------------------------------------------------------------------- #
+def apply_layer(params, x, *, cfg: ArchConfig, pcfg: ParallelConfig, kind: str,
+                mode: str = "train", cache=None, pos=None, positions=None,
+                enc_out=None) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Returns (x, new_cache_or_None, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+    c = cache or {}
+    rs = "model" if (pcfg.residual_seq_shard and mode != "decode") else None
+
+    h = apply_norm(params["norm1"], x, cfg.norm)
+
+    if kind in ATTN_KINDS:
+        mix, mc = attn_mixer(params["attn"], h, cfg=cfg, pcfg=pcfg, kind=kind,
+                             positions=positions, cache=c.get("attn"),
+                             pos=pos, mode=mode)
+    elif kind == RECURRENT:
+        mix, mc = rglru_mixer(params["mixer"], h, cfg=cfg, pcfg=pcfg,
+                              cache=c.get("mixer"), mode=mode)
+    else:  # MAMBA
+        mix, mc = mamba_mixer(params["mixer"], h, cfg=cfg, pcfg=pcfg,
+                              cache=c.get("mixer"), mode=mode)
+    if mc is not None:
+        key = "attn" if kind in ATTN_KINDS else "mixer"
+        new_cache[key] = mc
+
+    if cfg.post_norms:
+        mix = apply_norm(params["post_norm1"], mix, cfg.norm)
+
+    if cfg.parallel_block and kind in ATTN_KINDS:
+        # x + attn(n(x)) + ff(n(x))  (cohere)
+        if cfg.moe is not None:
+            ff, aux_ff = moe_mixer(params["ff"], h, cfg=cfg, pcfg=pcfg,
+                                   train=(mode == "train"))
+            aux = aux + aux_ff
+        else:
+            ff = mlp_apply(params["ff"], h, cfg, pcfg)
+        x = x + mix + ff
+        x = shard(x, "dp", rs, None)
+        return x, (new_cache or None), aux
+
+    x = x + mix
+    x = shard(x, "dp", rs, None)
+
+    if "cross" in params:
+        hc = apply_norm(params["norm_cross"], x, cfg.norm)
+        if mode == "decode":
+            enc_kv = (c["cross"]["k"], c["cross"]["v"])
+        else:
+            enc_kv = _project_kv(params["cross"], enc_out, cfg)
+            if mode == "prefill":
+                new_cache["cross"] = {"k": enc_kv[0], "v": enc_kv[1]}
+        mix_c, _ = attn_mixer(params["cross"], hc, cfg=cfg, pcfg=pcfg,
+                              kind="cross", enc_kv=enc_kv, mode=mode)
+        x = x + mix_c
+        if mode == "decode":
+            new_cache["cross"] = c["cross"]     # pass through unchanged
+
+    if kind != MAMBA:
+        h2 = apply_norm(params["norm2"], x, cfg.norm)
+        if cfg.moe is not None:
+            ff, aux_ff = moe_mixer(params["ff"], h2, cfg=cfg, pcfg=pcfg,
+                                   train=(mode == "train"))
+            aux = aux + aux_ff
+        else:
+            ff = mlp_apply(params["ff"], h2, cfg, pcfg)
+        if cfg.post_norms:
+            ff = apply_norm(params["post_norm2"], ff, cfg.norm)
+        x = x + ff
+        x = shard(x, "dp", rs, None)
+
+    return x, (new_cache or None), aux

@@ -1,0 +1,324 @@
+"""Full model: embeddings -> (encoder) -> period-scanned decoder stack ->
+final norm -> LM head, with train / prefill / decode entry points and a
+chunked cross-entropy loss (no B x S x V materialization).
+
+Layers are grouped into the arch's repeating ``pattern`` period; the period
+body is Python-unrolled (heterogeneous sub-layers), ``lax.scan`` runs over
+periods with stacked params, remainder layers are unrolled at the tail.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ArchConfig, ParallelConfig, BIDIR_ATTN)
+from repro.models.blocks import (apply_layer, layer_schema, layer_cache_schema)
+from repro.models.common import (ParamSchema, abstract_array, apply_norm,
+                                 current_mesh, dense, norm_schema, shard,
+                                 stack_schema, _sanitize_spec)
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# Schema
+# --------------------------------------------------------------------------- #
+def model_schema(cfg: ArchConfig) -> Dict[str, Any]:
+    d, vp = cfg.d_model, cfg.padded_vocab
+    cross = cfg.encoder_layers > 0
+    s: Dict[str, Any] = {
+        "embed": ParamSchema((vp, d), P("model", "data"), "embed", d ** -0.5),
+        "final_norm": norm_schema(d, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        s["head"] = ParamSchema((d, vp), P("data", "model"), "normal", d ** -0.5)
+    if cfg.frontend == "vision":
+        s["proj"] = ParamSchema((d, d), P("data", "model"), "normal", d ** -0.5)
+
+    scan: Dict[str, Any] = {}
+    if cfg.num_periods > 0:
+        for i, kind in enumerate(cfg.pattern):
+            scan[f"p{i}"] = stack_schema(layer_schema(cfg, kind, cross=cross),
+                                         cfg.num_periods)
+    tail = {f"t{i}": layer_schema(cfg, kind, cross=cross)
+            for i, kind in enumerate(cfg.tail_kinds)}
+    s["decoder"] = {"scan": scan, "tail": tail}
+
+    if cross:
+        enc_scan = {"p0": stack_schema(layer_schema(cfg, BIDIR_ATTN),
+                                       cfg.encoder_layers)}
+        s["encoder"] = {"scan": enc_scan, "tail": {},
+                        "final_norm": norm_schema(d, cfg.norm)}
+    return s
+
+
+def model_cache_schema(cfg: ArchConfig, batch: int, s_max: int, *,
+                       seq_shard: bool = False, cross_len: int = 0,
+                       dtype=None):
+    """{scan: {p_i: stacked-layer cache schema}, tail: {...}} of
+    (shape, dtype, PartitionSpec) leaves."""
+    def stack_leaf(leaf, n):
+        shape, dtype, spec = leaf
+        return ((n,) + tuple(shape), dtype, P(None, *spec))
+
+    def is_leaf(x):
+        return isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple)
+
+    scan = {}
+    if cfg.num_periods > 0:
+        for i, kind in enumerate(cfg.pattern):
+            ls = layer_cache_schema(cfg, kind, batch, s_max,
+                                    cross_len=cross_len, seq_shard=seq_shard,
+                                    dtype=dtype)
+            scan[f"p{i}"] = jax.tree.map(
+                lambda l: stack_leaf(l, cfg.num_periods), ls, is_leaf=is_leaf)
+    tail = {f"t{i}": layer_cache_schema(cfg, kind, batch, s_max,
+                                        cross_len=cross_len,
+                                        seq_shard=seq_shard, dtype=dtype)
+            for i, kind in enumerate(cfg.tail_kinds)}
+    return {"scan": scan, "tail": tail}
+
+
+def _cache_is_leaf(x):
+    return isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple)
+
+
+def abstract_cache(cache_schema, mesh=None):
+    return jax.tree.map(
+        lambda l: abstract_array(l[0], l[1], l[2], mesh),
+        cache_schema, is_leaf=_cache_is_leaf)
+
+
+def zeros_cache(cache_schema):
+    return jax.tree.map(lambda l: jnp.zeros(l[0], l[1]),
+                        cache_schema, is_leaf=_cache_is_leaf)
+
+
+# --------------------------------------------------------------------------- #
+# Stack runner
+# --------------------------------------------------------------------------- #
+def _remat_wrap(fn, pcfg: ParallelConfig):
+    if pcfg.remat == "none":
+        return fn
+    if pcfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def _run_stack(stack_params, x, *, cfg: ArchConfig, pcfg: ParallelConfig,
+               pattern, tail_kinds, mode, caches, pos, positions, enc_out):
+    """Runs scan-over-periods + unrolled tail. Returns (x, aux, new_caches)."""
+
+    def period_fn(x, aux, lp, lc):
+        # The scan carry is saved per period by remat: keep it SEQ-SHARDED
+        # over the model axis so the stash is L/period x (B,S/tp,D) per
+        # device (Megatron-SP-style); gather once per period for compute.
+        if not pcfg.residual_seq_shard:
+            x = shard(x, "dp", None, None)
+        ncs = {}
+        for i, kind in enumerate(pattern):
+            x, nc, a = apply_layer(
+                lp[f"p{i}"], x, cfg=cfg, pcfg=pcfg, kind=kind, mode=mode,
+                cache=None if lc is None else lc.get(f"p{i}"),
+                pos=pos, positions=positions, enc_out=enc_out)
+            if nc is not None:
+                ncs[f"p{i}"] = nc
+            aux = aux + a
+        x = shard(x, "dp", "model", None)
+        return x, aux, (ncs if ncs else None)
+
+    period = _remat_wrap(period_fn, pcfg)
+    aux = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {"scan": {}, "tail": {}}
+
+    scan_params = stack_params["scan"]
+    if scan_params:
+        if mode == "decode":
+            def body(carry, xs):
+                lp, lc = xs
+                x, aux = carry
+                x, aux, nc = period(x, aux, lp, lc)
+                return (x, aux), nc
+            (x, aux), ys = jax.lax.scan(body, (x, aux),
+                                        (scan_params, caches["scan"]))
+            new_caches["scan"] = ys
+        elif mode == "prefill":
+            def body(carry, lp):
+                x, aux = carry
+                x, aux, nc = period(x, aux, lp, None)
+                return (x, aux), nc
+            (x, aux), ys = jax.lax.scan(body, (x, aux), scan_params)
+            new_caches["scan"] = ys
+        else:
+            def body(carry, lp):
+                x, aux = carry
+                x, aux, _ = period(x, aux, lp, None)
+                return (x, aux), None
+            (x, aux), _ = jax.lax.scan(body, (x, aux), scan_params)
+
+    for i, kind in enumerate(tail_kinds):
+        lc = None
+        if mode == "decode":
+            lc = caches["tail"].get(f"t{i}")
+        x, nc, a = apply_layer(
+            stack_params["tail"][f"t{i}"], x, cfg=cfg, pcfg=pcfg, kind=kind,
+            mode=mode, cache=lc, pos=pos, positions=positions, enc_out=enc_out)
+        aux = aux + a
+        if nc is not None:
+            new_caches["tail"][f"t{i}"] = nc
+
+    return x, aux, new_caches
+
+
+# --------------------------------------------------------------------------- #
+# Forward passes
+# --------------------------------------------------------------------------- #
+def embed_tokens(params, tokens, cfg: ArchConfig, compute_dtype):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
+    return x
+
+
+def encode(params, enc_frames, *, cfg: ArchConfig, pcfg: ParallelConfig):
+    """Encoder over precomputed frontend frames (B, S_enc, D)."""
+    x = shard(enc_frames, "dp", None, None)
+    x, aux, _ = _run_stack(
+        {"scan": params["encoder"]["scan"], "tail": {}}, x, cfg=cfg, pcfg=pcfg,
+        pattern=(BIDIR_ATTN,), tail_kinds=(), mode="train", caches=None,
+        pos=None, positions=None, enc_out=None)
+    return apply_norm(params["encoder"]["final_norm"], x, cfg.norm), aux
+
+
+def forward(params, tokens, *, cfg: ArchConfig, pcfg: ParallelConfig,
+            mode: str = "train", cache=None, pos=None, image_embeds=None,
+            enc_frames=None, compute_dtype=jnp.bfloat16):
+    """Returns (hidden (B,S,D), new_cache_or_None, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    enc_out = None
+    if cfg.encoder_layers:
+        if mode == "decode":
+            enc_out = None                      # decoder reads cross cache
+        else:
+            assert enc_frames is not None
+            enc_out, aux_e = encode(params, enc_frames.astype(compute_dtype),
+                                    cfg=cfg, pcfg=pcfg)
+            aux = aux + aux_e
+
+    x = embed_tokens(params, tokens, cfg, compute_dtype)
+    if cfg.frontend == "vision" and image_embeds is not None:
+        img = dense(image_embeds.astype(compute_dtype), params["proj"], "frontend.proj")
+        n = img.shape[1]
+        x = jnp.concatenate([img, x[:, n:]], axis=1)
+    rs = "model" if (pcfg.residual_seq_shard and mode != "decode") else None
+    x = shard(x, "dp", rs, None)
+
+    if mode == "decode":
+        positions = None
+    else:
+        positions = jnp.arange(tokens.shape[1])[None, :]
+
+    x, aux_d, new_caches = _run_stack(
+        params["decoder"], x, cfg=cfg, pcfg=pcfg, pattern=cfg.pattern,
+        tail_kinds=cfg.tail_kinds, mode=mode, caches=cache, pos=pos,
+        positions=positions, enc_out=enc_out)
+    aux = aux + aux_d
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, (new_caches if mode in ("prefill", "decode") else None), aux
+
+
+# --------------------------------------------------------------------------- #
+# Logits & loss
+# --------------------------------------------------------------------------- #
+def compute_logits(params, h, cfg: ArchConfig):
+    """h: (B,S,D) -> logits (B,S,Vp) fp32, padded vocab masked."""
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h,
+                            params["embed"].astype(h.dtype))
+    else:
+        logits = dense(h, params["head"], "lm_head")
+    logits = logits.astype(jnp.float32)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    if cfg.padded_vocab != cfg.vocab_size:
+        mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(mask[None, None, :], NEG_INF, logits)
+    return logits
+
+
+def chunked_xent(params, h, targets, mask, *, cfg: ArchConfig,
+                 chunk: int, z_coef: float = 0.0):
+    """Mean xent over masked positions; logits live one seq-chunk at a time."""
+    B, S, D = h.shape
+    ck = min(chunk, S)
+    if S % ck != 0:
+        ck = S
+    n = S // ck
+
+    def chunk_fn(hc, tc, mc):
+        # vocab-sharded logits: lse reduces over the sharded vocab dim (small
+        # all-reduce) and the target gather lowers to mask+reduce -- both tiny
+        hc = shard(hc, "dp", None, None)
+        logits = compute_logits(params, hc, cfg)
+        logits = shard(logits, "dp", None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0] - lse
+        zl = z_coef * jnp.square(lse) if z_coef else 0.0
+        m = mc.astype(jnp.float32)
+        return ((-ll + zl) * m).sum(), m.sum()
+
+    chunk_fn = jax.checkpoint(chunk_fn)
+
+    def body(carry, xs):
+        ls, ms = carry
+        l, m = chunk_fn(*xs)
+        return (ls + l, ms + m), None
+
+    hr = h.reshape(B, n, ck, D).swapaxes(0, 1)
+    tr = targets.reshape(B, n, ck).swapaxes(0, 1)
+    mr = mask.reshape(B, n, ck).swapaxes(0, 1)
+    (loss_sum, denom), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hr, tr, mr))
+    return loss_sum / jnp.maximum(denom, 1.0)
+
+
+def lm_loss(params, batch, *, cfg: ArchConfig, pcfg: ParallelConfig,
+            compute_dtype=jnp.bfloat16, z_coef: float = 1e-4):
+    """batch: {tokens, targets, mask, [image_embeds], [enc_frames]}."""
+    h, _, aux = forward(
+        params, batch["tokens"], cfg=cfg, pcfg=pcfg, mode="train",
+        image_embeds=batch.get("image_embeds"),
+        enc_frames=batch.get("enc_frames"), compute_dtype=compute_dtype)
+    loss = chunked_xent(params, h, batch["targets"], batch["mask"],
+                        cfg=cfg, chunk=pcfg.xent_chunk, z_coef=z_coef)
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------------- #
+# Serving entry points
+# --------------------------------------------------------------------------- #
+def prefill(params, tokens, *, cfg: ArchConfig, pcfg: ParallelConfig,
+            image_embeds=None, enc_frames=None, compute_dtype=jnp.bfloat16):
+    """Returns (last-position logits (B,Vp), cache)."""
+    h, cache, _ = forward(params, tokens, cfg=cfg, pcfg=pcfg, mode="prefill",
+                          image_embeds=image_embeds, enc_frames=enc_frames,
+                          compute_dtype=compute_dtype)
+    logits = compute_logits(params, h[:, -1:], cfg)[:, 0]
+    return logits, cache
+
+
+def decode_step(params, token, cache, pos, *, cfg: ArchConfig,
+                pcfg: ParallelConfig, compute_dtype=jnp.bfloat16):
+    """token: (B,1) int32; pos: () int32 -- position being written.
+    Returns (logits (B,Vp), new_cache)."""
+    h, new_cache, _ = forward(params, token, cfg=cfg, pcfg=pcfg, mode="decode",
+                              cache=cache, pos=pos, compute_dtype=compute_dtype)
+    logits = compute_logits(params, h, cfg)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,220 @@
+"""State-space mixers: Mamba-1 selective scan and the RG-LRU (griffin)
+recurrent block. Both reduce to the same *diagonal gated linear recurrence*
+
+    h_t = a_t * h_{t-1} + b_t
+
+evaluated by ``chunked_recurrence`` (sequential scan over chunks; parallel
+associative scan within each chunk) so peak memory is O(B * chunk * D * N)
+instead of O(B * S * D * N). A Pallas TPU kernel for the same recurrence
+lives in repro.kernels.linear_scan.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ParallelConfig
+from repro.models.common import ParamSchema, dense_schema, shard
+
+
+# --------------------------------------------------------------------------- #
+# Shared recurrence
+# --------------------------------------------------------------------------- #
+def _assoc_combine(x, y):
+    a1, b1 = x
+    a2, b2 = y
+    return a2 * a1, a2 * b1 + b2
+
+
+def chunked_recurrence(a, b, h0, chunk: int):
+    """h_t = a_t * h_{t-1} + b_t along axis 1.
+
+    a, b: (B, S, ...); h0: (B, ...). Returns (h (B,S,...), h_last (B,...)).
+    """
+    B, S = a.shape[:2]
+    ck = min(chunk, S)
+    if S % ck != 0:
+        ck = S
+    n = S // ck
+    ar = a.reshape((B, n, ck) + a.shape[2:])
+    br = b.reshape((B, n, ck) + b.shape[2:])
+
+    def step(h, xs):
+        ai, bi = xs                                   # (B, ck, ...)
+        aa, bb = jax.lax.associative_scan(_assoc_combine, (ai, bi), axis=1)
+        h_all = aa * h[:, None] + bb                  # (B, ck, ...)
+        return h_all[:, -1], h_all
+
+    h_last, hs = jax.lax.scan(
+        step, h0, (ar.swapaxes(0, 1), br.swapaxes(0, 1)))
+    hs = hs.swapaxes(0, 1).reshape((B, S) + a.shape[2:])
+    return hs, h_last
+
+
+# --------------------------------------------------------------------------- #
+# Mamba-1 mixer
+# --------------------------------------------------------------------------- #
+def mamba_dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    di = cfg.d_model * cfg.ssm.expand
+    return di, cfg.ssm.d_state, cfg.ssm.d_conv, cfg.ssm.resolved_dt_rank(cfg.d_model)
+
+
+def mamba_schema(cfg: ArchConfig):
+    d = cfg.d_model
+    di, n, k, dtr = mamba_dims(cfg)
+    return {
+        "in_proj": dense_schema(d, 2 * di),
+        "conv_w": ParamSchema((k, di), P(None, "model"), "normal", k ** -0.5),
+        "conv_b": ParamSchema((di,), P("model"), "zeros"),
+        "x_proj": ParamSchema((di, dtr + 2 * n), P("model", None), "normal", di ** -0.5),
+        "dt_proj": ParamSchema((dtr, di), P(None, "model"), "normal", dtr ** -0.5),
+        "dt_bias": ParamSchema((di,), P("model"), "ones"),
+        "A_log": ParamSchema((di, n), P("model", None), "ones"),
+        "D": ParamSchema((di,), P("model"), "ones"),
+        "out_proj": dense_schema(di, d, fsdp="model", tp="data"),
+    }
+
+
+def _causal_conv(x, w, b, state: Optional[jax.Array]):
+    """Depthwise causal conv along seq. x: (B,S,Di); w: (K,Di).
+    state: (B, K-1, Di) trailing inputs from the previous segment (or None).
+    Returns (y (B,S,Di), new_state (B,K-1,Di))."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)     # (B, S+K-1, Di)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    new_state = xp[:, -(K - 1):]
+    return y + b.astype(x.dtype), new_state
+
+
+def mamba_mixer(params, x, *, cfg: ArchConfig, pcfg: ParallelConfig,
+                cache=None, mode: str = "train"):
+    """x: (B,S,D). cache: {"conv": (B,K-1,Di), "h": (B,Di,N)} for decode.
+    Returns (y (B,S,D), new_cache_or_None)."""
+    di, N, K, dtr = mamba_dims(cfg)
+    B, S, D = x.shape
+    if pcfg.residual_seq_shard and mode != "decode":
+        x = shard(x, "dp", None, None)
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    xz = shard(xz, "dp", None, "model")
+    xin, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = _causal_conv(xin, params["conv_w"], params["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    dbc = jnp.einsum("bse,ef->bsf", xc, params["x_proj"].astype(xc.dtype))
+    dt, Bm, Cm = jnp.split(dbc, [dtr, dtr + N], axis=-1)
+    dt = jnp.einsum("bsr,re->bse", dt, params["dt_proj"].astype(dt.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))            # (Di, N)
+
+    a = jnp.exp(dt[..., None] * A)                               # (B,S,Di,N) fp32
+    b = (dt * xc.astype(jnp.float32))[..., None] * Bm.astype(jnp.float32)[:, :, None, :]
+
+    h0 = cache["h"].astype(jnp.float32) if cache is not None else \
+        jnp.zeros((B, di, N), jnp.float32)
+    if mode == "decode" and S == 1:
+        h = a[:, 0] * h0 + b[:, 0]                               # (B,Di,N)
+        y = (h * Cm.astype(jnp.float32)[:, 0, None, :]).sum(-1)[:, None]
+        h_last = h
+    else:
+        hs, h_last = chunked_recurrence(a, b, h0, pcfg.scan_chunk)
+        y = (hs * Cm.astype(jnp.float32)[:, :, None, :]).sum(-1)  # (B,S,Di)
+    y = y + params["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(y.dtype))
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        conv_dt = cache["conv"].dtype if cache is not None else new_conv.dtype
+        new_cache = {"conv": new_conv.astype(conv_dt),
+                     "h": h_last.astype(jnp.float32)}
+    return out, new_cache
+
+
+def mamba_cache_schema(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    di, N, K, _ = mamba_dims(cfg)
+    return {
+        "conv": ((batch, K - 1, di), dtype, P(("pod", "data"), None, "model")),
+        "h": ((batch, di, N), jnp.float32, P(("pod", "data"), "model", None)),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# RG-LRU (griffin) recurrent block
+# --------------------------------------------------------------------------- #
+_RGLRU_C = 8.0
+
+
+def rglru_schema(cfg: ArchConfig):
+    d = cfg.d_model
+    w = cfg.rglru.lru_width or d
+    k = cfg.rglru.d_conv
+    return {
+        "in_x": dense_schema(d, w),
+        "in_gate": dense_schema(d, w),
+        "conv_w": ParamSchema((k, w), P(None, "model"), "normal", k ** -0.5),
+        "conv_b": ParamSchema((w,), P("model"), "zeros"),
+        "w_i": dense_schema(w, w),
+        "b_i": ParamSchema((w,), P("model"), "zeros"),
+        "w_r": dense_schema(w, w),
+        "b_r": ParamSchema((w,), P("model"), "zeros"),
+        "lam": ParamSchema((w,), P("model"), "ones"),
+        "out": dense_schema(w, d, fsdp="model", tp="data"),
+    }
+
+
+def rglru_mixer(params, x, *, cfg: ArchConfig, pcfg: ParallelConfig,
+                cache=None, mode: str = "train"):
+    """Griffin recurrent block. cache: {"conv": (B,K-1,W), "h": (B,W)}."""
+    B, S, D = x.shape
+    if pcfg.residual_seq_shard and mode != "decode":
+        x = shard(x, "dp", None, None)
+    xb = jnp.einsum("bsd,dw->bsw", x, params["in_x"].astype(x.dtype))
+    gate = jnp.einsum("bsd,dw->bsw", x, params["in_gate"].astype(x.dtype))
+    xb = shard(xb, "dp", None, "model")
+
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = _causal_conv(xb, params["conv_w"], params["conv_b"], conv_state)
+
+    i_t = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc, params["w_i"].astype(xc.dtype))
+                         + params["b_i"].astype(xc.dtype))
+    r_t = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc, params["w_r"].astype(xc.dtype))
+                         + params["b_r"].astype(xc.dtype))
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) \
+        * r_t.astype(jnp.float32)
+    a = jnp.exp(log_a)                                           # (B,S,W) fp32
+    gated_x = (i_t * xc).astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+
+    h0 = cache["h"].astype(jnp.float32) if cache is not None else \
+        jnp.zeros((B, a.shape[-1]), jnp.float32)
+    if mode == "decode" and S == 1:
+        h_last = a[:, 0] * h0 + b[:, 0]
+        hs = h_last[:, None]
+    else:
+        hs, h_last = chunked_recurrence(a, b, h0, pcfg.scan_chunk)
+
+    y = hs.astype(x.dtype) * jax.nn.gelu(gate)
+    out = jnp.einsum("bsw,wd->bsd", y, params["out"].astype(y.dtype))
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        conv_dt = cache["conv"].dtype if cache is not None else new_conv.dtype
+        new_cache = {"conv": new_conv.astype(conv_dt),
+                     "h": h_last.astype(jnp.float32)}
+    return out, new_cache
+
+
+def rglru_cache_schema(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    w = cfg.rglru.lru_width or cfg.d_model
+    k = cfg.rglru.d_conv
+    return {
+        "conv": ((batch, k - 1, w), dtype, P(("pod", "data"), None, "model")),
+        "h": ((batch, w), jnp.float32, P(("pod", "data"), "model")),
+    }

@@ -1,0 +1,2 @@
+from repro.optim.adamw import (adamw_update, global_norm, init_opt_schema,
+                               lr_schedule)  # noqa: F401

@@ -1,0 +1,70 @@
+"""Hand-rolled AdamW on pytrees with ZeRO-style sharded states (optimizer
+state inherits the parameter PartitionSpecs -> fully sharded over
+(data, model), replicated over pods) + warmup-cosine schedule + global-norm
+clipping.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.models.common import ParamSchema, is_schema_leaf, _tree_map
+
+
+def init_opt_schema(param_schema):
+    """m/v schemas mirroring the params (zeros, same specs, fp32)."""
+    def z(p: ParamSchema) -> ParamSchema:
+        return ParamSchema(p.shape, p.spec, "zeros", 0.0, jnp.float32)
+    return {"m": _tree_map(z, param_schema), "v": _tree_map(z, param_schema)}
+
+
+def lr_schedule(step, tcfg: TrainConfig):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum((step + 1.0) / max(tcfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tcfg.warmup_steps)
+                    / max(tcfg.total_steps - tcfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tcfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(params, grads, opt, step, tcfg: TrainConfig
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step. Returns (new_params, new_opt, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_schedule(step, tcfg)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - tcfg.b1 ** t
+    bc2 = 1.0 - tcfg.b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = tcfg.b1 * m + (1 - tcfg.b1) * g
+        v = tcfg.b2 * v + (1 - tcfg.b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        step_ = mh / (jnp.sqrt(vh) + tcfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step_ = step_ + tcfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+        return newp, m, v
+
+    out = jax.tree.map(upd, params, grads, opt["m"], opt["v"])
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"gnorm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v}, metrics

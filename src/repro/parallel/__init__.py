@@ -1,0 +1,2 @@
+from repro.parallel.collectives import (int8_compress, int8_decompress,
+                                        compressed_psum)  # noqa: F401

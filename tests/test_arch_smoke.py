@@ -1,0 +1,84 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step + one prefill/decode step on CPU; asserts shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, reduced
+from repro.configs.base import ParallelConfig, TrainConfig
+from repro.models import model as M
+from repro.runtime import steps as S
+
+PCFG = ParallelConfig(attn_block_kv=16, xent_chunk=16, scan_chunk=8)
+TCFG = TrainConfig(warmup_steps=2, total_steps=10)
+
+
+def make_batch(cfg, B=2, S_len=32):
+    key = jax.random.PRNGKey(0)
+    batch = {
+        "tokens": jax.random.randint(key, (B, S_len), 0, cfg.vocab_size),
+        "targets": jax.random.randint(key, (B, S_len), 0, cfg.vocab_size),
+        "mask": jnp.ones((B, S_len), jnp.float32),
+    }
+    if cfg.frontend == "vision":
+        batch["image_embeds"] = jax.random.normal(
+            key, (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.encoder_layers:
+        batch["enc_frames"] = jax.random.normal(
+            key, (B, S_len, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_and_train_step(arch):
+    cfg = reduced(get_config(arch))
+    batch = make_batch(cfg)
+    state = S.init_train_state(jax.random.PRNGKey(1), cfg)
+    step = S.make_train_step(cfg, PCFG, TCFG)
+    new_state, metrics = jax.jit(step)(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), (arch, loss)
+    assert loss > 0
+    assert int(new_state["step"]) == 1
+    # params actually changed
+    before = jax.tree.leaves(state["params"])[0]
+    after = jax.tree.leaves(new_state["params"])[0]
+    assert not np.allclose(np.asarray(before), np.asarray(after))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prefill_then_decode(arch):
+    cfg = reduced(get_config(arch))
+    B, S_len = 2, 32
+    batch = make_batch(cfg, B, S_len)
+    params = S.init_train_state(jax.random.PRNGKey(1), cfg)["params"]
+    params = jax.tree.map(lambda x: x.astype(jnp.bfloat16), params)
+
+    prefill = S.make_prefill_step(cfg, PCFG)
+    logits, cache = jax.jit(prefill)(params, {k: v for k, v in batch.items()
+                                              if k != "targets" and k != "mask"})
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    decode = S.make_decode_step(cfg, PCFG)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    # prefill cache covers S_len positions; continue decoding at pos=S_len
+    # (global caches from prefill are sized S_len -> extend by padding)
+    def pad_cache(c):
+        def f(leaf):
+            return leaf
+        return jax.tree.map(f, c)
+    # decode against a fresh zero cache written at pos = 0..2 for shape checks
+    cs = M.model_cache_schema(cfg, B, S_len,
+                              cross_len=(S_len if cfg.encoder_layers else 0))
+    cache0 = M.zeros_cache(cs)
+    if cfg.encoder_layers:
+        # reuse prefill's cross cache (real encoder output)
+        cache0 = jax.tree.map(lambda z, c: c.astype(z.dtype) if c.shape == z.shape else z,
+                              cache0, cache)
+    lg, cache1 = jax.jit(decode)(params, tok, cache0, jnp.zeros((), jnp.int32))
+    assert lg.shape == (B, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(lg, np.float32)).all()
+    lg2, _ = jax.jit(decode)(params, tok, cache1, jnp.ones((), jnp.int32))
+    assert np.isfinite(np.asarray(lg2, np.float32)).all()

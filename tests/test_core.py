@@ -1,0 +1,193 @@
+"""Unit + property tests for the SEMULATOR core (theorem, crossbar mapping,
+circuit solver physics, conv4xbar equivalence, analog executor)."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import CASE_A, CASE_B
+from repro.core import conv4xbar, theory
+from repro.core.analog import AnalogExecutor
+from repro.core.circuit import (CircuitParams, block_response, cell_current,
+                                solve_tile_currents)
+from repro.core.crossbar import (conductance_to_weights, tile_matrix,
+                                 weights_to_conductance)
+from repro.models.common import init_params
+
+
+# --------------------------------------------------------------------------- #
+# Theorem 4.1
+# --------------------------------------------------------------------------- #
+def test_theorem_paper_example():
+    # paper: s=3, p=0.3 -> upper bound ~= 6.7e-6
+    assert abs(theory.mse_bound(3, 0.3) - 6.7e-6) < 2e-7
+
+
+@settings(max_examples=50, deadline=None)
+@given(s=st.integers(1, 6), p=st.floats(0.05, 0.95))
+def test_theorem_monotonicity(s, p):
+    b = theory.mse_bound(s, p)
+    assert b > 0
+    assert theory.mse_bound(s + 1, p) < b          # more digits -> tighter
+    assert theory.mse_bound(s, min(p + 0.04, 0.99)) < b  # higher prob -> tighter
+
+
+@settings(max_examples=20, deadline=None)
+@given(s=st.integers(1, 3), p=st.floats(0.1, 0.9), seed=st.integers(0, 100))
+def test_theorem_gaussian_consistency(s, p, seed):
+    """If errors are N(0, sigma^2) with sigma^2 at the bound, the empirical
+    P(|err| < 0.5*10^-s) should be near p (Lemma 4.2 + Thm 4.1 with the
+    paper's numeric convention using 10^-s inside erf -> 0.5*10^-s covers
+    p' = erf(0.5 * sqrt2 * erfinv(p)) <= p; we check the 10^-s variant)."""
+    sigma = math.sqrt(theory.mse_bound(s, p))
+    rng = np.random.default_rng(seed)
+    err = rng.normal(0, sigma, 200_000)
+    emp = np.mean(np.abs(err) < 10.0 ** (-s))
+    assert abs(emp - p) < 0.02
+
+
+# --------------------------------------------------------------------------- #
+# Crossbar mapping
+# --------------------------------------------------------------------------- #
+@settings(max_examples=30, deadline=None)
+@given(k=st.integers(1, 200), n=st.integers(1, 9), seed=st.integers(0, 99))
+def test_conductance_roundtrip(k, n, seed):
+    acfg = AnalogConfig()
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 0.5, (k, n)), jnp.float32)
+    scale = jnp.max(jnp.abs(w)) + 1e-12
+    gp, gn = weights_to_conductance(w, acfg, scale)
+    assert float(gp.min()) >= acfg.g_min - 1e-12
+    assert float(gp.max()) <= acfg.g_max + 1e-12
+    w2 = conductance_to_weights(gp, gn, acfg, scale)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(w),
+                               rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(1, 300), n=st.integers(1, 5))
+def test_tile_shapes(k, n):
+    acfg = AnalogConfig()
+    w = jnp.ones((k, n))
+    gp, gn = tile_matrix(w, acfg)
+    t = -(-k // acfg.rows)
+    assert gp.shape == (t, acfg.rows, n) == gn.shape
+    # padding rows are differentially neutral (both rails g_min)
+    if k % acfg.rows:
+        pad = np.asarray(gp)[-1, k % acfg.rows:, :]
+        pad_n = np.asarray(gn)[-1, k % acfg.rows:, :]
+        np.testing.assert_allclose(pad, pad_n)
+
+
+# --------------------------------------------------------------------------- #
+# Circuit solver physics (the Fig.5 structure)
+# --------------------------------------------------------------------------- #
+def test_cell_threshold_and_monotonicity():
+    cp = CircuitParams()
+    g = jnp.full((1,), 5e-5)
+    v_below = cell_current(jnp.asarray([cp.v_th * 0.5]), g, 0.0, cp)
+    v_above = cell_current(jnp.asarray([0.15]), g, 0.0, cp)
+    v_high = cell_current(jnp.asarray([0.2]), g, 0.0, cp)
+    assert float(v_below[0]) < 1e-9                  # cut off below threshold
+    assert float(v_above[0]) > 1e-7
+    assert float(v_high[0]) > float(v_above[0])      # monotone in V
+    # monotone in g
+    i1 = cell_current(jnp.asarray([0.2]), jnp.asarray([1e-5]), 0.0, cp)
+    i2 = cell_current(jnp.asarray([0.2]), jnp.asarray([9e-5]), 0.0, cp)
+    assert float(i2[0]) > float(i1[0])
+
+
+def test_ir_drop_reduces_current():
+    cp = CircuitParams()
+    v = jnp.full((8,), 0.2)
+    g = jnp.full((8, 2), 9e-5)
+    i_with = solve_tile_currents(v, g, cp)
+    i_wo = solve_tile_currents(v, g, dataclasses.replace(cp, r_bl=0.0))
+    assert float(i_with.sum()) < float(i_wo.sum())
+
+
+def test_differential_symmetry():
+    """Swapping G+ and G- flips the block output sign (offset-free)."""
+    cp = CircuitParams()
+    key = jax.random.PRNGKey(0)
+    acfg = AnalogConfig()
+    from repro.core.emulator import sample_block_inputs
+    x, _ = sample_block_inputs(key, 4, CASE_A, acfg, with_periph=False)
+    y = block_response(x, cp)
+    xs = x.at[:, 1].set(x[:, 1, :, :, ::-1])         # swap diff pairs
+    ys = block_response(xs, cp)
+    np.testing.assert_allclose(np.asarray(y), -np.asarray(ys),
+                               rtol=1e-4, atol=1e-7)
+
+
+# --------------------------------------------------------------------------- #
+# Conv4Xbar
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("geom", [CASE_A, CASE_B], ids=lambda g: g.name)
+def test_conv4xbar_matches_table2(geom):
+    # Table 2: Linear(128, 32) for case A, Linear(256, 32) for case B
+    expected = {"rram_ps32_a": 128, "rram_ps32_b": 256}[geom.name]
+    assert conv4xbar.flat_features(geom) == expected
+
+
+@pytest.mark.parametrize("geom", [CASE_A, CASE_B], ids=lambda g: g.name)
+def test_conv4xbar_fused_equals_conv(geom):
+    key = jax.random.PRNGKey(3)
+    schema = conv4xbar.conv4xbar_schema(geom, n_periph=2)
+    params = init_params(key, schema)
+    x = jax.random.uniform(key, (16, geom.features, geom.tiles, geom.rows,
+                                 geom.cols))
+    p = jax.random.uniform(jax.random.fold_in(key, 1), (16, 2))
+    np.testing.assert_allclose(
+        np.asarray(conv4xbar.apply(params, x, p)),
+        np.asarray(conv4xbar.apply_fused(params, x, p)),
+        rtol=2e-5, atol=2e-6)
+
+
+# --------------------------------------------------------------------------- #
+# Analog executor
+# --------------------------------------------------------------------------- #
+def test_analog_straight_through_gradient():
+    """custom_vjp: forward is analog, backward is the digital matmul grad."""
+    acfg = AnalogConfig(backend="analytic")
+    ex = AnalogExecutor(acfg=acfg, geom=CASE_A)
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (70, 3)) * 0.3
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 70)) * 0.5
+
+    g_analog = jax.grad(lambda xx: ex.matmul(xx, w, "t").sum())(x)
+    g_digital = jax.grad(lambda xx: (xx @ w).sum())(x)
+    np.testing.assert_allclose(np.asarray(g_analog), np.asarray(g_digital),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_analog_calibrated_circuit_tracks_digital():
+    acfg = AnalogConfig(backend="circuit")
+    ex = AnalogExecutor(acfg=acfg, geom=CASE_A)
+    key = jax.random.PRNGKey(1)
+    w = jax.random.normal(key, (64, 4)) * 0.2
+    ex.calibrate(jax.random.fold_in(key, 2), w, "t")
+    x = jax.random.normal(jax.random.fold_in(key, 3), (8, 64)) * 0.4
+    y_a = ex.matmul(x, w, "t")
+    y_d = x @ w
+    corr = np.corrcoef(np.asarray(y_a).ravel(), np.asarray(y_d).ravel())[0, 1]
+    assert corr > 0.55, corr          # nonlinear hardware, but correlated
+
+
+def test_dense_hook_routing():
+    from repro.models.common import dense, use_dense_hook
+    acfg = AnalogConfig(backend="analytic", layers=("mlp",))
+    ex = AnalogExecutor(acfg=acfg, geom=CASE_A)
+    x = jnp.ones((2, 64))
+    w = jnp.full((64, 3), 0.1)
+    with use_dense_hook(ex.hook):
+        y_mlp = dense(x, w, "mlp.up")        # routed to analog
+        y_attn = dense(x, w, "attn.q")       # stays digital
+    np.testing.assert_allclose(np.asarray(y_attn), np.asarray(x @ w),
+                               rtol=1e-6)
+    assert not np.allclose(np.asarray(y_mlp), np.asarray(x @ w))

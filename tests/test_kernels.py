@@ -1,0 +1,100 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose against the
+pure-jnp ref.py oracles (kernels run in interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import CASE_A, CASE_B
+
+
+# --------------------------------------------------------------------------- #
+# xbar_mac
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("B,K,N", [(128, 128, 128), (256, 384, 128),
+                                   (128, 512, 256), (64, 64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_xbar_mac(B, K, N, dtype):
+    from repro.kernels.xbar_mac import xbar_mac
+    from repro.kernels.xbar_mac.ref import xbar_mac_ref
+    key = jax.random.PRNGKey(B + K + N)
+    v = jax.random.uniform(key, (B, K), dtype, maxval=0.2)
+    g = jax.random.uniform(jax.random.fold_in(key, 1), (K, N), dtype,
+                           minval=1e-6, maxval=1e-4)
+    out = xbar_mac(v, g, block_b=64, block_n=64, block_k=64)
+    ref = xbar_mac_ref(v, g)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# --------------------------------------------------------------------------- #
+# flash_attention
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("B,H,S,D", [(2, 2, 256, 64), (1, 4, 128, 128),
+                                     (2, 1, 512, 32)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 128), (False, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, H, S, D, causal, window, dtype):
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    key = jax.random.PRNGKey(S + D)
+    q = jax.random.normal(key, (B, H, S, D), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, H, S, D), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, H, S, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=128, block_kv=128)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# --------------------------------------------------------------------------- #
+# linear_scan
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("B,S,D", [(2, 256, 512), (1, 128, 1024), (4, 512, 64)])
+@pytest.mark.parametrize("with_h0", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_linear_scan(B, S, D, with_h0, dtype):
+    from repro.kernels.linear_scan import linear_scan
+    from repro.kernels.linear_scan.ref import linear_scan_ref
+    key = jax.random.PRNGKey(S)
+    a = jax.random.uniform(key, (B, S, D), dtype, minval=0.5, maxval=0.999)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (B, S, D), dtype) * 0.1
+    h0 = (jax.random.normal(jax.random.fold_in(key, 2), (B, D), dtype)
+          if with_h0 else None)
+    h, h_last = linear_scan(a, b, h0, block_d=64, block_s=64)
+    hr, hr_last = linear_scan_ref(a.astype(jnp.float32),
+                                  b.astype(jnp.float32),
+                                  None if h0 is None else h0.astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(h, np.float32),
+                               np.asarray(hr, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(h_last, np.float32),
+                               np.asarray(hr_last, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# --------------------------------------------------------------------------- #
+# emulator_block (fused Conv4Xbar)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("geom", [CASE_A, CASE_B], ids=lambda g: g.name)
+@pytest.mark.parametrize("n", [8, 32])
+def test_emulator_block(geom, n):
+    from repro.core import conv4xbar
+    from repro.kernels.emulator_block import emulator_block
+    from repro.models.common import init_params
+    key = jax.random.PRNGKey(0)
+    schema = conv4xbar.conv4xbar_schema(geom, n_periph=2)
+    params = init_params(key, schema)
+    x = jax.random.uniform(key, (n,) + (geom.features, geom.tiles,
+                                        geom.rows, geom.cols))
+    periph = jax.random.uniform(jax.random.fold_in(key, 1), (n, 2))
+    out = emulator_block(params, x, periph, geom, block_n=8)
+    ref = conv4xbar.apply(params, x, periph)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)

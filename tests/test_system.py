@@ -1,0 +1,115 @@
+"""End-to-end behaviour tests for the paper's system: train a tiny LM with
+the analog-emulated backend (SEMULATOR's target use-case) and check the
+emulator acceptance machinery wiring."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import AnalogConfig, ParallelConfig, TrainConfig
+from repro.configs.rram_ps32 import CASE_A, EmulatorTrainConfig
+from repro.core import theory
+from repro.core.analog import AnalogExecutor
+from repro.core.circuit import CircuitParams
+from repro.core.emulator import train_emulator
+from repro.data import SyntheticLMData
+from repro.models.common import use_dense_hook
+from repro.runtime import steps as S
+
+PCFG = ParallelConfig(attn_block_kv=16, xent_chunk=16, scan_chunk=8)
+
+
+@pytest.fixture(scope="module")
+def tiny_emulator():
+    # prefer the benchmark-cached QUICK emulator (10k samples / 200 epochs,
+    # created by `python -m benchmarks.run`); fall back to a 25-epoch one
+    import os
+    import numpy as _np
+    cache = os.path.join(os.path.dirname(__file__), "..", "results",
+                         "emulator_cache", "rram_ps32_a_n10000_e200_s0.npz")
+    if os.path.exists(cache):
+        from repro.core.emulator import EmulatorResult
+        data = _np.load(cache, allow_pickle=True)
+        params = {k: jnp.asarray(v) for k, v in data.items()
+                  if not k.startswith("__")}
+        meta = data["__meta"].item() if "__meta" in data else {}
+        return EmulatorResult(params=params, history={},
+                              train_mse=meta.get("train_mse", 1.0),
+                              test_mse=meta.get("test_mse", 1.0),
+                              test_mae=meta.get("test_mae", 1.0),
+                              bound=theory.mse_bound(3, 0.3),
+                              accepted=bool(meta.get("accepted", False)),
+                              sig_prob=meta.get("sig_prob", 0.0))
+    tcfg = EmulatorTrainConfig(n_train=1500, n_test=300, epochs=25,
+                               lr=2e-3, lr_halve_at=(15, 20), batch_size=256)
+    return train_emulator(jax.random.PRNGKey(0), CASE_A, AnalogConfig(),
+                          CircuitParams(), tcfg)
+
+
+def test_emulator_training_reports_theorem_acceptance(tiny_emulator):
+    res = tiny_emulator
+    assert res.test_mse > 0
+    assert res.bound == pytest.approx(theory.mse_bound(3, 0.3))
+    # an under-trained emulator must NOT be silently accepted
+    assert res.accepted == (res.test_mse < res.bound and res.sig_prob > 0.3)
+
+
+def test_analog_emulated_train_step_runs(tiny_emulator):
+    """One full train step with MLP matmuls routed through the emulator."""
+    cfg = reduced(get_config("gemma3-1b"), layers=2)
+    acfg = AnalogConfig(enabled=True, backend="emulator", layers=("mlp",))
+    ex = AnalogExecutor(acfg=acfg, geom=CASE_A, cp=CircuitParams(),
+                        emulator_params=tiny_emulator.params)
+    data = SyntheticLMData(cfg, 16, 2)
+    state = S.init_train_state(jax.random.PRNGKey(1), cfg)
+    step = S.make_train_step(cfg, PCFG, TrainConfig(warmup_steps=1))
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    with use_dense_hook(ex.hook):
+        new_state, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # gradients flowed (straight-through) -> params changed
+    w0 = jax.tree.leaves(state["params"])[1]
+    w1 = jax.tree.leaves(new_state["params"])[1]
+    assert not np.allclose(np.asarray(w0), np.asarray(w1))
+
+
+def test_backend_spectrum_consistency(tiny_emulator):
+    """digital / analytic / circuit / emulator backends produce correlated
+    outputs for the same projection (the whole point of emulation)."""
+    key = jax.random.PRNGKey(2)
+    w = jax.random.normal(key, (64, 8)) * 0.25
+    x = jax.random.normal(jax.random.fold_in(key, 1), (16, 64)) * 0.5
+    outs = {"digital": np.asarray(x @ w)}
+    for backend in ("analytic", "circuit", "emulator"):
+        ex = AnalogExecutor(
+            acfg=AnalogConfig(backend=backend), geom=CASE_A,
+            cp=CircuitParams(), emulator_params=tiny_emulator.params)
+        ex.calibrate(jax.random.fold_in(key, 3), w, "t")
+        outs[backend] = np.asarray(ex.matmul(x, w, "t"))
+    # nonlinear hardware (threshold + saturation): correlated with the
+    # digital ideal, not equal to it -- that deviation is the paper's point
+    for backend in ("analytic", "circuit"):
+        corr = np.corrcoef(outs["digital"].ravel(),
+                           outs[backend].ravel())[0, 1]
+        assert corr > 0.3, (backend, corr)
+    # The emulator's contract is over the *training distribution* (random
+    # block inputs), not arbitrary matmul drive patterns: compare circuit vs
+    # emulator there. (Quality gating at matmul level is Theorem 4.1's job
+    # after full training -- see benchmarks table1.)
+    from repro.core.emulator import sample_block_inputs, normalize_features
+    from repro.core import conv4xbar
+    from repro.core.circuit import block_response
+    acfg = AnalogConfig()
+    if tiny_emulator.test_mse > 1.5e-3:
+        pytest.skip("no cached emulator; the 25-epoch fallback is too weak "
+                    "for structural checks (run `python -m benchmarks.run` "
+                    "first)")
+    xb, periph = sample_block_inputs(jax.random.PRNGKey(5), 256, CASE_A, acfg)
+    y_circ = np.asarray(block_response(xb, CircuitParams(), periph))
+    y_emu = np.asarray(conv4xbar.apply_fused(
+        tiny_emulator.params, normalize_features(xb, acfg), periph))
+    corr_ce = np.corrcoef(y_circ.ravel(), y_emu.ravel())[0, 1]
+    assert corr_ce > 0.8, corr_ce

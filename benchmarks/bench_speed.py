@@ -2,80 +2,145 @@
 circuit simulator. Times one computing-block batch through:
   circuit   -- Newton-Raphson solver (SPICE stand-in)
   analytic  -- expert analytical model
-  emulator  -- Conv4Xbar (paper conv path, fused path, Pallas kernel)
+  emulator  -- Conv4Xbar (paper conv path, fused path, Pallas kernels)
 and a system-level figure: one AnalogMatmul (K=512, N=32) per backend.
+
+Besides the CSV lines, every run appends a machine-readable entry to
+``BENCH_speed.json`` at the repo root (see docs/performance.md for the
+schema) so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import json
+import os
+import time
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import QUICK, get_emulator, timed
 from repro.configs.base import AnalogConfig
-from repro.configs.rram_ps32 import CASE_A
+from repro.configs.rram_ps32 import CASE_A, EmulatorTrainConfig
 from repro.core import conv4xbar
 from repro.core.analog import AnalogExecutor
 from repro.core.analytic import analytic_block_response
 from repro.core.circuit import CircuitParams, block_response
 from repro.core.emulator import normalize_features, sample_block_inputs
 
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_speed.json")
 
-def run(batch: int = 2048, seed: int = 0, tcfg=QUICK):
+# tiny protocol for CI smoke runs: exercises every code path, proves nothing
+# about emulator quality
+SMOKE = EmulatorTrainConfig(n_train=512, n_test=128, epochs=2, lr=2e-3,
+                            lr_halve_at=(), batch_size=256)
+
+
+def _pallas_backend() -> str:
+    """Label the Pallas rows by how the kernel actually executes."""
+    return "tpu" if jax.default_backend() == "tpu" else "interp"
+
+
+def run(batch: int = 2048, seed: int = 0, tcfg=QUICK, iters: int = 3,
+        with_circuit: bool = True):
     geom, acfg, cp = CASE_A, AnalogConfig(), CircuitParams()
     res = get_emulator(geom.name, tcfg, seed)
     key = jax.random.PRNGKey(seed)
     x, periph = sample_block_inputs(key, batch, geom, acfg)
     xn = normalize_features(x, acfg)
+    pl_mode = _pallas_backend()
 
     fns = {
-        "circuit": jax.jit(lambda a, p: block_response(a, cp, p)),
         "analytic": jax.jit(lambda a, p: analytic_block_response(a, cp, p)),
         "emulator_conv": jax.jit(
             lambda a, p: conv4xbar.apply(res.params, a, p)),
         "emulator_fused": jax.jit(
             lambda a, p: conv4xbar.apply_fused(res.params, a, p)),
     }
+    if with_circuit:
+        fns["circuit"] = jax.jit(lambda a, p: block_response(a, cp, p))
     rows = {}
     for name, fn in fns.items():
         arg = x if name in ("circuit", "analytic") else xn
-        dt, _ = timed(fn, arg, periph, iters=3)
+        dt, _ = timed(fn, arg, periph, iters=iters)
         rows[name] = dt / batch * 1e6          # us per block
 
     from repro.kernels.emulator_block import emulator_block
     dt, _ = timed(jax.jit(lambda a, p: emulator_block(res.params, a, p, geom)),
-                  xn, periph, iters=3)
-    rows["emulator_pallas_interp"] = dt / batch * 1e6
+                  xn, periph, iters=iters)
+    rows[f"emulator_pallas_{pl_mode}"] = dt / batch * 1e6
 
     # system level: one matmul through the executor
     w = jax.random.normal(key, (512, 32)) * 0.2
     xin = jax.random.normal(jax.random.fold_in(key, 1), (16, 512)) * 0.5
     sys_rows = {}
-    for backend in ("circuit", "analytic", "emulator"):
+    backends = ("circuit", "analytic", "emulator") if with_circuit else \
+        ("analytic", "emulator")
+    for backend in backends:
         ex = AnalogExecutor(
             acfg=dataclasses.replace(acfg, backend=backend), geom=geom,
             cp=cp, emulator_params=res.params)
         fn = jax.jit(lambda a: ex.matmul(a, w, "bench"))
-        dt, _ = timed(fn, xin, iters=3)
+        dt, _ = timed(fn, xin, iters=iters)
         sys_rows[backend] = dt * 1e6
-    dt, _ = timed(jax.jit(lambda a: a @ w), xin, iters=3)
+    dt, _ = timed(jax.jit(lambda a: a @ w), xin, iters=iters)
     sys_rows["digital"] = dt * 1e6
     return rows, sys_rows
 
 
-def main(csv=True):
-    rows, sys_rows = run()
-    speedup = rows["circuit"] / rows["emulator_fused"]
+def write_json(rows, sys_rows, label: str, path: str = BENCH_JSON):
+    """Append this run to the perf-trajectory file (schema v1)."""
+    doc = {"schema": 1, "unit_block": "us_per_block",
+           "unit_matmul": "us_per_matmul_512x32_b16", "runs": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if isinstance(prev, dict) and isinstance(prev.get("runs"), list):
+                doc["runs"] = prev["runs"]
+        except (json.JSONDecodeError, OSError):
+            pass
+    doc["runs"].append({
+        "label": label,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "jax_backend": jax.default_backend(),
+        "pallas": _pallas_backend(),
+        "block_us": {k: round(v, 3) for k, v in rows.items()},
+        "matmul_us": {k: round(v, 1) for k, v in sys_rows.items()},
+    })
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return path
+
+
+def main(csv=True, quick: bool = False, label: str | None = None):
+    if quick:
+        rows, sys_rows = run(batch=256, tcfg=SMOKE, iters=2,
+                             with_circuit=False)
+    else:
+        rows, sys_rows = run()
     if csv:
         for k, v in rows.items():
             print(f"speed_block_{k},{v:.2f},us_per_block")
         for k, v in sys_rows.items():
             print(f"speed_matmul_{k},{v:.1f},us_per_matmul_512x32_b16")
-        print(f"speed_emulator_speedup,{speedup:.1f},circuit/emulator_fused"
-              f" (CPU; paper's claim is orders-of-magnitude vs SPICE)")
+        if "circuit" in rows:
+            speedup = rows["circuit"] / rows["emulator_fused"]
+            print(f"speed_emulator_speedup,{speedup:.1f},circuit/emulator_fused"
+                  f" (CPU; paper's claim is orders-of-magnitude vs SPICE)")
+    path = write_json(rows, sys_rows,
+                      label or ("quick" if quick else "full"))
+    print(f"bench_json,{os.path.abspath(path)},appended")
     return rows, sys_rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: tiny emulator, no circuit rows")
+    ap.add_argument("--label", default=None,
+                    help="label recorded in BENCH_speed.json")
+    args = ap.parse_args()
+    main(quick=args.quick, label=args.label)

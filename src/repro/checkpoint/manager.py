@@ -19,7 +19,7 @@ import numpy as np
 
 
 def _flatten(tree) -> Dict[str, Any]:
-    leaves = jax.tree.flatten_with_path(tree)[0]
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     return {jax.tree_util.keystr(path): leaf for path, leaf in leaves}
 
 
@@ -114,5 +114,5 @@ class CheckpointManager:
         vals = {k: put(k, ab) for k, ab in flat_abs.items()}
         leaves, treedef = jax.tree.flatten(abstract_state)
         paths = [jax.tree_util.keystr(p)
-                 for p, _ in jax.tree.flatten_with_path(abstract_state)[0]]
+                 for p, _ in jax.tree_util.tree_flatten_with_path(abstract_state)[0]]
         return jax.tree.unflatten(treedef, [vals[p] for p in paths]), step

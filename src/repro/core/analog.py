@@ -13,6 +13,17 @@ digitally; a per-layer affine calibration maps block output voltages back to
 logical units. The backward pass is the straight-through digital gradient
 (hardware-aware training), via custom_vjp.
 
+Serving fast path (docs/performance.md): the conductance plan for a weight
+tag (tiling, padding, block interleave) is cached and reused across calls;
+both voltage rails are evaluated in ONE blockified pass — the emulator
+backend reconstructs them from a single magnitude-drive CELU against the
+precomputed zero-voltage block response (``apply_blocklast``), other
+backends stack the rails on the batch axis — and the per-block conductance
+features are consumed directly (block-indexed Pallas operand on TPU)
+instead of a batch-broadcast feature tensor.  The straight-through
+``custom_vjp`` and per-tag ``jit`` are constructed once, so ``matmul``
+compiles once per shape.
+
 Install into a model with ``use_dense_hook(executor.hook)`` -- every
 ``dense()`` in repro.models routes through here.
 """
@@ -20,7 +31,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,65 +41,106 @@ from repro.configs.rram_ps32 import BlockGeometry, CASE_A
 from repro.core import conv4xbar
 from repro.core.analytic import analytic_block_response
 from repro.core.circuit import CircuitParams, block_response
-from repro.core.crossbar import (build_block_tensor, pad_rows, tile_inputs,
-                                 tile_matrix)
+from repro.core.crossbar import ConductancePlan, build_conductance_plan
 from repro.core.emulator import normalize_features
 
 
-def _blockify(v01: jax.Array, w: jax.Array, acfg: AnalogConfig,
-              geom: BlockGeometry):
-    """v01: (B, K) wordline drive in [0,1]; w: (K, N).
-    Returns X (B*NB*NO, 2, D, H, W), shapes for reassembly, and w_scale.
-    NB = block groups over K; NO = output groups over N."""
-    B, K = v01.shape
-    N = w.shape[1]
-    gp, gn = tile_matrix(w, acfg)                     # (T, H, N)
-    vt = tile_inputs(v01, acfg)                       # (B, T, H)
-    T = gp.shape[0]
-    D = geom.tiles
-    padT = (-T) % D
-    if padT:
-        gp = jnp.pad(gp, ((0, padT), (0, 0), (0, 0)))
-        gn = jnp.pad(gn, ((0, padT), (0, 0), (0, 0)))
-        vt = jnp.pad(vt, ((0, 0), (0, padT), (0, 0)))
-    NB = (T + padT) // D
-    no = geom.outputs
-    padN = (-N) % no
-    if padN:
-        gp = jnp.pad(gp, ((0, 0), (0, 0), (0, padN)))
-        gn = jnp.pad(gn, ((0, 0), (0, 0), (0, padN)))
-    NO = (N + padN) // no
-
-    # (B, NB, D, H) voltages; (NB, D, H, NO, no) conductances
-    vb = vt.reshape(B, NB, D, -1)
-    gpb = gp.reshape(NB, D, gp.shape[1], NO, no)
-    gnb = gn.reshape(NB, D, gn.shape[1], NO, no)
-    # X: (B, NB, NO, 2, D, H, 2*no)
-    g = jnp.stack([gpb, gnb], axis=-1).reshape(NB, D, gp.shape[1], NO, 2 * no)
-    g = jnp.broadcast_to(g[None, :, :, :, :, :].transpose(0, 1, 4, 2, 3, 5),
-                         (B, NB, NO, D, gp.shape[1], 2 * no))
-    v = jnp.broadcast_to(vb[:, :, None, :, :, None],
-                         (B, NB, NO, D, vb.shape[-1], 2 * no))
-    x = jnp.stack([v, g], axis=3)                     # (B, NB, NO, 2, D, H, W)
-    x = x.reshape(B * NB * NO, 2, D, vb.shape[-1], 2 * no)
-    return x, (B, NB, NO, no, N)
+def _is_tracer(x) -> bool:
+    return isinstance(x, jax.core.Tracer)
 
 
-def _assemble(outs: jax.Array, shapes) -> jax.Array:
-    B, NB, NO, no, N = shapes
-    y = outs.reshape(B, NB, NO * no)[:, :, :N]        # (B, NB, N)
-    return y.sum(axis=1)                              # digital block-group sum
+# --------------------------------------------------------------------------- #
+# Straight-through analog matmul, hoisted to module level so the custom_vjp
+# (and the per-tag jit wrapping it) is built once, not per forward call.
+# --------------------------------------------------------------------------- #
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _st_matmul(ex: "AnalogExecutor", tag: str, x2, w, a, b):
+    yv, xs = ex.raw_matmul(x2, w, tag)
+    return (a * yv + b) * xs
 
 
-@dataclass
+def _st_fwd(ex, tag, x2, w, a, b):
+    return _st_matmul(ex, tag, x2, w, a, b), (x2, w)
+
+
+def _st_bwd(ex, tag, res, ct):
+    x2, w = res                        # straight-through digital grads
+    return ct @ w.T, x2.T @ ct, jnp.zeros((), ct.dtype), jnp.zeros((), ct.dtype)
+
+
+_st_matmul.defvjp(_st_fwd, _st_bwd)
+
+
+@dataclass(eq=False)
 class AnalogExecutor:
     acfg: AnalogConfig
     geom: BlockGeometry = CASE_A
     cp: CircuitParams = field(default_factory=CircuitParams)
     emulator_params: Optional[dict] = None
     calibration: Dict[str, tuple] = field(default_factory=dict)
-    fused_emulator: bool = True
+    fused_emulator: bool = True        # apply_fused vs apply on the slow path
+    fast_path: bool = True             # cached-plan blockified serving path
+    fast_chunk: int = 4                # batch rows per cache-sized chunk
+    use_pallas: Optional[bool] = None  # None = auto (TPU only)
 
+    def __post_init__(self):
+        self._plans: Dict[str, Tuple[jax.Array, ConductancePlan]] = {}
+        self._jit_fns: Dict[str, Tuple[jax.Array, Callable]] = {}
+        self._g0_cache: Dict[str, Tuple[ConductancePlan, dict]] = {}
+        self._aux = None
+        self._aux_src = None
+
+    # ------------------------------------------------------------------ #
+    # Conductance-plan cache
+    # ------------------------------------------------------------------ #
+    def _plan_for(self, w: jax.Array, tag: str) -> ConductancePlan:
+        """Tile/pad/interleave once per bound weight; rebuilt only when the
+        tag is rebound to a different array (or under tracing)."""
+        if _is_tracer(w):
+            return build_conductance_plan(w, self.acfg, self.geom)
+        ent = self._plans.get(tag) if tag else None
+        if ent is not None and ent[0] is w:
+            return ent[1]
+        # force eager evaluation even under an enclosing jit trace: the plan
+        # must come out concrete so it is computed once and cached, not
+        # re-tiled inside the compiled graph on every call
+        with jax.ensure_compile_time_eval():
+            plan = build_conductance_plan(w, self.acfg, self.geom)
+        if tag:
+            self._plans[tag] = (w, plan)
+            self._g0_cache.pop(tag, None)
+        return plan
+
+    def _blocklast_aux(self) -> dict:
+        assert self.emulator_params is not None, \
+            "emulator backend needs trained params (core.emulator)"
+        if any(_is_tracer(v) for v in self.emulator_params.values()):
+            return conv4xbar.blocklast_weights(self.emulator_params, self.geom)
+        if self._aux is None or self._aux_src is not self.emulator_params:
+            with jax.ensure_compile_time_eval():
+                self._aux = conv4xbar.blocklast_weights(self.emulator_params,
+                                                        self.geom)
+            self._aux_src = self.emulator_params
+            self._g0_cache.clear()
+        return self._aux
+
+    def _pre_for(self, plan: ConductancePlan, tag: str, aux: dict) -> dict:
+        """Batch-independent fast-path tensors (zero-voltage block response
+        and its stage-1 projection), cached per (tag, plan)."""
+        if _is_tracer(plan.g_norm) or any(_is_tracer(v) for v in aux.values()
+                                          if isinstance(v, jax.Array)):
+            return conv4xbar.blocklast_precompute(aux, plan.g_norm)
+        ent = self._g0_cache.get(tag) if tag else None
+        if ent is not None and ent[0] is plan:
+            return ent[1]
+        with jax.ensure_compile_time_eval():
+            pre = conv4xbar.blocklast_precompute(aux, plan.g_norm)
+        if tag:
+            self._g0_cache[tag] = (plan, pre)
+        return pre
+
+    # ------------------------------------------------------------------ #
+    # Backends
     # ------------------------------------------------------------------ #
     def _backend_fn(self):
         b = self.acfg.backend
@@ -112,24 +164,58 @@ class AnalogExecutor:
              jnp.zeros((x.shape[0], 1), x.dtype)], axis=-1)
         return self._backend_fn()(x, periph)
 
-    def raw_matmul(self, x2d: jax.Array, w: jax.Array) -> jax.Array:
+    def _pallas_enabled(self) -> bool:
+        if self.use_pallas is not None:
+            return self.use_pallas
+        return jax.default_backend() == "tpu"
+
+    def _eval_blocks(self, plan: ConductancePlan,
+                     vb01: jax.Array) -> jax.Array:
+        """vb01: (M, NB, D, H) wordline drive in [0, 1] -> (M*NB*NO, no)."""
+        if self.acfg.backend == "emulator" and self.fast_path \
+                and self._pallas_enabled():
+            from repro.kernels.emulator_block import emulator_block_grid
+            M = vb01.shape[0]
+            g = plan.g_norm.reshape((plan.n_blocks,) + plan.g_norm.shape[2:])
+            y = emulator_block_grid(self.emulator_params, vb01, g, self.geom)
+            return y.reshape(M * plan.n_blocks, -1)
+        x = plan.build_x(vb01 * self.acfg.v_read)
+        return self.block_outputs(x.astype(jnp.float32))
+
+    # ------------------------------------------------------------------ #
+    def raw_matmul(self, x2d: jax.Array, w: jax.Array,
+                   tag: str = "") -> Tuple[jax.Array, jax.Array]:
         """Analog forward for (B,K) @ (K,N): dual-rail inputs, tiled blocks,
-        digital block-group accumulation. Output in volts (uncalibrated)."""
-        xp = jnp.clip(x2d, 0.0, None)
-        xn = jnp.clip(-x2d, 0.0, None)
+        digital block-group accumulation. Output in volts (uncalibrated).
+
+        Both rails run as ONE blockified batch against the cached
+        conductance plan for `tag`: the emulator fast path evaluates them
+        via the shared-magnitude delta factorization (apply_blocklast), all
+        other backends stack the rails on the batch axis."""
+        plan = self._plan_for(w, tag)
+        B = x2d.shape[0]
+        x2d = x2d.astype(jnp.float32)
         x_scale = jnp.maximum(jnp.max(jnp.abs(x2d)), 1e-9)
-        out = None
-        for rail, sign in ((xp, 1.0), (xn, -1.0)):
-            xb, shapes = _blockify(rail / x_scale, w, self.acfg, self.geom)
-            y = self.block_outputs(xb.astype(jnp.float32))
-            y = _assemble(y, shapes) * sign
-            out = y if out is None else out + y
-        return out, x_scale
+        if self.acfg.backend == "emulator" and self.fast_path \
+                and not self._pallas_enabled():
+            aux = self._blocklast_aux()
+            pre = self._pre_for(plan, tag, aux)
+            u = plan.tile_v(jnp.abs(x2d) / x_scale, 1.0)
+            pos = plan.tile_v((x2d > 0).astype(jnp.float32), 1.0)
+            y2 = conv4xbar.apply_blocklast(aux, pre, u, pos,
+                                           chunk=self.fast_chunk)
+            return plan.assemble(y2[0]) - plan.assemble(y2[1]), x_scale
+        rails = jnp.concatenate([jnp.clip(x2d, 0.0, None),
+                                 jnp.clip(-x2d, 0.0, None)], axis=0)
+        vb01 = plan.tile_v(rails / x_scale, 1.0)      # (2B, NB, D, H)
+        outs = self._eval_blocks(plan, vb01.astype(jnp.float32))
+        y = plan.assemble(outs)                       # (2B, N)
+        return y[:B] - y[B:], x_scale
 
     def calibrate(self, key, w: jax.Array, tag: str, n: int = 256):
         """Fit the per-layer affine volts->logical map against digital."""
         xc = jax.random.normal(key, (n, w.shape[0])) * 0.5
-        yv, xs = self.raw_matmul(xc, w)
+        yv, xs = jax.jit(lambda xx: self.raw_matmul(xx, w, tag))(xc)
         yd = (xc @ w) / xs
         yv_flat = yv.reshape(-1)
         A = jnp.stack([yv_flat, jnp.ones_like(yv_flat)], axis=1)
@@ -137,27 +223,33 @@ class AnalogExecutor:
         self.calibration[tag] = (float(sol[0]), float(sol[1]))
         return self.calibration[tag]
 
+    def _jit_for(self, tag: str, w: jax.Array) -> Callable:
+        """Per-(tag, weight-binding) jitted forward.  `w` is closed over as a
+        concrete constant, so the cached conductance plan is computed at
+        trace time (once) and baked into the executable."""
+        ent = self._jit_fns.get(tag)
+        if ent is not None and ent[0] is w:
+            return ent[1]
+        wf = w.astype(jnp.float32)
+        fn = jax.jit(lambda x2, a, b: _st_matmul(self, tag, x2, wf, a, b))
+        self._jit_fns[tag] = (w, fn)
+        return fn
+
     def matmul(self, x: jax.Array, w: jax.Array, tag: str = "") -> jax.Array:
-        """Calibrated analog matmul with straight-through digital gradient."""
+        """Calibrated analog matmul with straight-through digital gradient.
+
+        Compiles once per (tag, shape): the custom_vjp is module-level and
+        the calibration affine enters as traced scalars, so recalibration
+        does not retrigger compilation."""
         a, b = self.calibration.get(tag, (1.0, 0.0))
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-        w = w.astype(jnp.float32)
-
-        @jax.custom_vjp
-        def f(x2, w):
-            yv, xs = self.raw_matmul(x2, w)
-            return (a * yv + b) * xs
-
-        def fwd(x2, w):
-            return f(x2, w), (x2, w)
-
-        def bwd(res, ct):
-            x2, w = res
-            return ct @ w.T, x2.T @ ct     # straight-through digital grads
-
-        f.defvjp(fwd, bwd)
-        y = f(x2, w)
+        af = jnp.asarray(a, jnp.float32)
+        bf = jnp.asarray(b, jnp.float32)
+        if _is_tracer(x2) or _is_tracer(w) or not tag:
+            y = _st_matmul(self, tag, x2, w.astype(jnp.float32), af, bf)
+        else:
+            y = self._jit_for(tag, w)(x2, af, bf)
         return y.reshape(*lead, w.shape[1]).astype(x.dtype)
 
     # ------------------------------------------------------------------ #

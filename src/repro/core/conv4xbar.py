@@ -55,12 +55,18 @@ def _out_size(size, k, s):
     return (size - k) // s + 1
 
 
-def flat_features(geom: BlockGeometry) -> int:
-    d, h, w = geom.tiles, geom.rows, geom.cols
-    for st in build_stages(geom):
+def conv_out_sizes(stages: Sequence[ConvStage], d: int, h: int, w: int):
+    """Spatial output dims of the stage stack for a (d, h, w) input."""
+    for st in stages:
         d = _out_size(d, st.kernel[0], st.stride[0])
         h = _out_size(h, st.kernel[1], st.stride[1])
         w = _out_size(w, st.kernel[2], st.stride[2])
+    return d, h, w
+
+
+def flat_features(geom: BlockGeometry) -> int:
+    d, h, w = conv_out_sizes(build_stages(geom), geom.tiles, geom.rows,
+                             geom.cols)
     return 32 * d * h * w
 
 
@@ -123,6 +129,173 @@ def _stride_of(w, h):
     if (kd, kh, kw) == (1, 1, 2):
         return (1, 1, 1 if h.shape[4] <= 2 else 2)
     return (kd, kh, kw)
+
+
+# --------------------------------------------------------------------------- #
+# Blockified serving fast path (channels-last, conductance precomputed)
+#
+# At system level (core/analog.py) the emulator evaluates B * NB * NO blocks
+# per matmul for BOTH voltage rails, but the conductance features are
+# batch-constant: only the voltage channel changes per call.  The fast path
+#   * precomputes stage-0's conductance contribution once per weight plan
+#     (g0 = w0_g * g_norm + b0), together with the zero-voltage block
+#     response celu(g0) and its stage-1 projection y0 = celu(g0) @ W1 + b1;
+#   * exploits dual-rail complementarity: at every wordline exactly one of
+#     (v+ = relu(x), v- = relu(-x)) is nonzero, so the expensive stage-0
+#     CELU is evaluated ONCE on |x| (half the rail-stacked batch) and both
+#     rails are reconstructed from delta = celu(v0 + g0) - celu(g0) --
+#     delta rows with v = 0 vanish exactly;
+#   * moves the rail mask to the stage-1 GEMM *output* by splitting the
+#     row-window contraction (the mask is constant across the channel dim),
+#     so no masked 8M-element copies are materialized;
+#   * keeps activations channels-LAST (n, D, W, H, C) so every conv stage is
+#     a reshape + trailing-dim matmul -- no layout transposes on the hot
+#     path -- and evaluates in cache-sized batch chunks (lax.map);
+#   * folds the constant peripheral features (gain=1, offset=0) into the
+#     first FC bias, skipping the per-sample concat.
+# Numerically equivalent to apply()/apply_fused() within fp32 tolerance
+# (same contractions, different association order); see tests/test_analog_fastpath.
+# --------------------------------------------------------------------------- #
+def blocklast_weights(params, geom: BlockGeometry,
+                      periph_const=(1.0, 0.0)) -> dict:
+    """Repack emulator params for the channels-last blockified fast path."""
+    assert geom.features == 2, "expects (V, G) cell features"
+    stages = build_stages(geom)
+    aux = {}
+    w0 = params["conv0_w"][:, :, 0, 0, 0]             # (C0, 2)
+    aux["w0v"], aux["w0g"] = w0[:, 0], w0[:, 1]
+    aux["b0"] = params["conv0_b"]
+    hstages = []
+    for i, st in enumerate(stages[1:-1], start=1):
+        k = st.kernel[1]
+        w = params[f"conv{i}_w"][:, :, 0, :, 0]       # (O, I, k)
+        wk = w.transpose(2, 1, 0).reshape(k * st.c_in, st.c_out)
+        hstages.append((wk, params[f"conv{i}_b"], k))
+    aux["hstages"] = tuple(hstages)
+    # stage 1 split by row-window position kk: (C0, k1*O1) so the dual-rail
+    # mask (constant across channels) can be applied to the GEMM output
+    w1, _, k1 = hstages[0]
+    c0 = stages[0].c_out
+    o1 = w1.shape[1]
+    aux["w1_kk"] = w1.reshape(k1, c0, o1).transpose(1, 0, 2).reshape(c0, k1 * o1)
+    iw = len(stages) - 1
+    st = stages[iw]
+    kw = st.kernel[2]
+    w = params[f"conv{iw}_w"][:, :, 0, 0, :]          # (O, I, kw)
+    aux["wstage"] = (w.transpose(2, 1, 0).reshape(kw * st.c_in, st.c_out),
+                     params[f"conv{iw}_b"], kw)
+    # fc0: permute rows from (c, d, h, w) flatten order to (d, h, w, c), and
+    # fold the constant peripheral drive into the bias.
+    d, h, wd = conv_out_sizes(stages, geom.tiles, geom.rows, geom.cols)
+    cf = stages[-1].c_out
+    flat = cf * d * h * wd
+    f0 = params["fc0_w"]
+    perm = f0[:flat].reshape(cf, d, h, wd, -1).transpose(1, 2, 3, 0, 4)
+    perm = perm.reshape(flat, -1)
+    n_periph = f0.shape[0] - flat
+    b0 = params["fc0_b"]
+    if n_periph:
+        pc = jnp.asarray(periph_const[:n_periph], f0.dtype)
+        b0 = b0 + pc @ f0[flat:]
+    fcs = [(perm, b0)]
+    for i in range(1, _n_fc(params)):
+        fcs.append((params[f"fc{i}_w"], params[f"fc{i}_b"]))
+    aux["fcs"] = tuple(fcs)
+    return aux
+
+
+def stage0_conductance(aux: dict, g_norm: jax.Array) -> jax.Array:
+    """g_norm: (NB, NO, D, H, W) normalized conductance features ->
+    (NB, NO, D, W, H, C0) precomputed stage-0 pre-activation contribution."""
+    g = g_norm.transpose(0, 1, 2, 4, 3)               # (NB, NO, D, W, H)
+    return g[..., None] * aux["w0g"] + aux["b0"]
+
+
+def blocklast_precompute(aux: dict, g_norm: jax.Array) -> dict:
+    """Batch-independent per-plan tensors for apply_blocklast.
+
+    g0:    stage-0 pre-activation conductance contribution
+    celu0: the zero-voltage stage-0 response celu(g0)
+    y0:    its stage-1 projection celu(g0) @ W1 + b1 (pre-activation)
+    """
+    g0 = stage0_conductance(aux, g_norm)              # (NB, NO, D, W, H, C0)
+    celu0 = jax.nn.celu(g0)
+    w1, b1, _ = aux["hstages"][0]
+    y0 = celu0.reshape(-1, w1.shape[0]) @ w1 + b1     # (NB*NO*D*W*G, O1)
+    return {"g0": g0, "celu0": celu0, "y0": y0}
+
+
+def _tail_stages(aux: dict, h: jax.Array, n: int, shp) -> jax.Array:
+    """Conv stages 2.. + FC head on channels-last rows.  h: 2-D (rows, C)
+    laid out as shp=(n, D, W, G) x channels; -> (n, O)."""
+    for wk, b, k in aux["hstages"][1:]:
+        # one flat GEMM over (k*C) -- batched matmuls over small trailing
+        # matrices are pathologically slow on CPU backends
+        h = jax.nn.celu(h.reshape(-1, wk.shape[0]) @ wk + b)
+        shp = shp[:3] + (shp[3] // k,)
+    wk, b, kw = aux["wstage"]
+    h = h.reshape(shp + (-1,)).transpose(0, 1, 3, 2, 4)   # (n, D, H, W, C)
+    h = jax.nn.celu(h.reshape(-1, wk.shape[0]) @ wk + b)
+    h = h.reshape(n, -1)                              # (d, h, w, c) flatten
+    fcs = aux["fcs"]
+    for i, (fw, fb) in enumerate(fcs):
+        h = h @ fw + fb
+        if i < len(fcs) - 1:
+            h = jax.nn.celu(h)
+    return h
+
+
+def apply_blocklast(aux: dict, pre: dict, u01: jax.Array, pos01: jax.Array,
+                    *, chunk: int = 4) -> jax.Array:
+    """Single-pass dual-rail blockified forward.
+
+    u01:   (M, NB, D, H) |x|-magnitude wordline drive in [0, 1]
+    pos01: (M, NB, D, H) 1.0 where the positive rail is driven (x > 0)
+    Returns (2, M*NB*NO, O): block outputs of the (v+, v-) rails.
+
+    The stage-0 CELU runs once on the magnitude drive; each rail's stage-1
+    pre-activation is reconstructed as y0 + mask-selected delta terms, which
+    is exact because delta rows with v = 0 vanish identically."""
+    M, NB, D, H = u01.shape
+    g0, celu0, y0 = pre["g0"], pre["celu0"], pre["y0"]
+    NO, W = g0.shape[1], g0.shape[3]
+    w1, b1, k1 = aux["hstages"][0]
+    C0 = aux["w0v"].shape[0]
+    O1 = w1.shape[1]
+    G = H // k1
+    R = NB * NO * D * W * G
+
+    mc = min(chunk, M)
+    padM = (-M) % mc
+    if padM:
+        u01 = jnp.pad(u01, ((0, padM),) + ((0, 0),) * 3)
+        pos01 = jnp.pad(pos01, ((0, padM),) + ((0, 0),) * 3)
+    Mp = M + padM
+    v0 = u01[..., None] * aux["w0v"]                  # (Mp, NB, D, H, C0)
+
+    def one(args):
+        v0c, mk = args                                # (mc,NB,D,H,C0) (mc,NB,D,H)
+        delta = jax.nn.celu(v0c[:, :, None, :, None, :, :] + g0[None]) \
+            - celu0[None]                             # (mc,NB,NO,D,W,H,C0)
+        t2 = delta.reshape(-1, C0) @ aux["w1_kk"]     # rows (.., G, kk) x (kk', O1)
+        t2 = t2.reshape(mc, R, k1, k1, O1)
+        tdiag = jnp.stack([t2[..., kk, kk, :] for kk in range(k1)], axis=-2)
+        mkb = jnp.broadcast_to(
+            mk.reshape(mc, 1, NB, 1, D, 1, G, k1),
+            (mc, 1, NB, NO, D, W, G, k1)).reshape(mc, R, k1)
+        t_full = tdiag.sum(-2)                        # both rails' delta sum
+        t_pos = (tdiag * mkb[..., None]).sum(-2)      # positive-rail part
+        h = jax.nn.celu(jnp.stack([y0[None] + t_pos,
+                                   y0[None] + t_full - t_pos]))
+        n2 = 2 * mc * NB * NO
+        h = _tail_stages(aux, h.reshape(n2, -1), n2, (n2, D, W, G))
+        return h.reshape(2, mc * NB * NO, -1)
+
+    vb = v0.reshape(Mp // mc, mc, NB, D, H, C0)
+    mb = pos01.reshape(Mp // mc, mc, NB, D, H)
+    out = jax.lax.map(one, (vb, mb))                  # (nc, 2, mc*NBLK, O)
+    out = out.transpose(1, 0, 2, 3).reshape(2, Mp * NB * NO, -1)
+    return out[:, :M * NB * NO]
 
 
 def apply_fused(params, x: jax.Array, periph: jax.Array | None = None) -> jax.Array:

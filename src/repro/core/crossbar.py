@@ -108,3 +108,82 @@ def plan_matmul(K: int, N: int, acfg: AnalogConfig,
     return MatmulPlan(K=K, N=N, rows=acfg.rows, tiles_per_block=d,
                       outs_per_block=geom.outputs, n_tiles=n_tiles,
                       n_block_groups=-(-n_tiles // d))
+
+
+@dataclass(frozen=True)
+class ConductancePlan:
+    """Precomputed block layout of one (K, N) weight matrix.
+
+    Conductance features are batch-constant: tiling, padding and the
+    per-block (G+, G-) interleave run ONCE when a weight tag is bound, not
+    on every forward call.  `g_feat` is indexed by block (NB * NO blocks)
+    and broadcast over the batch lazily by whichever backend consumes it.
+    """
+    K: int
+    N: int
+    rows: int                     # H: wordlines per tile
+    D: int                        # tiles accumulated in analog per block
+    NB: int                       # block groups over K (digital partial sums)
+    NO: int                       # output groups over N
+    no: int                       # outputs per block
+    g_feat: jax.Array             # (NB, NO, D, H, W=2*no) raw conductances [S]
+    g_norm: jax.Array             # same, normalized to [0, 1] for the emulator
+
+    @property
+    def n_blocks(self) -> int:
+        return self.NB * self.NO
+
+    def tile_v(self, v01: jax.Array, v_read: float) -> jax.Array:
+        """(M, K) wordline drive in [0,1] -> (M, NB, D, H) tile voltages."""
+        M = v01.shape[0]
+        v = pad_rows(v01, self.rows, axis=1)
+        T = v.shape[1] // self.rows
+        vt = v.reshape(M, T, self.rows) * v_read
+        padT = self.NB * self.D - T
+        if padT:
+            vt = jnp.pad(vt, ((0, 0), (0, padT), (0, 0)))
+        return vt.reshape(M, self.NB, self.D, self.rows)
+
+    def build_x(self, vb: jax.Array) -> jax.Array:
+        """vb: (M, NB, D, H) volts -> (M*NB*NO, 2, D, H, W) raw block-feature
+        tensors (the layout circuit/analytic backends consume)."""
+        M = vb.shape[0]
+        shp = (M, self.NB, self.NO, self.D, self.rows, 2 * self.no)
+        v = jnp.broadcast_to(vb[:, :, None, :, :, None], shp)
+        g = jnp.broadcast_to(self.g_feat[None], shp)
+        x = jnp.stack([v, g], axis=3)         # (M, NB, NO, 2, D, H, W)
+        return x.reshape(M * self.n_blocks, 2, self.D, self.rows, 2 * self.no)
+
+    def assemble(self, outs: jax.Array) -> jax.Array:
+        """(M*NB*NO, no) block outputs -> (M, N) digital block-group sum."""
+        M = outs.shape[0] // self.n_blocks
+        y = outs.reshape(M, self.NB, self.NO * self.no)[:, :, :self.N]
+        return y.sum(axis=1)
+
+
+def build_conductance_plan(w: jax.Array, acfg: AnalogConfig,
+                           geom: BlockGeometry) -> ConductancePlan:
+    """Tile + pad + interleave a (K, N) weight matrix once."""
+    K, N = w.shape
+    gp, gn = tile_matrix(w, acfg)                     # (T, H, N)
+    T = gp.shape[0]
+    D = geom.tiles
+    padT = (-T) % D
+    if padT:
+        gp = jnp.pad(gp, ((0, padT), (0, 0), (0, 0)))
+        gn = jnp.pad(gn, ((0, padT), (0, 0), (0, 0)))
+    NB = (T + padT) // D
+    no = geom.outputs
+    padN = (-N) % no
+    if padN:
+        gp = jnp.pad(gp, ((0, 0), (0, 0), (0, padN)))
+        gn = jnp.pad(gn, ((0, 0), (0, 0), (0, padN)))
+    NO = (N + padN) // no
+    H = acfg.rows
+    gpb = gp.reshape(NB, D, H, NO, no)
+    gnb = gn.reshape(NB, D, H, NO, no)
+    g = jnp.stack([gpb, gnb], axis=-1).reshape(NB, D, H, NO, 2 * no)
+    g_feat = g.transpose(0, 3, 1, 2, 4)               # (NB, NO, D, H, W)
+    g_norm = (g_feat - acfg.g_min) / (acfg.g_max - acfg.g_min)
+    return ConductancePlan(K=K, N=N, rows=H, D=D, NB=NB, NO=NO, no=no,
+                           g_feat=g_feat, g_norm=g_norm)

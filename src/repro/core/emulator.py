@@ -63,11 +63,14 @@ def generate_dataset(key, n: int, geom: BlockGeometry, acfg: AnalogConfig,
     while done < n:
         b = min(batch, n - done)
         key, sub = jax.random.split(key)
-        x, periph = sample_block_inputs(sub, b, geom, acfg, with_periph)
+        # always sample the fixed batch size and slice the tail, so `solve`
+        # compiles exactly once instead of once more for the final partial
+        # batch
+        x, periph = sample_block_inputs(sub, batch, geom, acfg, with_periph)
         y = solve(x, periph)
-        xs.append(normalize_features(x, acfg))
-        ps.append(periph)
-        ys.append(y)
+        xs.append(normalize_features(x[:b], acfg))
+        ps.append(periph[:b] if periph is not None else None)
+        ys.append(y[:b])
         done += b
     X = jnp.concatenate(xs)
     Pf = jnp.concatenate(ps) if with_periph else None
@@ -176,7 +179,10 @@ def train_emulator(key, geom: BlockGeometry, acfg: AnalogConfig,
         if epoch in tcfg.lr_halve_at:
             lr *= 0.5
         perm = jnp.asarray(rng.permutation(n))
-        params, m, v, t, l = epoch_fn(params, m, v, t, lr, perm)
+        # lr enters as a device scalar, not a Python float: lr-halving epochs
+        # must not retrigger a compile of epoch_fn
+        params, m, v, t, l = epoch_fn(params, m, v, t,
+                                      jnp.float32(lr), perm)
         tr_loss = float(l) * float(jnp.mean(y_std) ** 2)
         if log_every and (epoch % log_every == 0 or epoch == tcfg.epochs - 1):
             te = float(eval_mse(unfold(params)))

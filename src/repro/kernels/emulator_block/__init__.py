@@ -1,1 +1,2 @@
-from repro.kernels.emulator_block.ops import emulator_block  # noqa: F401
+from repro.kernels.emulator_block.ops import (  # noqa: F401
+    emulator_block, emulator_block_grid)

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.conv4xbar import ConvStage
+from repro.core.conv4xbar import ConvStage, conv_out_sizes
 
 
 def _stage_apply(h, w, b, st: ConvStage):
@@ -73,6 +73,111 @@ def _kernel(*refs, stages: List[ConvStage], n_fc: int, out_dtype):
     o_ref[...] = h.astype(out_dtype)
 
 
+def _weight_operands(params: dict, stages: List[ConvStage], n_fc: int):
+    """Emulator weights as pallas operands with grid-constant BlockSpecs."""
+    operands, in_specs = [], []
+    names = [f"conv{j}" for j in range(len(stages))] + \
+            [f"fc{j}" for j in range(n_fc)]
+    for name in names:
+        for suf in ("_w", "_b"):
+            wgt = params[f"{name}{suf}"]
+            operands.append(wgt)
+            in_specs.append(pl.BlockSpec(
+                wgt.shape, lambda *_, nd=wgt.ndim: (0,) * nd))
+    return operands, in_specs
+
+
+def _grid_kernel(*refs, stages: List[ConvStage], n_fc: int, n_periph: int,
+                 out_dtype):
+    """2-D grid step: one batch tile of one crossbar block.
+
+    The conductance features are batch-constant, so they arrive as a
+    block-indexed operand (g_ref) shared across the whole batch axis of the
+    grid instead of a batch-broadcast tensor in HBM; the (V, G) channel
+    stack is materialized only in VMEM."""
+    v_ref, g_ref = refs[0], refs[1]
+    idx = 2
+    conv = []
+    for _ in stages:
+        conv.append((refs[idx], refs[idx + 1]))
+        idx += 2
+    fcs = []
+    for _ in range(n_fc):
+        fcs.append((refs[idx], refs[idx + 1]))
+        idx += 2
+    o_ref = refs[idx]
+
+    v = v_ref[...].astype(jnp.float32)                # (bm, 1, D, H)
+    g = g_ref[...].astype(jnp.float32)                # (1, D, H, W)
+    bm = v.shape[0]
+    D, H, W = g.shape[1], g.shape[2], g.shape[3]
+    vch = jnp.broadcast_to(v.reshape(bm, D, H, 1), (bm, D, H, W))
+    gch = jnp.broadcast_to(g, (bm, D, H, W))
+    h = jnp.stack([vch, gch], axis=1)                 # (bm, 2, D, H, W)
+    for (w_ref, b_ref), st in zip(conv, stages):
+        h = _stage_apply(h, w_ref[...].astype(jnp.float32),
+                         b_ref[...].astype(jnp.float32), st)
+    h = h.reshape(bm, -1)
+    if n_periph:
+        # serving-path peripheral features are the constant (gain=1, off=0)
+        p = jnp.concatenate([jnp.ones((bm, 1), jnp.float32),
+                             jnp.zeros((bm, n_periph - 1), jnp.float32)],
+                            axis=-1)
+        h = jnp.concatenate([h, p], axis=-1)
+    for i, (w_ref, b_ref) in enumerate(fcs):
+        h = jnp.dot(h, w_ref[...].astype(jnp.float32),
+                    preferred_element_type=jnp.float32) \
+            + b_ref[...].astype(jnp.float32)
+        if i < n_fc - 1:
+            h = jax.nn.celu(h)
+    o_ref[...] = h.reshape(bm, 1, -1).astype(out_dtype)
+
+
+def emulator_block_grid_pallas(params: dict, v01: jax.Array,
+                               g_norm: jax.Array, stages: List[ConvStage],
+                               *, block_m: int = 128,
+                               interpret: bool = False) -> jax.Array:
+    """Batched serving variant over a 2-D grid (batch tiles, NB*NO blocks).
+
+    v01: (M, NB, D, H) normalized wordline voltages; g_norm: (NB*NO, D, H, W)
+    normalized conductance features shared by every batch row.
+    Returns (M, NB*NO, O)."""
+    M, NB, D, H = v01.shape
+    NBLK = g_norm.shape[0]
+    NO = NBLK // NB
+    assert NO * NB == NBLK, (NB, NBLK)
+    n_fc = len([k for k in params if k.startswith("fc") and k.endswith("_w")])
+    n_out = params[f"fc{n_fc-1}_w"].shape[1]
+    d, h, w = conv_out_sizes(stages, D, H, g_norm.shape[-1])
+    flat = stages[-1].c_out * d * h * w
+    n_periph = params["fc0_w"].shape[0] - flat
+
+    bm = min(block_m, M)
+    padM = (-M) % bm
+    vp = jnp.pad(v01, ((0, padM), (0, 0), (0, 0), (0, 0))) if padM else v01
+    Mp = M + padM
+
+    operands = [vp, g_norm]
+    in_specs = [
+        pl.BlockSpec((bm, 1, D, H), lambda i, j: (i, j // NO, 0, 0)),
+        pl.BlockSpec((1,) + g_norm.shape[1:], lambda i, j: (j, 0, 0, 0)),
+    ]
+    w_ops, w_specs = _weight_operands(params, stages, n_fc)
+    operands += w_ops
+    in_specs += w_specs
+
+    out = pl.pallas_call(
+        functools.partial(_grid_kernel, stages=stages, n_fc=n_fc,
+                          n_periph=n_periph, out_dtype=v01.dtype),
+        grid=(Mp // bm, NBLK),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, 1, n_out), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp, NBLK, n_out), v01.dtype),
+        interpret=interpret,
+    )(*operands)
+    return out[:M] if padM else out
+
+
 def emulator_block_pallas(params: dict, x: jax.Array, periph: jax.Array,
                           stages: List[ConvStage], *, block_n: int = 256,
                           interpret: bool = False) -> jax.Array:
@@ -89,18 +194,9 @@ def emulator_block_pallas(params: dict, x: jax.Array, periph: jax.Array,
                      lambda i: (i,) + (0,) * (x.ndim - 1)),
         pl.BlockSpec((bn, periph.shape[1]), lambda i: (i, 0)),
     ]
-    for j in range(len(stages)):
-        for suf in ("_w", "_b"):
-            wgt = params[f"conv{j}{suf}"]
-            operands.append(wgt)
-            in_specs.append(pl.BlockSpec(wgt.shape,
-                                         lambda i, nd=wgt.ndim: (0,) * nd))
-    for j in range(n_fc):
-        for suf in ("_w", "_b"):
-            wgt = params[f"fc{j}{suf}"]
-            operands.append(wgt)
-            in_specs.append(pl.BlockSpec(wgt.shape,
-                                         lambda i, nd=wgt.ndim: (0,) * nd))
+    w_ops, w_specs = _weight_operands(params, stages, n_fc)
+    operands += w_ops
+    in_specs += w_specs
 
     return pl.pallas_call(
         functools.partial(_kernel, stages=stages, n_fc=n_fc,

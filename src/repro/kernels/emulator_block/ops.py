@@ -7,7 +7,8 @@ import jax
 
 from repro.configs.rram_ps32 import BlockGeometry
 from repro.core.conv4xbar import build_stages
-from repro.kernels.emulator_block.emulator_block import emulator_block_pallas
+from repro.kernels.emulator_block.emulator_block import (
+    emulator_block_grid_pallas, emulator_block_pallas)
 
 
 def _on_tpu() -> bool:
@@ -20,3 +21,17 @@ def emulator_block(params: dict, x: jax.Array, periph: jax.Array,
     stages = build_stages(geom)
     return emulator_block_pallas(params, x, periph, stages,
                                  block_n=block_n, interpret=not _on_tpu())
+
+
+def emulator_block_grid(params: dict, v01: jax.Array, g_norm: jax.Array,
+                        geom: BlockGeometry, *, block_m: int = 128,
+                        interpret: bool = None):
+    """Batched serving variant: 2-D grid (batch tiles, NB*NO block index).
+
+    v01: (M, NB, D, H) normalized voltages; g_norm: (NB*NO, D, H, W) shared
+    normalized conductance features; -> (M, NB*NO, O)."""
+    stages = build_stages(geom)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return emulator_block_grid_pallas(params, v01, g_norm, stages,
+                                      block_m=block_m, interpret=interpret)

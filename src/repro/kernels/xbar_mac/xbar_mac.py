@@ -37,9 +37,25 @@ def xbar_mac_pallas(v, g, *, v_th=0.08, beta=0.6, gain=3200.0, v_sat=1.0,
                     block_b=128, block_n=128, block_k=128, interpret=False):
     B, K = v.shape
     K2, N = g.shape
-    assert K == K2
+    if K != K2:
+        raise ValueError(f"contraction mismatch: v is (.., {K}), g is ({K2}, ..)")
     bb, bn, bk = min(block_b, B), min(block_n, N), min(block_k, K)
-    assert B % bb == 0 and N % bn == 0 and K % bk == 0, (B, N, K, bb, bn, bk)
+    # pad-and-slice for non-divisible shapes: zero drive rows are cut off by
+    # the cell threshold (relu(v - v_th) == 0) and zero-conductance columns
+    # integrate to tanh(0) == 0, so zero padding is exact
+    pb, pn, pk = (-B) % bb, (-N) % bn, (-K) % bk
+    if pb or pk:
+        v = jnp.pad(v, ((0, pb), (0, pk)))
+    if pk or pn:
+        g = jnp.pad(g, ((0, pk), (0, pn)))
+    out = _xbar_mac_padded(v, g, v_th=v_th, beta=beta, gain=gain, v_sat=v_sat,
+                           bb=bb, bn=bn, bk=bk, interpret=interpret)
+    return out[:B, :N] if (pb or pn) else out
+
+
+def _xbar_mac_padded(v, g, *, v_th, beta, gain, v_sat, bb, bn, bk, interpret):
+    B, K = v.shape
+    N = g.shape[1]
     nk = K // bk
     grid = (B // bb, N // bn, nk)
 

@@ -12,12 +12,20 @@ import jax
 from jax.sharding import Mesh
 
 
+def _make_mesh(shape, axes) -> Mesh:
+    """jax.make_mesh with explicit Auto axis types where the installed jax
+    supports them (jax.sharding.AxisType landed after 0.4.x)."""
+    kwargs = {}
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kwargs)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh_for(devices: Optional[int] = None, *, model_axis: int = 1) -> Mesh:
@@ -25,6 +33,4 @@ def make_mesh_for(devices: Optional[int] = None, *, model_axis: int = 1) -> Mesh
     all): shape (devices // model_axis, model_axis) as (data, model)."""
     n = devices if devices is not None else len(jax.devices())
     assert n % model_axis == 0, (n, model_axis)
-    return jax.make_mesh(
-        (n // model_axis, model_axis), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((n // model_axis, model_axis), ("data", "model"))

@@ -17,6 +17,12 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--analog-backend", default="digital",
+                    choices=["digital", "analytic", "circuit", "emulator"],
+                    help="route MLP projections through the analog fast path")
+    ap.add_argument("--emulator-params", default=None,
+                    help="npz with trained Conv4Xbar params (benchmarks cache "
+                         "format); required for --analog-backend=emulator")
     args = ap.parse_args()
 
     if args.devices:
@@ -52,11 +58,47 @@ def main():
         batch["enc_frames"] = jax.random.normal(
             key, (B, P, cfg.d_model), jnp.bfloat16)
 
-    prefill = jax.jit(S.make_prefill_step(cfg, pcfg))
-    decode = jax.jit(S.make_decode_step(cfg, pcfg), donate_argnums=(2,))
+    # optional: serve the MLP projections on emulated analog hardware (the
+    # SEMULATOR serving path; uses the cached-conductance-plan fast path)
+    import contextlib
+    hook_ctx = contextlib.nullcontext()
+    if args.analog_backend != "digital":
+        import numpy as np
+        from repro.configs.base import AnalogConfig
+        from repro.configs.rram_ps32 import CASE_A
+        from repro.core.analog import AnalogExecutor
+        from repro.models.common import use_dense_hook
+        eparams = None
+        if args.analog_backend == "emulator":
+            assert args.emulator_params, \
+                "--analog-backend=emulator needs --emulator-params <npz>"
+            data = np.load(args.emulator_params, allow_pickle=True)
+            eparams = {k: jnp.asarray(v) for k, v in data.items()
+                       if not k.startswith("__")}
+        ex = AnalogExecutor(
+            acfg=AnalogConfig(enabled=True, backend=args.analog_backend,
+                              layers=("mlp",)),
+            geom=CASE_A, emulator_params=eparams)
+        hook_ctx = use_dense_hook(ex.hook)
+
+    # params are frozen for the whole serve loop, so close them over the
+    # jitted steps instead of passing them as traced args: the analog fast
+    # path then sees concrete weights at trace time and its conductance-plan
+    # / precompute caches bake in as constants (instead of re-tiling inside
+    # the compiled graph on every decode step)
+    prefill_step = S.make_prefill_step(cfg, pcfg)
+    decode_step = S.make_decode_step(cfg, pcfg)
+    prefill = jax.jit(lambda b: prefill_step(params, b))
+    decode = jax.jit(lambda tok, cache, pos: decode_step(params, tok, cache, pos),
+                     donate_argnums=(1,))
+
+    # keep the hook active for the whole serve loop (tracing happens at the
+    # first prefill/decode call)
+    stack = contextlib.ExitStack()
+    stack.enter_context(hook_ctx)
 
     t0 = time.time()
-    logits, pcache = prefill(params, batch)
+    logits, pcache = prefill(batch)
     logits.block_until_ready()
     t_prefill = time.time() - t0
 
@@ -83,7 +125,7 @@ def main():
     out_tokens = [tok]
     t0 = time.time()
     for i in range(G - 1):
-        logits, cache = decode(params, tok, cache, jnp.asarray(P + i, jnp.int32))
+        logits, cache = decode(tok, cache, jnp.asarray(P + i, jnp.int32))
         if args.temperature > 0:
             key, sub = jax.random.split(key)
             tok = jax.random.categorical(

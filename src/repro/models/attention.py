@@ -357,11 +357,11 @@ def sharded_flash_decode(q, ck, cv, pos, cfg: ArchConfig, *, tp_axis="model"):
         out = jnp.transpose(out, (0, 3, 1, 2, 4))
         return out.reshape(out.shape[0], 1, cfg.num_heads, D).astype(cv.dtype)
 
-    return jax.shard_map(
-        f, mesh=mesh,
-        in_specs=(P(dp), P(dp, tp_axis), P(dp, tp_axis), P()),
-        out_specs=P(dp),
-        check_vma=False,
+    from repro.parallel.collectives import shard_map_compat
+    return shard_map_compat(
+        f, mesh,
+        (P(dp), P(dp, tp_axis), P(dp, tp_axis), P()),
+        P(dp),
     )(q, ck, cv, pos)
 
 

@@ -139,7 +139,8 @@ def stack_schema(schema, n: int):
 
 def init_params(key: jax.Array, schema, dtype=jnp.float32):
     """Materialize real parameters (path-deterministic key folding)."""
-    leaves, treedef = jax.tree.flatten_with_path(schema, is_leaf=is_schema_leaf)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        schema, is_leaf=is_schema_leaf)
 
     def init_one(path, p: ParamSchema):
         k = jax.random.fold_in(key, abs(hash(jax.tree_util.keystr(path))) % (2 ** 31))

@@ -15,6 +15,23 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 
+def shard_map_compat(f, mesh, in_specs, out_specs, axis_names=None):
+    """jax.shard_map across jax versions: new API (jax.shard_map, check_vma,
+    axis_names) when present, else jax.experimental.shard_map (check_rep,
+    auto = complement of the manual axes)."""
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": False}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {"check_rep": False}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
 def int8_compress(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
@@ -52,8 +69,7 @@ def compressed_grad_sync(grads, mesh, axis: str = "pod"):
     def sync(g):
         def f(gl):
             return compressed_psum(gl, axis) / mesh.shape[axis]
-        return jax.shard_map(f, mesh=mesh, in_specs=P(*[None] * g.ndim),
-                             out_specs=P(*[None] * g.ndim),
-                             check_vma=False, axis_names={axis})(g)
+        return shard_map_compat(f, mesh, P(*[None] * g.ndim),
+                                P(*[None] * g.ndim), axis_names={axis})(g)
 
     return jax.tree.map(sync, grads)

@@ -1,0 +1,72 @@
+"""Test-suite plumbing.
+
+The container may lack ``hypothesis``; the property tests only use a small
+slice of its API (given / settings / integers / floats / sampled_from), so
+when the real package is missing we install a deterministic stand-in that
+runs each property test over a fixed number of seeded samples.  This keeps
+``pytest -x`` collecting (and the non-property tests running) everywhere.
+"""
+import sys
+import types
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    import numpy as _np
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    def floats(min_value, max_value, **_kw):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    def given(**strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_hyp_max_examples", 10)
+                rng = _np.random.default_rng(0)
+                for _ in range(n):
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._hyp_max_examples = 10
+            return wrapper
+        return deco
+
+    def settings(max_examples=10, deadline=None, **_kw):
+        def deco(fn):
+            if hasattr(fn, "_hyp_max_examples"):
+                fn._hyp_max_examples = min(max_examples, 25)
+            return fn
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = integers
+    _st.floats = floats
+    _st.sampled_from = sampled_from
+    _st.booleans = booleans
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = given
+    _hyp.settings = settings
+    _hyp.strategies = _st
+    _hyp.__is_repro_stub__ = True
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

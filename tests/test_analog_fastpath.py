@@ -1,0 +1,177 @@
+"""Parity + cache tests for the cached/fused analog serving fast path.
+
+The fast path (conductance-plan cache, single-pass dual-rail delta
+factorization, channels-last conv rewrite, Pallas grid kernel) must be
+numerically equivalent to the reference blockified path (`fast_path=False`,
+which reproduces the original two-pass implementation) within fp32
+tolerance, across backends and odd shapes that exercise padT / padN.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import CASE_A, CASE_B
+from repro.core import conv4xbar
+from repro.core.analog import AnalogExecutor
+from repro.core.crossbar import build_conductance_plan
+from repro.models.common import init_params
+
+SHAPES = [
+    (CASE_A, 64, 4, 8),      # exact tiling
+    (CASE_A, 70, 3, 4),      # padT (70 -> 2 tiles) + padN irrelevant (no=1)
+    (CASE_A, 512, 32, 16),   # the benchmark shape
+    (CASE_B, 64, 8, 8),      # case B: no=4 divides N
+    (CASE_B, 130, 7, 5),     # padT + padN (7 % 4 != 0)
+    (CASE_A, 64, 1, 1),      # single output, single batch row
+]
+
+
+def _params(geom):
+    schema = conv4xbar.conv4xbar_schema(geom, n_periph=2)
+    return init_params(jax.random.PRNGKey(7), schema)
+
+
+def _data(geom, K, N, B, seed=0):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (K, N)) * 0.3
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, K)) * 0.5
+    return x, w
+
+
+@pytest.mark.parametrize("geom,K,N,B", SHAPES,
+                         ids=[f"{g.name}-{k}x{n}x{b}" for g, k, n, b in SHAPES])
+def test_fastpath_matches_reference_emulator(geom, K, N, B):
+    x, w = _data(geom, K, N, B)
+    params = _params(geom)
+    kw = dict(acfg=AnalogConfig(backend="emulator"), geom=geom,
+              emulator_params=params)
+    y_ref, xs_ref = AnalogExecutor(fast_path=False, **kw).raw_matmul(x, w, "t")
+    y_fast, xs_fast = AnalogExecutor(use_pallas=False, **kw).raw_matmul(x, w, "t")
+    assert float(xs_ref) == float(xs_fast)
+    np.testing.assert_allclose(np.asarray(y_fast), np.asarray(y_ref),
+                               rtol=2e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("geom,K,N,B", SHAPES[:4],
+                         ids=[f"{g.name}-{k}x{n}x{b}" for g, k, n, b in SHAPES[:4]])
+def test_fastpath_matches_reference_analytic(geom, K, N, B):
+    """Single-pass dual-rail against the cached plan is bit-compatible with
+    the reference path for the analytic backend (identical block tensors)."""
+    x, w = _data(geom, K, N, B)
+    kw = dict(acfg=AnalogConfig(backend="analytic"), geom=geom)
+    y_ref, _ = AnalogExecutor(fast_path=False, **kw).raw_matmul(x, w, "t")
+    y_fast, _ = AnalogExecutor(**kw).raw_matmul(x, w, "t")
+    np.testing.assert_allclose(np.asarray(y_fast), np.asarray(y_ref),
+                               rtol=1e-6, atol=1e-8)
+
+
+@pytest.mark.parametrize("geom", [CASE_A, CASE_B], ids=lambda g: g.name)
+def test_fastpath_pallas_grid_matches_reference(geom):
+    """The 2-D grid Pallas kernel (interpret mode on CPU) agrees with the
+    reference path."""
+    x, w = _data(geom, 70, 4 if geom is CASE_B else 3, 4)
+    params = _params(geom)
+    kw = dict(acfg=AnalogConfig(backend="emulator"), geom=geom,
+              emulator_params=params)
+    y_ref, _ = AnalogExecutor(fast_path=False, **kw).raw_matmul(x, w, "t")
+    y_pl, _ = AnalogExecutor(use_pallas=True, **kw).raw_matmul(x, w, "t")
+    np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_ref),
+                               rtol=2e-4, atol=1e-5)
+
+
+def test_fastpath_under_jit_and_grad():
+    """matmul through the fast path is jittable and keeps the
+    straight-through digital gradient."""
+    x, w = _data(CASE_A, 70, 3, 4)
+    ex = AnalogExecutor(acfg=AnalogConfig(backend="emulator"), geom=CASE_A,
+                        emulator_params=_params(CASE_A), use_pallas=False)
+    y_eager = ex.matmul(x, w, "t")
+    y_jit = jax.jit(lambda a: ex.matmul(a, w, "t"))(x)
+    np.testing.assert_allclose(np.asarray(y_jit), np.asarray(y_eager),
+                               rtol=1e-5, atol=1e-6)
+    g_analog = jax.grad(lambda xx: ex.matmul(xx, w, "t").sum())(x)
+    g_digital = jax.grad(lambda xx: (xx @ w).sum())(x)
+    np.testing.assert_allclose(np.asarray(g_analog), np.asarray(g_digital),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_plan_cache_hit_and_invalidation():
+    """The conductance plan is computed once per bound weight and rebuilt
+    when a tag is rebound to a different matrix."""
+    x, w = _data(CASE_A, 70, 3, 4)
+    ex = AnalogExecutor(acfg=AnalogConfig(backend="analytic"), geom=CASE_A)
+    y1, _ = ex.raw_matmul(x, w, "t")
+    assert "t" in ex._plans
+    plan1 = ex._plans["t"][1]
+    y1b, _ = ex.raw_matmul(x, w, "t")
+    assert ex._plans["t"][1] is plan1          # cache hit: same object
+    np.testing.assert_allclose(np.asarray(y1b), np.asarray(y1))
+
+    w2 = w * 2.0 + 0.1                         # rebind tag to a new matrix
+    y2, _ = ex.raw_matmul(x, w2, "t")
+    plan2 = ex._plans["t"][1]
+    assert plan2 is not plan1                  # invalidated + rebuilt
+    y2_fresh, _ = AnalogExecutor(
+        acfg=AnalogConfig(backend="analytic"), geom=CASE_A).raw_matmul(
+            x, w2, "other")
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y2_fresh),
+                               rtol=1e-6, atol=1e-8)
+    assert not np.allclose(np.asarray(y2), np.asarray(y1))
+
+
+def test_pre_cache_invalidation_on_rebind():
+    """The fast-path precompute (zero-voltage response) follows the plan."""
+    x, w = _data(CASE_A, 70, 3, 4)
+    ex = AnalogExecutor(acfg=AnalogConfig(backend="emulator"), geom=CASE_A,
+                        emulator_params=_params(CASE_A), use_pallas=False)
+    ex.raw_matmul(x, w, "t")
+    pre1 = ex._g0_cache["t"][1]
+    ex.raw_matmul(x, w, "t")
+    assert ex._g0_cache["t"][1] is pre1
+    w2 = w + 0.05
+    y2, _ = ex.raw_matmul(x, w2, "t")
+    assert ex._g0_cache["t"][1] is not pre1
+    y_ref, _ = AnalogExecutor(
+        acfg=AnalogConfig(backend="emulator"), geom=CASE_A,
+        emulator_params=ex.emulator_params, fast_path=False).raw_matmul(
+            x, w2, "x")
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_ref),
+                               rtol=2e-4, atol=1e-5)
+
+
+def test_matmul_compile_cache_reused_across_calibration():
+    """Recalibration must not retrigger compilation (affine enters as traced
+    scalars); rebinding weights must."""
+    x, w = _data(CASE_A, 64, 4, 8)
+    ex = AnalogExecutor(acfg=AnalogConfig(backend="analytic"), geom=CASE_A)
+    ex.matmul(x, w, "t")
+    assert ex._jit_fns["t"][0] is w
+    fn1 = ex._jit_fns["t"][1]
+    ex.calibration["t"] = (2.0, 0.1)           # recalibrate
+    y = ex.matmul(x, w, "t")
+    assert ex._jit_fns["t"][1] is fn1          # same compiled fn
+    assert np.all(np.isfinite(np.asarray(y)))
+
+
+def test_calibrated_fastpath_consistent_with_reference():
+    """End-to-end matmul (calibration + affine + scale) agrees across paths."""
+    x, w = _data(CASE_A, 96, 5, 6, seed=3)
+    params = _params(CASE_A)
+    kw = dict(acfg=AnalogConfig(backend="emulator"), geom=CASE_A,
+              emulator_params=params)
+    ex_ref = AnalogExecutor(fast_path=False, **kw)
+    ex_fast = AnalogExecutor(use_pallas=False, **kw)
+    key = jax.random.PRNGKey(9)
+    ex_ref.calibrate(key, w, "t")
+    ex_fast.calibrate(key, w, "t")
+    a_r, b_r = ex_ref.calibration["t"]
+    a_f, b_f = ex_fast.calibration["t"]
+    assert abs(a_r - a_f) < 1e-3 * max(1.0, abs(a_r))
+    y_ref = ex_ref.matmul(x, w, "t")
+    y_fast = ex_fast.matmul(x, w, "t")
+    np.testing.assert_allclose(np.asarray(y_fast), np.asarray(y_ref),
+                               rtol=1e-3, atol=1e-4)

@@ -13,7 +13,9 @@ from repro.configs.rram_ps32 import CASE_A, CASE_B
 # xbar_mac
 # --------------------------------------------------------------------------- #
 @pytest.mark.parametrize("B,K,N", [(128, 128, 128), (256, 384, 128),
-                                   (128, 512, 256), (64, 64, 64)])
+                                   (128, 512, 256), (64, 64, 64),
+                                   # non-divisible shapes: pad-and-slice path
+                                   (100, 70, 130), (65, 64, 63)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_xbar_mac(B, K, N, dtype):
     from repro.kernels.xbar_mac import xbar_mac
@@ -96,5 +98,35 @@ def test_emulator_block(geom, n):
     periph = jax.random.uniform(jax.random.fold_in(key, 1), (n, 2))
     out = emulator_block(params, x, periph, geom, block_n=8)
     ref = conv4xbar.apply(params, x, periph)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("geom", [CASE_A, CASE_B], ids=lambda g: g.name)
+@pytest.mark.parametrize("M,NB,NO", [(4, 2, 3), (3, 1, 2)])
+def test_emulator_block_grid(geom, M, NB, NO):
+    """2-D grid serving kernel: per-block shared conductance features,
+    constant (gain=1, off=0) peripherals; matches the paper-faithful apply
+    over the equivalent broadcast batch (incl. batch padding M % bm != 0)."""
+    from repro.core import conv4xbar
+    from repro.kernels.emulator_block import emulator_block_grid
+    from repro.models.common import init_params
+    key = jax.random.PRNGKey(1)
+    schema = conv4xbar.conv4xbar_schema(geom, n_periph=2)
+    params = init_params(key, schema)
+    D, H, W = geom.tiles, geom.rows, geom.cols
+    v = jax.random.uniform(key, (M, NB, D, H))
+    g = jax.random.uniform(jax.random.fold_in(key, 1), (NB * NO, D, H, W))
+    out = emulator_block_grid(params, v, g, geom, block_m=2)
+    assert out.shape == (M, NB * NO, geom.outputs)
+    # reference: materialize the batch-broadcast (V, G) channel stack
+    vch = jnp.broadcast_to(
+        v[:, :, None, :, :, None], (M, NB, NO, D, H, W))
+    gch = jnp.broadcast_to(
+        g.reshape(NB, NO, D, H, W)[None], (M, NB, NO, D, H, W))
+    x = jnp.stack([vch, gch], axis=3).reshape(M * NB * NO, 2, D, H, W)
+    periph = jnp.concatenate([jnp.ones((x.shape[0], 1)),
+                              jnp.zeros((x.shape[0], 1))], axis=-1)
+    ref = conv4xbar.apply(params, x, periph).reshape(M, NB * NO, -1)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-5, atol=2e-6)

@@ -30,8 +30,9 @@ tcfg = TrainConfig(lr=1e-3, warmup_steps=2, total_steps=20,
                    checkpoint_every=5, keep_checkpoints=2)
 data = SyntheticLMData(cfg, seq_len=32, global_batch=8)
 
-mesh1 = jax.make_mesh((4, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import _make_mesh
+
+mesh1 = _make_mesh((4, 2), ("data", "model"))
 tr = Trainer(cfg=cfg, pcfg=pcfg, tcfg=tcfg, mesh=mesh1, data=data,
              ckpt_dir="/tmp/repro_md_ckpt")
 import shutil; shutil.rmtree("/tmp/repro_md_ckpt", ignore_errors=True)
@@ -42,8 +43,7 @@ assert s1["final_step"] == 10, s1
 l1 = [m["loss"] for m in tr.metrics_log]
 
 # ELASTIC: restart on a different mesh from the same checkpoints
-mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh2 = _make_mesh((2, 4), ("data", "model"))
 tr2 = tr.remesh(mesh2)
 s2 = tr2.run(15)
 assert s2["final_step"] == 15, s2
@@ -53,14 +53,12 @@ assert abs(tr2.metrics_log[0]["loss"] - l1[-1]) < 0.8, \
     (tr2.metrics_log[0]["loss"], l1[-1])
 
 # int8 compressed psum vs exact
-from repro.parallel.collectives import compressed_psum
-mesh3 = jax.make_mesh((8,), ("pod",),
-                      axis_types=(jax.sharding.AxisType.Auto,))
+from repro.parallel.collectives import compressed_psum, shard_map_compat
+mesh3 = _make_mesh((8,), ("pod",))
 x = jax.random.normal(jax.random.PRNGKey(0), (8, 256))
 def f(xl):
     return compressed_psum(xl, "pod")
-y = jax.shard_map(f, mesh=mesh3, in_specs=P("pod"), out_specs=P("pod"),
-                  check_vma=False)(x)
+y = shard_map_compat(f, mesh3, P("pod"), P("pod"))(x)
 exact = jnp.broadcast_to(x.sum(0, keepdims=True), x.shape)
 err = float(jnp.max(jnp.abs(y - exact)))
 scale = float(jnp.max(jnp.abs(x))) / 127.0

@@ -1,0 +1,169 @@
+"""Robustness sweeps: how fast does each analog backend degrade as the
+device corner worsens?
+
+Two axes per backend (emulator + analytic):
+  * accuracy vs programming-variation sigma (lognormal conductance noise)
+  * accuracy vs retention drift time (g * (t/t0)^-nu)
+
+Each point is the mean over N device draws, evaluated in ONE compiled call
+per backend (repro.nonideal.ScenarioSweep: scenario parameters are traced,
+so the whole curve reuses one executable -- asserted here).  All points of
+a curve share the device key (common random numbers), which is what makes
+the curves monotone instead of sampling-jittered.
+
+accuracy = 1 / (1 + NRMSE(y_scenario, y_ideal_backend)) in (0, 1]; 1 means
+the corner is indistinguishable from the ideal device.  `corr_digital`
+(Pearson r against the exact digital matmul) is reported alongside for
+absolute quality context.
+
+CSV lines to stdout + a machine-readable artifact in
+results/robustness_<label>.json.
+
+  PYTHONPATH=src python -m benchmarks.bench_robustness [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_speed import SMOKE
+from benchmarks.common import QUICK, get_emulator
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import CASE_A
+from repro.core.analog import AnalogExecutor
+from repro.nonideal import Scenario, ScenarioSweep
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+SIGMAS = (0.0, 0.02, 0.05, 0.1, 0.2)
+DRIFT_TS = (0.0, 1e2, 1e4, 1e6)          # seconds since programming
+DRIFT_NU = 0.05
+SIGMAS_QUICK = (0.0, 0.1)
+DRIFT_TS_QUICK = (0.0, 1e4)
+
+
+def _nrmse(y: np.ndarray, ref: np.ndarray) -> float:
+    return float(np.linalg.norm(y - ref) / max(np.linalg.norm(ref), 1e-12))
+
+
+def _accuracy(y: np.ndarray, ref: np.ndarray) -> float:
+    return 1.0 / (1.0 + _nrmse(y, ref))
+
+
+def _monotone_decreasing(vals, tol=1e-9) -> bool:
+    return all(vals[i + 1] <= vals[i] + tol for i in range(len(vals) - 1))
+
+
+def _sweep_axis(sweep: ScenarioSweep, x, scenarios, key, y_ideal, y_digital):
+    pts = []
+    for s in scenarios:
+        ym = np.asarray(sweep(x, s, key)).mean(axis=0)
+        corr = float(np.corrcoef(ym.ravel(), y_digital.ravel())[0, 1])
+        pts.append({"accuracy": _accuracy(ym, y_ideal),
+                    "corr_digital": corr})
+    return pts
+
+
+def run(quick: bool = False, seed: int = 0):
+    geom, acfg = CASE_A, AnalogConfig()
+    res = get_emulator(geom.name, SMOKE if quick else QUICK, seed)
+    key = jax.random.PRNGKey(seed)
+    K, N, B = (128, 8, 8) if quick else (512, 32, 16)
+    n_draws = 2 if quick else 8
+    w = jax.random.normal(key, (K, N)) * 0.2
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, K)) * 0.5
+    y_digital = np.asarray(x @ w)
+    key_dev = jax.random.fold_in(key, 2)   # shared across levels: CRN
+    sigmas = SIGMAS_QUICK if quick else SIGMAS
+    drift_ts = DRIFT_TS_QUICK if quick else DRIFT_TS
+
+    curves = []
+    for backend in ("emulator", "analytic"):
+        ex = AnalogExecutor(
+            acfg=dataclasses.replace(acfg, backend=backend), geom=geom,
+            emulator_params=res.params)
+        ex.calibrate(jax.random.fold_in(key, 3), w, "rob")
+        y_ideal = np.asarray(ex.matmul(x, w, "rob"))
+        sweep = ScenarioSweep(ex, w, "rob", n_draws=n_draws)
+        # NOTE one name for every swept scenario: `name` is pytree aux data
+        # (static), so it must not vary within a compile-once sweep
+        sig_pts = _sweep_axis(
+            sweep, x, [Scenario(name="sweep", prog_sigma=s) for s in sigmas],
+            key_dev, y_ideal, y_digital)
+        drift_pts = _sweep_axis(
+            sweep, x,
+            [Scenario(name="sweep", drift_nu=DRIFT_NU, drift_t=t)
+             for t in drift_ts],
+            key_dev, y_ideal, y_digital)
+        assert sweep.trace_count == 1, \
+            f"scenario sweep retraced ({sweep.trace_count}x) -- scenario " \
+            f"params must stay traced arguments"
+        curves.append({
+            "backend": backend,
+            "n_draws": n_draws,
+            "compiled_once": sweep.trace_count == 1,
+            "sigma": {"levels": list(sigmas),
+                      "points": sig_pts,
+                      "monotone": _monotone_decreasing(
+                          [p["accuracy"] for p in sig_pts])},
+            "drift": {"levels": list(drift_ts), "nu": DRIFT_NU,
+                      "points": drift_pts,
+                      "monotone": _monotone_decreasing(
+                          [p["accuracy"] for p in drift_pts])},
+        })
+    return curves
+
+
+def write_json(curves, label: str, quick: bool, seed: int) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"robustness_{label}.json")
+    doc = {"schema": 1,
+           "label": label,
+           "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+           "jax_backend": jax.default_backend(),
+           "quick": quick,
+           "seed": seed,
+           "matmul": "accuracy = 1/(1+NRMSE) vs the backend's own ideal "
+                     "device; corr_digital vs the exact digital matmul",
+           "curves": curves}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return path
+
+
+def main(quick: bool = False, seed: int = 0, label: str | None = None):
+    curves = run(quick=quick, seed=seed)
+    for c in curves:
+        for axis in ("sigma", "drift"):
+            ax = c[axis]
+            for lvl, p in zip(ax["levels"], ax["points"]):
+                print(f"robustness_{c['backend']}_{axis},{lvl:g},"
+                      f"{p['accuracy']:.4f},{p['corr_digital']:.4f}")
+            print(f"robustness_{c['backend']}_{axis}_monotone,"
+                  f"{int(ax['monotone'])},bool")
+    path = write_json(curves, label or ("quick" if quick else "full"),
+                      quick, seed)
+    print(f"robustness_json,{os.path.abspath(path)},written")
+    bad = [f"{c['backend']}/{ax}" for c in curves for ax in ("sigma", "drift")
+           if not c[ax]["monotone"]]
+    if bad:
+        raise SystemExit(f"non-monotone robustness curves: {bad}")
+    return curves
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: tiny emulator, 2-scenario sweep")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--label", default=None)
+    args = ap.parse_args()
+    main(quick=args.quick, seed=args.seed, label=args.label)

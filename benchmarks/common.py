@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import os
+import statistics
 import time
 
 import jax
@@ -23,12 +24,16 @@ FULL = EmulatorTrainConfig()          # 50k samples, 2000 epochs (paper)
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 5):
+    """Median-of-iters wall time (robust to one-off scheduler noise)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.time()
+    ts = []
+    out = None
     for _ in range(iters):
+        t0 = time.time()
         out = jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / iters, out
+        ts.append(time.time() - t0)
+    return statistics.median(ts), out
 
 
 def get_emulator(geom_name: str, tcfg: EmulatorTrainConfig = QUICK,

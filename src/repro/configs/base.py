@@ -73,6 +73,14 @@ class AnalogConfig:
     v_read: float = 0.2                # V
     layers: Tuple[str, ...] = ("mlp", "attn")  # which projections run analog
     emulator_params_path: Optional[str] = None
+    # gate-overdrive wordline biasing: map nonzero normalized drives into
+    # [v_th/v_read, 1] so activations are not swallowed by the access
+    # transistor's cut-off deadband (93% of a N(0,1) drive sits below v_th
+    # with the naive linear map)
+    wl_overdrive: bool = True
+    # device non-ideality scenario name (repro.nonideal registry); None =
+    # ideal device corner.  AnalogExecutor resolves it at construction.
+    scenario: Optional[str] = None
 
 
 @dataclass(frozen=True)

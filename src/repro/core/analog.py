@@ -24,17 +24,28 @@ instead of a batch-broadcast feature tensor.  The straight-through
 ``custom_vjp`` and per-tag ``jit`` are constructed once, so ``matmul``
 compiles once per shape.
 
+Non-idealities (docs/nonideal.md): ``set_scenario`` activates a
+``repro.nonideal.Scenario`` (programming variation, read noise, stuck
+cells, drift, quantized levels, line resistance).  Perturbations apply at
+the conductance-plan level; on the serving fast path the perturbed
+conductances, read sigma and read key are traced arguments of a separate
+per-tag scenario forward, so switching scenarios never invalidates the
+compile caches, and the ideal scenario is bit-identical to the plain path.
+``calibrate`` is noise-aware (fits against the active scenario).
+
 Install into a model with ``use_dense_hook(executor.hook)`` -- every
 ``dense()`` in repro.models routes through here.
 """
 from __future__ import annotations
 
 import functools
+import zlib
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import AnalogConfig
 from repro.configs.rram_ps32 import BlockGeometry, CASE_A
@@ -43,6 +54,9 @@ from repro.core.analytic import analytic_block_response
 from repro.core.circuit import CircuitParams, block_response
 from repro.core.crossbar import ConductancePlan, build_conductance_plan
 from repro.core.emulator import normalize_features
+from repro.nonideal.perturb import (apply_read_noise, perturb_plan,
+                                    scenario_circuit_params)
+from repro.nonideal.scenario import Scenario
 
 
 def _is_tracer(x) -> bool:
@@ -71,6 +85,35 @@ def _st_bwd(ex, tag, res, ct):
 _st_matmul.defvjp(_st_fwd, _st_bwd)
 
 
+# --------------------------------------------------------------------------- #
+# Scenario-path straight-through matmul.  The device-state perturbed
+# conductances (gf), read-noise sigma and read key enter as TRACED arguments,
+# so sweeping scenario parameters (or redrawing devices / read cycles) reuses
+# one compiled executable per (tag, shape) -- the non-ideality twin of the
+# calibration-affine-as-traced-scalars trick above.
+# --------------------------------------------------------------------------- #
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _st_matmul_sc(ex: "AnalogExecutor", tag: str, x2, w, a, b, gf, rsig, rkey):
+    plan = ex._plan_for(w, tag).with_g(gf, ex.acfg)
+    yv, xs = ex.raw_matmul(x2, w, tag, plan=plan, read_key=rkey,
+                           read_sigma=rsig)
+    return (a * yv + b) * xs
+
+
+def _st_sc_fwd(ex, tag, x2, w, a, b, gf, rsig, rkey):
+    return _st_matmul_sc(ex, tag, x2, w, a, b, gf, rsig, rkey), (x2, w, gf, rkey)
+
+
+def _st_sc_bwd(ex, tag, res, ct):
+    x2, w, gf, rkey = res              # straight-through digital grads; the
+    z = jnp.zeros((), ct.dtype)        # device draw is not a trained quantity
+    return (ct @ w.T, x2.T @ ct, z, z, jnp.zeros_like(gf), z,
+            np.zeros(rkey.shape, jax.dtypes.float0))
+
+
+_st_matmul_sc.defvjp(_st_sc_fwd, _st_sc_bwd)
+
+
 @dataclass(eq=False)
 class AnalogExecutor:
     acfg: AnalogConfig
@@ -82,6 +125,8 @@ class AnalogExecutor:
     fast_path: bool = True             # cached-plan blockified serving path
     fast_chunk: int = 4                # batch rows per cache-sized chunk
     use_pallas: Optional[bool] = None  # None = auto (TPU only)
+    scenario: Optional[Scenario] = None          # device non-ideality corner
+    scenario_key: Optional[jax.Array] = None     # device-draw base key
 
     def __post_init__(self):
         self._plans: Dict[str, Tuple[jax.Array, ConductancePlan]] = {}
@@ -89,6 +134,72 @@ class AnalogExecutor:
         self._g0_cache: Dict[str, Tuple[ConductancePlan, dict]] = {}
         self._aux = None
         self._aux_src = None
+        # scenario state: perturbed-conductance cache + per-tag scenario
+        # forwards (kept separate from _jit_fns so toggling a scenario on
+        # and off never invalidates either compile cache)
+        self._pert_cache: Dict[str, tuple] = {}
+        self._sc_fns: Dict[str, tuple] = {}
+        self._read_calls = 0
+        if self.scenario_key is None:
+            self.scenario_key = jax.random.PRNGKey(0)
+        if self.scenario is None and self.acfg.scenario:
+            from repro.nonideal import get_scenario
+            self.scenario = get_scenario(self.acfg.scenario)
+
+    # ------------------------------------------------------------------ #
+    # Non-ideality scenario state (repro.nonideal)
+    # ------------------------------------------------------------------ #
+    def set_scenario(self, scenario: Optional[Scenario],
+                     key: Optional[jax.Array] = None) -> "AnalogExecutor":
+        """Activate (or clear, with None) a device non-ideality scenario.
+
+        Clears the perturbed-conductance cache and resets the read-cycle
+        counter, but does NOT touch any compiled forward: scenario
+        parameters, fault draws and read keys are traced arguments of the
+        scenario path, so switching scenarios reuses the executable."""
+        self.scenario = scenario
+        if key is not None:
+            self.scenario_key = key
+        self._pert_cache.clear()
+        self._read_calls = 0
+        return self
+
+    def _tag_key(self, tag: str) -> jax.Array:
+        """Per-tag device-draw key; crc32 keeps it stable across processes
+        (hash() is salted per interpreter run)."""
+        return jax.random.fold_in(self.scenario_key,
+                                  zlib.crc32(tag.encode()) & 0x7FFFFFFF)
+
+    def _next_read_key(self) -> jax.Array:
+        """Fresh key per read cycle; the sequence restarts at set_scenario
+        so a serve run with a fixed --seed is reproducible end to end."""
+        k = jax.random.fold_in(
+            jax.random.fold_in(self.scenario_key, 0x5245AD), self._read_calls)
+        self._read_calls += 1
+        return k
+
+    def _scenario_plan(self, tag: str, w: jax.Array) -> ConductancePlan:
+        """Device-state perturbed plan, computed once per (tag, plan,
+        scenario) and reused -- as a stable object, so downstream
+        identity-keyed caches (_pre_for) hit across eager calls, and as the
+        source of the traced conductance buffer for the compiled scenario
+        forward."""
+        plan = self._plan_for(w, tag)
+        ent = self._pert_cache.get(tag)
+        if ent is not None and ent[0] is plan and ent[1] is self.scenario:
+            return ent[2]
+        with jax.ensure_compile_time_eval():
+            pplan = perturb_plan(plan, self.acfg, self.scenario,
+                                 self._tag_key(tag))
+        self._pert_cache[tag] = (plan, self.scenario, pplan)
+        return pplan
+
+    def _cp_effective(self) -> CircuitParams:
+        """CircuitParams with the scenario's line-resistance scaling (static:
+        only the circuit backend reads it, and changing it recompiles)."""
+        if self.scenario is not None:
+            return scenario_circuit_params(self.cp, self.scenario)
+        return self.cp
 
     # ------------------------------------------------------------------ #
     # Conductance-plan cache
@@ -144,10 +255,11 @@ class AnalogExecutor:
     # ------------------------------------------------------------------ #
     def _backend_fn(self):
         b = self.acfg.backend
+        cp = self._cp_effective()
         if b == "circuit":
-            return lambda x, p: block_response(x, self.cp, p)
+            return lambda x, p: block_response(x, cp, p)
         if b == "analytic":
-            return lambda x, p: analytic_block_response(x, self.cp, p)
+            return lambda x, p: analytic_block_response(x, cp, p)
         if b == "emulator":
             assert self.emulator_params is not None, \
                 "emulator backend needs trained params (core.emulator)"
@@ -182,17 +294,51 @@ class AnalogExecutor:
         x = plan.build_x(vb01 * self.acfg.v_read)
         return self.block_outputs(x.astype(jnp.float32))
 
+    def _drive01(self, u01: jax.Array) -> jax.Array:
+        """Gate-overdrive wordline biasing (AnalogConfig.wl_overdrive): map
+        nonzero normalized drives into [v_th/v_read, 1] so they clear the
+        access transistor's cut-off instead of sitting in its deadband.
+        Zero stays exactly zero -- the dual-rail delta factorization and
+        padded tiles depend on it."""
+        if not self.acfg.wl_overdrive:
+            return u01
+        t = self.cp.v_th / self.acfg.v_read
+        return jnp.where(u01 > 0.0, t + u01 * (1.0 - t), 0.0)
+
     # ------------------------------------------------------------------ #
-    def raw_matmul(self, x2d: jax.Array, w: jax.Array,
-                   tag: str = "") -> Tuple[jax.Array, jax.Array]:
+    def raw_matmul(self, x2d: jax.Array, w: jax.Array, tag: str = "",
+                   plan: Optional[ConductancePlan] = None,
+                   read_key: Optional[jax.Array] = None,
+                   read_sigma=None) -> Tuple[jax.Array, jax.Array]:
         """Analog forward for (B,K) @ (K,N): dual-rail inputs, tiled blocks,
         digital block-group accumulation. Output in volts (uncalibrated).
 
         Both rails run as ONE blockified batch against the cached
         conductance plan for `tag`: the emulator fast path evaluates them
         via the shared-magnitude delta factorization (apply_blocklast), all
-        other backends stack the rails on the batch axis."""
-        plan = self._plan_for(w, tag)
+        other backends stack the rails on the batch axis.
+
+        `plan` overrides the cached conductance plan (repro.nonideal passes
+        device-perturbed plans); with `plan=None` and an active scenario the
+        device-state perturbation is applied here, inside the trace.
+        `read_key`/`read_sigma` add one cycle-to-cycle read-noise draw on
+        top of whatever plan is in effect."""
+        if plan is None:
+            plan = self._plan_for(w, tag)
+            sc = self.scenario
+            if sc is not None and not sc.is_ideal:
+                if tag and not _is_tracer(plan.g_feat):
+                    plan = self._scenario_plan(tag, w)   # cached device draw
+                else:
+                    plan = perturb_plan(plan, self.acfg, sc,
+                                        self._tag_key(tag))
+                if read_key is None and sc.read_sigma > 0.0:
+                    read_key, read_sigma = self._next_read_key(), sc.read_sigma
+        if read_key is not None:
+            rs = 0.0 if read_sigma is None else read_sigma
+            plan = plan.with_g(
+                apply_read_noise(plan.g_feat, self.acfg, rs, read_key),
+                self.acfg)
         B = x2d.shape[0]
         x2d = x2d.astype(jnp.float32)
         x_scale = jnp.maximum(jnp.max(jnp.abs(x2d)), 1e-9)
@@ -200,22 +346,39 @@ class AnalogExecutor:
                 and not self._pallas_enabled():
             aux = self._blocklast_aux()
             pre = self._pre_for(plan, tag, aux)
-            u = plan.tile_v(jnp.abs(x2d) / x_scale, 1.0)
+            u = plan.tile_v(self._drive01(jnp.abs(x2d) / x_scale), 1.0)
             pos = plan.tile_v((x2d > 0).astype(jnp.float32), 1.0)
             y2 = conv4xbar.apply_blocklast(aux, pre, u, pos,
                                            chunk=self.fast_chunk)
             return plan.assemble(y2[0]) - plan.assemble(y2[1]), x_scale
         rails = jnp.concatenate([jnp.clip(x2d, 0.0, None),
                                  jnp.clip(-x2d, 0.0, None)], axis=0)
-        vb01 = plan.tile_v(rails / x_scale, 1.0)      # (2B, NB, D, H)
+        vb01 = plan.tile_v(self._drive01(rails / x_scale), 1.0)  # (2B,NB,D,H)
         outs = self._eval_blocks(plan, vb01.astype(jnp.float32))
         y = plan.assemble(outs)                       # (2B, N)
         return y[:B] - y[B:], x_scale
 
-    def calibrate(self, key, w: jax.Array, tag: str, n: int = 256):
-        """Fit the per-layer affine volts->logical map against digital."""
+    def calibrate(self, key, w: jax.Array, tag: str, n: int = 256,
+                  noise_draws: int = 4):
+        """Fit the per-layer affine volts->logical map against digital.
+
+        Noise-aware: with an active scenario the fit runs against the same
+        perturbed device the serving path sees, and the block response is
+        averaged over `noise_draws` cycle-to-cycle read draws so the affine
+        targets the expected (not one-shot) transfer."""
         xc = jax.random.normal(key, (n, w.shape[0])) * 0.5
-        yv, xs = jax.jit(lambda xx: self.raw_matmul(xx, w, tag))(xc)
+        sc = self.scenario
+        if sc is not None and not sc.is_ideal:
+            draws = max(1, noise_draws) if sc.read_sigma > 0.0 else 1
+            keys = jax.random.split(
+                jax.random.fold_in(self.scenario_key, 0xCA11B), draws)
+            fn = jax.jit(jax.vmap(
+                lambda kk: self.raw_matmul(xc, w, tag, read_key=kk,
+                                           read_sigma=sc.read_sigma)))
+            yvs, xss = fn(keys)
+            yv, xs = yvs.mean(axis=0), xss[0]
+        else:
+            yv, xs = jax.jit(lambda xx: self.raw_matmul(xx, w, tag))(xc)
         yd = (xc @ w) / xs
         yv_flat = yv.reshape(-1)
         A = jnp.stack([yv_flat, jnp.ones_like(yv_flat)], axis=1)
@@ -235,19 +398,48 @@ class AnalogExecutor:
         self._jit_fns[tag] = (w, fn)
         return fn
 
+    def _jit_sc_for(self, tag: str, w: jax.Array) -> Callable:
+        """Per-(tag, weight-binding) scenario forward.  Perturbed
+        conductances, read sigma and read key are traced arguments, so
+        changing scenarios (or read cycles) reuses the executable; only a
+        line-resistance change rebuilds it (CircuitParams is static).
+
+        The read-noise draw runs even for scenarios with read_sigma == 0
+        (exact identity there): a g_feat-sized threefry sample is tens of
+        microseconds against a millisecond-scale matmul, and keeping it
+        unconditional preserves exactly ONE executable per tag."""
+        ent = self._sc_fns.get(tag)
+        rls = self.scenario.r_line_scale if self.scenario else 1.0
+        if ent is not None and ent[0] is w and ent[1] == rls:
+            return ent[2]
+        wf = w.astype(jnp.float32)
+        fn = jax.jit(lambda x2, a, b, gf, rsig, rkey:
+                     _st_matmul_sc(self, tag, x2, wf, a, b, gf, rsig, rkey))
+        self._sc_fns[tag] = (w, rls, fn)
+        return fn
+
     def matmul(self, x: jax.Array, w: jax.Array, tag: str = "") -> jax.Array:
         """Calibrated analog matmul with straight-through digital gradient.
 
         Compiles once per (tag, shape): the custom_vjp is module-level and
         the calibration affine enters as traced scalars, so recalibration
-        does not retrigger compilation."""
+        does not retrigger compilation.  An active non-ideality scenario
+        dispatches to the scenario forward (same compile-once property,
+        see _jit_sc_for); the ideal scenario is routed to the plain fast
+        path and is bit-identical to it."""
         a, b = self.calibration.get(tag, (1.0, 0.0))
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
         af = jnp.asarray(a, jnp.float32)
         bf = jnp.asarray(b, jnp.float32)
+        sc = self.scenario
         if _is_tracer(x2) or _is_tracer(w) or not tag:
             y = _st_matmul(self, tag, x2, w.astype(jnp.float32), af, bf)
+        elif sc is not None and not sc.is_ideal:
+            y = self._jit_sc_for(tag, w)(
+                x2, af, bf, self._scenario_plan(tag, w).g_feat,
+                jnp.asarray(sc.read_sigma, jnp.float32),
+                self._next_read_key())
         else:
             y = self._jit_for(tag, w)(x2, af, bf)
         return y.reshape(*lead, w.shape[1]).astype(x.dtype)

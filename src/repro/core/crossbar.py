@@ -11,6 +11,7 @@ Layout (matching paper Table 1 geometries):
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Tuple
 
@@ -132,6 +133,16 @@ class ConductancePlan:
     @property
     def n_blocks(self) -> int:
         return self.NB * self.NO
+
+    def with_g(self, g_feat: jax.Array, acfg: AnalogConfig) -> "ConductancePlan":
+        """Same block layout, different conductances (repro.nonideal injects
+        perturbed devices here).  g_norm is rederived so every consumer --
+        circuit, analytic, emulator fast path, Pallas kernel -- sees the
+        perturbation.  Static fields are unchanged, so compiled functions
+        built for this plan's shapes are reused when g_feat is a traced
+        argument."""
+        g_norm = (g_feat - acfg.g_min) / (acfg.g_max - acfg.g_min)
+        return dataclasses.replace(self, g_feat=g_feat, g_norm=g_norm)
 
     def tile_v(self, v01: jax.Array, v_read: float) -> jax.Array:
         """(M, K) wordline drive in [0,1] -> (M, NB, D, H) tile voltages."""

@@ -17,13 +17,23 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed; init/prompt/sampling/device-noise each "
+                         "get their own derived key, so noisy-scenario "
+                         "inference is reproducible")
     ap.add_argument("--analog-backend", default="digital",
                     choices=["digital", "analytic", "circuit", "emulator"],
                     help="route MLP projections through the analog fast path")
     ap.add_argument("--emulator-params", default=None,
                     help="npz with trained Conv4Xbar params (benchmarks cache "
                          "format); required for --analog-backend=emulator")
+    ap.add_argument("--scenario", default=None,
+                    help="device non-ideality scenario name from the "
+                         "repro.nonideal registry (e.g. prog_mild, stressed); "
+                         "requires a non-digital --analog-backend")
     args = ap.parse_args()
+    if args.scenario and args.analog_backend == "digital":
+        ap.error("--scenario requires a non-digital --analog-backend")
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -45,18 +55,21 @@ def main():
     pcfg = ParallelConfig(attn_block_kv=min(1024, P), xent_chunk=128,
                           scan_chunk=min(256, P))
 
-    key = jax.random.PRNGKey(0)
-    params = S.init_train_state(key, cfg)["params"]
+    # explicit key threading: every stochastic path (param init, prompt,
+    # sampling temperature, scenario device draws) gets its own derived key
+    root = jax.random.PRNGKey(args.seed)
+    k_init, k_prompt, k_img, k_enc, key = jax.random.split(root, 5)
+    params = S.init_train_state(k_init, cfg)["params"]
     params = jax.tree.map(lambda x: x.astype(jnp.bfloat16), params)
-    prompt = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+    prompt = jax.random.randint(k_prompt, (B, P), 0, cfg.vocab_size)
 
     batch = {"tokens": prompt}
     if cfg.frontend == "vision":
         batch["image_embeds"] = jax.random.normal(
-            key, (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+            k_img, (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
     if cfg.encoder_layers:
         batch["enc_frames"] = jax.random.normal(
-            key, (B, P, cfg.d_model), jnp.bfloat16)
+            k_enc, (B, P, cfg.d_model), jnp.bfloat16)
 
     # optional: serve the MLP projections on emulated analog hardware (the
     # SEMULATOR serving path; uses the cached-conductance-plan fast path)
@@ -77,8 +90,12 @@ def main():
                        if not k.startswith("__")}
         ex = AnalogExecutor(
             acfg=AnalogConfig(enabled=True, backend=args.analog_backend,
-                              layers=("mlp",)),
+                              layers=("mlp",), scenario=args.scenario),
             geom=CASE_A, emulator_params=eparams)
+        if ex.scenario is not None:
+            key, k_dev = jax.random.split(key)
+            ex.set_scenario(ex.scenario, key=k_dev)
+            print(f"analog scenario: {ex.scenario}")
         hook_ctx = use_dense_hook(ex.hook)
 
     # params are frozen for the whole serve loop, so close them over the

@@ -1,0 +1,27 @@
+"""repro.nonideal -- device non-ideality & fault-injection subsystem.
+
+Composable crossbar device corners (programming variation, read noise,
+stuck cells, retention drift, line resistance, quantized levels) applied at
+the conductance-plan level so one implementation serves the circuit,
+analytic and emulator backends.  See docs/nonideal.md.
+"""
+from repro.nonideal.data import (generate_dataset_nonideal,
+                                 train_noise_aware_emulator)
+from repro.nonideal.perturb import (apply_read_noise, drift_factor,
+                                    perturb_conductance, perturb_plan,
+                                    quantize_levels, sample_fault_masks,
+                                    scenario_circuit_params)
+from repro.nonideal.scenario import (BUILTIN_SCENARIOS, Scenario,
+                                     get_scenario, list_scenarios,
+                                     register_scenario, scenario_from_json,
+                                     scenario_to_json)
+from repro.nonideal.sweep import ScenarioSweep
+
+__all__ = [
+    "BUILTIN_SCENARIOS", "Scenario", "ScenarioSweep", "apply_read_noise",
+    "drift_factor", "generate_dataset_nonideal", "get_scenario",
+    "list_scenarios", "perturb_conductance", "perturb_plan",
+    "quantize_levels", "register_scenario", "sample_fault_masks",
+    "scenario_circuit_params", "scenario_from_json", "scenario_to_json",
+    "train_noise_aware_emulator",
+]

@@ -1,0 +1,72 @@
+"""Noise-aware emulator training data.
+
+The circuit solver is the ground truth for *any* device corner: perturb the
+sampled per-cell conductances with a scenario (one device draw + one read
+draw per training sample) and label with the scenario-adjusted circuit
+(line-resistance scaling included).  An emulator trained on this data
+learns the response surface of the degraded hardware, which is how
+non-idealities that have no analytic hook (IR drop under faults, drifted
+operating points) reach the emulator backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import BlockGeometry, EmulatorTrainConfig
+from repro.core.circuit import CircuitParams, block_response
+from repro.core.emulator import (EmulatorResult, normalize_features,
+                                 sample_block_inputs, train_emulator)
+from repro.nonideal.perturb import (apply_read_noise, perturb_conductance,
+                                    scenario_circuit_params)
+from repro.nonideal.scenario import Scenario
+
+
+def generate_dataset_nonideal(key, n: int, geom: BlockGeometry,
+                              acfg: AnalogConfig, cp: CircuitParams,
+                              scenario: Scenario, batch: int = 2048,
+                              with_periph: bool = True):
+    """Scenario-perturbed twin of ``emulator.generate_dataset``.
+
+    Each sample is its own device draw + read draw, so the dataset covers
+    the scenario's conductance distribution (stuck rails, quantized levels,
+    drifted spans), not one frozen device."""
+    cp_s = scenario_circuit_params(cp, scenario)
+    solve = jax.jit(lambda x, p: block_response(x, cp_s, p))
+
+    def _perturb(x, kd, kr):
+        g = perturb_conductance(x[:, 1], acfg, scenario, kd)
+        g = apply_read_noise(g, acfg, scenario.read_sigma, kr)
+        return x.at[:, 1].set(g)
+
+    perturb = jax.jit(_perturb)
+    xs, ps, ys = [], [], []
+    done = 0
+    while done < n:
+        b = min(batch, n - done)
+        key, ks, kd, kr = jax.random.split(key, 4)
+        # fixed-size sample + tail slice: solve/perturb compile exactly once
+        x, periph = sample_block_inputs(ks, batch, geom, acfg, with_periph)
+        x = perturb(x, kd, kr)
+        y = solve(x, periph)
+        xs.append(normalize_features(x[:b], acfg))
+        ps.append(periph[:b] if periph is not None else None)
+        ys.append(y[:b])
+        done += b
+    X = jnp.concatenate(xs)
+    Pf = jnp.concatenate(ps) if with_periph else None
+    Y = jnp.concatenate(ys)
+    return X, Pf, Y
+
+
+def train_noise_aware_emulator(key, geom: BlockGeometry, acfg: AnalogConfig,
+                               cp: CircuitParams, tcfg: EmulatorTrainConfig,
+                               scenario: Scenario,
+                               log_every: int = 0) -> EmulatorResult:
+    """Paper training protocol on scenario-perturbed circuit data."""
+    kd, kt = jax.random.split(key)
+    data = generate_dataset_nonideal(kd, tcfg.n_train + tcfg.n_test, geom,
+                                     acfg, cp, scenario)
+    return train_emulator(kt, geom, acfg, cp, tcfg, data=data,
+                          log_every=log_every)

@@ -1,0 +1,107 @@
+"""Conductance-level perturbation ops.
+
+Everything applies at the *conductance-plan* level -- raw conductances in
+[g_min, g_max], any shape -- so one implementation serves all three analog
+backends: the circuit solver consumes perturbed ``g`` directly (noise-aware
+training data), and the emulator / analytic fast paths consume a perturbed
+``ConductancePlan`` (``plan.with_g``) whose arrays enter the per-tag jitted
+forward as traced buffers, leaving PR 1's compile cache intact.
+
+Composition order (device-state, one draw per device key):
+  quantize -> programming variation -> retention drift -> stuck faults -> clip
+then per read cycle:
+  read noise -> clip
+
+Each step is an exact bitwise identity at its ideal parameter value: the
+non-ideal candidate is computed on the side and selected with
+``jnp.where(active, candidate, g)``, multiplicative factors are exactly 1.0
+at zero sigma, and the final clip is a no-op for in-range values.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AnalogConfig
+from repro.core.circuit import CircuitParams
+from repro.core.crossbar import ConductancePlan
+from repro.nonideal.scenario import Scenario
+
+
+def sample_fault_masks(key: jax.Array, shape, p_stuck_on, p_stuck_off):
+    """(stuck_on, stuck_off) boolean masks from ONE uniform draw per cell.
+
+    A single draw keeps the masks disjoint (for p_on + p_off <= 1), makes
+    them deterministic under a fixed key, and makes fault populations nested
+    across p sweeps (cells stuck at p=0.001 stay stuck at p=0.01), which is
+    what makes fault-rate curves monotone."""
+    u = jax.random.uniform(key, shape)
+    return u < p_stuck_on, u > 1.0 - p_stuck_off
+
+
+def drift_factor(scenario: Scenario) -> jax.Array:
+    """Retention decay multiplier (t / t0)^-nu; exactly 1.0 when inactive."""
+    t = jnp.asarray(scenario.drift_t, jnp.float32)
+    nu = jnp.asarray(scenario.drift_nu, jnp.float32)
+    active = (nu != 0.0) & (t > 0.0)
+    tt = jnp.maximum(t, 1e-30) / jnp.asarray(scenario.drift_t0, jnp.float32)
+    return jnp.where(active, jnp.power(tt, -nu), 1.0)
+
+
+def quantize_levels(g: jax.Array, acfg: AnalogConfig, n_levels) -> jax.Array:
+    """Snap to n_levels equispaced programming levels over [g_min, g_max]."""
+    span = acfg.g_max - acfg.g_min
+    lm1 = jnp.maximum(jnp.asarray(n_levels, jnp.float32) - 1.0, 1.0)
+    gq = acfg.g_min + span * (jnp.round((g - acfg.g_min) / span * lm1) / lm1)
+    return jnp.where(jnp.asarray(n_levels) >= 2, gq, g)
+
+
+def perturb_conductance(g: jax.Array, acfg: AnalogConfig,
+                        scenario: Scenario, key: jax.Array) -> jax.Array:
+    """Device-state perturbation (programming + retention) of raw
+    conductances.  One ``key`` = one fabricated device draw; the same key
+    reproduces the same device.  Read noise is separate (per read cycle):
+    see apply_read_noise."""
+    kp, kf = jax.random.split(key)
+    # conductance plans pad partial tiles/output groups with g == 0 exactly:
+    # there is no physical cell at those lattice sites, so no perturbation
+    # (and in particular no clip up to g_min) may touch them
+    live = g > 0.0
+    gp = quantize_levels(g, acfg, scenario.n_levels)
+    eps = jax.random.normal(kp, g.shape, jnp.float32)
+    gp = gp * jnp.exp(jnp.asarray(scenario.prog_sigma, jnp.float32) * eps)
+    gp = gp * drift_factor(scenario)
+    on, off = sample_fault_masks(kf, g.shape, scenario.p_stuck_on,
+                                 scenario.p_stuck_off)
+    gp = jnp.where(on, acfg.g_max, gp)
+    gp = jnp.where(off, acfg.g_min, gp)
+    return jnp.where(live, jnp.clip(gp, acfg.g_min, acfg.g_max), g)
+
+
+def apply_read_noise(g: jax.Array, acfg: AnalogConfig, read_sigma,
+                     key: jax.Array) -> jax.Array:
+    """Cycle-to-cycle multiplicative read noise; one key per read cycle.
+    Padded lattice sites (g == 0, no cell) stay exactly zero."""
+    eps = jax.random.normal(key, g.shape, jnp.float32)
+    gn = g * (1.0 + jnp.asarray(read_sigma, jnp.float32) * eps)
+    return jnp.where(g > 0.0, jnp.clip(gn, acfg.g_min, acfg.g_max), g)
+
+
+def perturb_plan(plan: ConductancePlan, acfg: AnalogConfig,
+                 scenario: Scenario, key: jax.Array) -> ConductancePlan:
+    """Device-state-perturbed copy of a conductance plan (static layout
+    unchanged, so consumers compiled for the base plan's shapes are reused)."""
+    return plan.with_g(perturb_conductance(plan.g_feat, acfg, scenario, key),
+                       acfg)
+
+
+def scenario_circuit_params(cp: CircuitParams,
+                            scenario: Scenario) -> CircuitParams:
+    """Line-resistance scaling for the circuit solver.  Static: CircuitParams
+    is a hashed constant of the compiled graph, so changing r_line_scale
+    recompiles the circuit backend (the fast-path backends are unaffected)."""
+    if scenario.r_line_scale == 1.0:
+        return cp
+    return dataclasses.replace(cp, r_bl=cp.r_bl * scenario.r_line_scale)

@@ -1,0 +1,150 @@
+"""Device non-ideality scenarios: what can go wrong between the weights you
+wanted and the conductances the crossbar actually reads.
+
+A ``Scenario`` is a frozen dataclass registered as a jax pytree so its
+numeric knobs enter compiled functions as *traced* leaves -- sweeping
+``prog_sigma`` (or any other float field) across values reuses one
+compilation.  ``name`` and ``r_line_scale`` are static aux data:
+``r_line_scale`` rewrites ``CircuitParams`` (a hashed static), so changing
+it recompiles the circuit backend by design.
+
+Fields (composition order documented in docs/nonideal.md):
+  n_levels     -- quantized programming levels over [g_min, g_max]
+                  (0 or 1 = continuous programming)
+  prog_sigma   -- lognormal programming variation: g <- g * exp(sigma * eps),
+                  one draw per device (fixed by the device key)
+  drift_nu     -- retention drift g <- g * (t / t0)^-nu  (clipped to range)
+  drift_t      -- seconds since programming (0 = no drift)
+  drift_t0     -- drift reference time
+  p_stuck_on   -- fraction of cells stuck at g_max (fault mask, per device)
+  p_stuck_off  -- fraction of cells stuck at g_min
+  read_sigma   -- cycle-to-cycle multiplicative read noise, redrawn per call
+                  on the eager per-tag path and per draw in sweeps; under an
+                  ENCLOSING jit (e.g. a compiled decode step) the draw is
+                  baked at trace time -- see docs/nonideal.md
+  r_line_scale -- bitline/integrator input-resistance multiplier (circuit
+                  solver only; the emulator sees it through noise-aware
+                  retraining, see nonideal/data.py)
+
+Every perturbation is an exact identity at its ideal value (verified
+bitwise in tests), so the ideal scenario cannot change serving numerics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+
+_LEAF_FIELDS: Tuple[str, ...] = (
+    "prog_sigma", "read_sigma", "p_stuck_on", "p_stuck_off",
+    "drift_nu", "drift_t", "drift_t0", "n_levels",
+)
+_AUX_FIELDS: Tuple[str, ...] = ("name", "r_line_scale")
+
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str = "ideal"
+    prog_sigma: float = 0.0
+    read_sigma: float = 0.0
+    p_stuck_on: float = 0.0
+    p_stuck_off: float = 0.0
+    drift_nu: float = 0.0
+    drift_t: float = 0.0
+    drift_t0: float = 1.0
+    r_line_scale: float = 1.0
+    n_levels: int = 0
+
+    def __post_init__(self):
+        # pin leaf dtypes so jit sees stable (weak f32 / i32) avals across
+        # sweeps -- Scenario(prog_sigma=0) must not retrace vs prog_sigma=0.0
+        for f in _LEAF_FIELDS:
+            v = getattr(self, f)
+            if not isinstance(v, jax.Array):
+                object.__setattr__(
+                    self, f, int(v) if f == "n_levels" else float(v))
+        object.__setattr__(self, "r_line_scale", float(self.r_line_scale))
+
+    @property
+    def is_ideal(self) -> bool:
+        """True iff every perturbation is an exact identity."""
+        return (self.prog_sigma == 0.0 and self.read_sigma == 0.0
+                and self.p_stuck_on == 0.0 and self.p_stuck_off == 0.0
+                and (self.drift_nu == 0.0 or self.drift_t <= 0.0)
+                and self.r_line_scale == 1.0 and self.n_levels < 2)
+
+
+def _flatten(s: Scenario):
+    return (tuple(getattr(s, f) for f in _LEAF_FIELDS),
+            tuple(getattr(s, f) for f in _AUX_FIELDS))
+
+
+def _unflatten(aux, leaves) -> Scenario:
+    kw = dict(zip(_LEAF_FIELDS, leaves))
+    kw.update(zip(_AUX_FIELDS, aux))
+    return Scenario(**kw)
+
+
+jax.tree_util.register_pytree_node(Scenario, _flatten, _unflatten)
+
+
+# --------------------------------------------------------------------------- #
+# String-keyed registry + JSON (de)serialization
+# --------------------------------------------------------------------------- #
+_REGISTRY: Dict[str, Scenario] = {}
+
+
+def register_scenario(s: Scenario, overwrite: bool = False) -> Scenario:
+    if s.name in _REGISTRY and not overwrite:
+        raise ValueError(f"scenario {s.name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    _REGISTRY[s.name] = s
+    return s
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def list_scenarios() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def scenario_to_json(s: Scenario) -> str:
+    return json.dumps(dataclasses.asdict(s), sort_keys=True)
+
+
+def scenario_from_json(doc: str) -> Scenario:
+    d = json.loads(doc)
+    known = {f.name for f in dataclasses.fields(Scenario)}
+    bad = set(d) - known
+    if bad:
+        raise ValueError(f"unknown Scenario fields in JSON: {sorted(bad)}")
+    return Scenario(**d)
+
+
+# Built-in corners. "stressed" is the serving-overhead benchmark scenario
+# (bench_speed's speed_matmul_emulator_nonideal row).
+BUILTIN_SCENARIOS: Tuple[Scenario, ...] = (
+    Scenario(name="ideal"),
+    Scenario(name="prog_mild", prog_sigma=0.03),
+    Scenario(name="prog_heavy", prog_sigma=0.12),
+    Scenario(name="read_noisy", read_sigma=0.05),
+    Scenario(name="stuck_1pct", p_stuck_on=0.005, p_stuck_off=0.005),
+    Scenario(name="quantized_16", n_levels=16),
+    Scenario(name="drift_1day", drift_nu=0.05, drift_t=86_400.0),
+    Scenario(name="ir_degraded", r_line_scale=4.0),
+    Scenario(name="stressed", prog_sigma=0.08, read_sigma=0.03,
+             p_stuck_on=0.002, p_stuck_off=0.005,
+             drift_nu=0.03, drift_t=3_600.0, n_levels=32),
+)
+for _s in BUILTIN_SCENARIOS:
+    register_scenario(_s)
+del _s

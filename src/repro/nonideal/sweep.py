@@ -1,0 +1,83 @@
+"""Compile-once multi-sample scenario sweeps.
+
+``ScenarioSweep`` evaluates one analog matmul under N independent device
+draws of a scenario in a single compiled call: the scenario enters as a
+pytree of traced leaves and the device/read keys as a vmapped key batch, so
+a whole accuracy-vs-sigma (or vs-drift-time) curve reuses ONE executable.
+``trace_count`` / ``cache_size()`` expose that invariant to tests and to
+bench_robustness.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nonideal.perturb import perturb_plan
+from repro.nonideal.scenario import Scenario
+
+
+class ScenarioSweep:
+    """N-device-draw scenario evaluation of ``ex.matmul(x, w, tag)``.
+
+    The executor's own scenario state is bypassed for everything that is a
+    traced scenario field: the sweep perturbs the cached base conductance
+    plan directly, per draw, inside one jitted vmap.  Static circuit
+    parameters are the exception -- the executor's CircuitParams (including
+    an active scenario's r_line_scale) are baked at first trace, which is
+    why swept scenarios must keep r_line_scale == 1.0 (enforced).
+    Calibration (``ex.calibration[tag]``) is applied, so outputs are in
+    logical units and comparable with the digital matmul.
+    """
+
+    def __init__(self, ex, w: jax.Array, tag: str, n_draws: int = 8):
+        self.ex = ex
+        self.w = w.astype(jnp.float32)
+        self.tag = tag
+        self.n_draws = n_draws
+        self.trace_count = 0
+        self._fn = None
+
+    def cache_size(self) -> int:
+        return self._fn._cache_size() if self._fn is not None else 0
+
+    def _build(self):
+        ex, w, tag = self.ex, self.w, self.tag
+
+        def fwd(x2, scen: Scenario, keys, a, b):
+            self.trace_count += 1          # trace-time side effect, by design
+            plan = ex._plan_for(w, tag)    # concrete w -> cached, baked
+
+            def one(k):
+                kd, kr = jax.random.split(k)
+                p = perturb_plan(plan, ex.acfg, scen, kd)
+                yv, xs = ex.raw_matmul(x2, w, tag, plan=p, read_key=kr,
+                                       read_sigma=scen.read_sigma)
+                return (a * yv + b) * xs
+
+            return jax.vmap(one)(keys)
+
+        self._fn = jax.jit(fwd)
+
+    def __call__(self, x: jax.Array, scenario: Scenario,
+                 key: Optional[jax.Array] = None) -> jax.Array:
+        """x: (B, K) -> (n_draws, B, N) calibrated outputs, one device draw
+        per row.  Fixing ``key`` across calls gives common random numbers
+        over scenario parameters (variance-reduced, monotone curves)."""
+        if scenario.r_line_scale != 1.0:
+            raise ValueError(
+                "ScenarioSweep sweeps traced scenario fields only; "
+                "r_line_scale is static (it rewrites CircuitParams, so each "
+                "level would recompile and the circuit backend's closure "
+                "would not see it) -- use AnalogExecutor.set_scenario for "
+                "line-resistance corners")
+        if self._fn is None:
+            self._build()
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        keys = jax.random.split(key, self.n_draws)
+        a, b = self.ex.calibration.get(self.tag, (1.0, 0.0))
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        return self._fn(x2, scenario, keys,
+                        jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32))

@@ -1,0 +1,279 @@
+"""Tests for the device non-ideality subsystem (repro.nonideal): scenario
+registry round-trip, perturbation semantics, fault-mask determinism,
+fast-path compile-cache non-invalidation across scenario changes, ideal
+bit-identity, and the compile-once multi-draw sweep."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import CASE_A
+from repro.core import conv4xbar
+from repro.core.analog import AnalogExecutor
+from repro.models.common import init_params
+from repro.nonideal import (Scenario, ScenarioSweep, apply_read_noise,
+                            get_scenario, list_scenarios, perturb_conductance,
+                            register_scenario, sample_fault_masks,
+                            scenario_circuit_params, scenario_from_json,
+                            scenario_to_json)
+
+ACFG = AnalogConfig()
+
+
+def _executor(backend="analytic", **kw):
+    if backend == "emulator":
+        kw.setdefault("emulator_params", init_params(
+            jax.random.PRNGKey(7), conv4xbar.conv4xbar_schema(CASE_A,
+                                                              n_periph=2)))
+        kw.setdefault("use_pallas", False)
+    return AnalogExecutor(acfg=AnalogConfig(backend=backend), geom=CASE_A,
+                          **kw)
+
+
+def _data(K=70, N=3, B=4, seed=0):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (K, N)) * 0.3
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, K)) * 0.5
+    return x, w
+
+
+def _plan_g(ex, w, tag="t"):
+    return ex._plan_for(w, tag).g_feat
+
+
+# --------------------------------------------------------------------------- #
+# Registry + JSON
+# --------------------------------------------------------------------------- #
+def test_registry_roundtrip_identical_pytree():
+    s = Scenario(name="rt_test", prog_sigma=0.07, read_sigma=0.01,
+                 p_stuck_on=0.002, p_stuck_off=0.004, drift_nu=0.04,
+                 drift_t=1234.5, r_line_scale=2.0, n_levels=16)
+    register_scenario(s)
+    assert get_scenario("rt_test") is s
+    assert "rt_test" in list_scenarios()
+    s2 = scenario_from_json(scenario_to_json(s))
+    assert s2 == s                                     # dataclass equality
+    l1, t1 = jax.tree_util.tree_flatten(s)
+    l2, t2 = jax.tree_util.tree_flatten(s2)
+    assert t1 == t2 and l1 == l2                       # identical pytree
+
+
+def test_registry_rejects_silent_overwrite_and_unknown():
+    s = Scenario(name="dup_test")
+    register_scenario(s)
+    with pytest.raises(ValueError):
+        register_scenario(Scenario(name="dup_test", prog_sigma=0.1))
+    register_scenario(Scenario(name="dup_test", prog_sigma=0.1),
+                      overwrite=True)
+    assert get_scenario("dup_test").prog_sigma == 0.1
+    with pytest.raises(KeyError):
+        get_scenario("no_such_scenario")
+    with pytest.raises(ValueError):
+        scenario_from_json(json.dumps({"name": "x", "bogus_field": 1.0}))
+
+
+def test_scenario_leaf_dtype_pinning():
+    """Scenario(prog_sigma=0) and Scenario(prog_sigma=0.0) must flatten to
+    identical leaves, or sweeps would retrace per level."""
+    a = jax.tree_util.tree_flatten(Scenario(name="x", prog_sigma=0))
+    b = jax.tree_util.tree_flatten(Scenario(name="x", prog_sigma=0.0))
+    assert a == b
+    assert isinstance(Scenario(name="x", drift_t=100).drift_t, float)
+
+
+# --------------------------------------------------------------------------- #
+# Perturbation semantics
+# --------------------------------------------------------------------------- #
+def test_fault_masks_deterministic_disjoint_and_nested():
+    key = jax.random.PRNGKey(3)
+    on1, off1 = sample_fault_masks(key, (64, 64), 0.05, 0.1)
+    on2, off2 = sample_fault_masks(key, (64, 64), 0.05, 0.1)
+    assert np.array_equal(np.asarray(on1), np.asarray(on2))
+    assert np.array_equal(np.asarray(off1), np.asarray(off2))
+    assert not bool(jnp.any(on1 & off1))               # disjoint
+    # nested fault populations across rate sweeps (same key)
+    on_hi, _ = sample_fault_masks(key, (64, 64), 0.2, 0.1)
+    assert bool(jnp.all(on_hi | ~on1))                 # on1 subset of on_hi
+    assert abs(float(jnp.mean(on_hi)) - 0.2) < 0.02
+
+
+def test_perturb_ideal_is_bitwise_identity():
+    x, w = _data()
+    ex = _executor()
+    g = _plan_g(ex, w)
+    gp = perturb_conductance(g, ACFG, get_scenario("ideal"),
+                             jax.random.PRNGKey(0))
+    assert np.array_equal(np.asarray(gp), np.asarray(g))
+    gr = apply_read_noise(g, ACFG, 0.0, jax.random.PRNGKey(1))
+    assert np.array_equal(np.asarray(gr), np.asarray(g))
+
+
+def test_perturb_preserves_padding_and_range():
+    x, w = _data(K=70, N=3)                            # padT: zero-padded cells
+    ex = _executor()
+    g = np.asarray(_plan_g(ex, w))
+    assert (g == 0.0).any(), "test needs a padded plan"
+    sc = Scenario(name="hard", prog_sigma=0.3, p_stuck_on=0.05,
+                  p_stuck_off=0.05, read_sigma=0.2, n_levels=4,
+                  drift_nu=0.1, drift_t=1e5)
+    gp = perturb_conductance(jnp.asarray(g), ACFG, sc, jax.random.PRNGKey(2))
+    gp = np.asarray(apply_read_noise(gp, ACFG, sc.read_sigma,
+                                     jax.random.PRNGKey(3)))
+    assert np.array_equal(gp == 0.0, g == 0.0)         # no phantom cells
+    live = g > 0
+    assert gp[live].min() >= ACFG.g_min - 1e-12
+    assert gp[live].max() <= ACFG.g_max + 1e-12
+
+
+def test_quantize_levels_snap_count():
+    x, w = _data()
+    ex = _executor()
+    g = _plan_g(ex, w)
+    gq = perturb_conductance(g, ACFG, Scenario(name="q", n_levels=4),
+                             jax.random.PRNGKey(0))
+    lv = np.unique(np.round(np.asarray(gq[gq > 0]), 12))
+    assert len(lv) <= 4
+
+
+def test_drift_shrinks_differential_weight():
+    x, w = _data(K=64, N=4)
+    ex = _executor()
+    norms = []
+    for t in (0.0, 1e2, 1e4, 1e6):
+        ex.set_scenario(Scenario(name="d", drift_nu=0.1, drift_t=t),
+                        key=jax.random.PRNGKey(0))
+        y, _ = ex.raw_matmul(x, w, "t")
+        norms.append(float(jnp.linalg.norm(y)))
+    assert all(norms[i + 1] <= norms[i] + 1e-9 for i in range(len(norms) - 1))
+    assert norms[-1] < 0.9 * norms[0]
+
+
+def test_r_line_scale_degrades_circuit_output():
+    x, w = _data(K=64, N=2, B=2)
+    ex = _executor("circuit")
+    y0, _ = ex.raw_matmul(x, w, "t")
+    ex.set_scenario(get_scenario("ir_degraded"), key=jax.random.PRNGKey(0))
+    y1, _ = ex.raw_matmul(x, w, "t")
+    assert scenario_circuit_params(ex.cp, ex.scenario).r_bl == ex.cp.r_bl * 4.0
+    assert not np.allclose(np.asarray(y0), np.asarray(y1))
+
+
+# --------------------------------------------------------------------------- #
+# Executor integration: bit-identity, cache stability, read cycles
+# --------------------------------------------------------------------------- #
+def test_ideal_scenario_bit_identical_to_fast_path():
+    x, w = _data()
+    ex0 = _executor("emulator")
+    y0 = ex0.matmul(x, w, "t")
+    ex1 = _executor("emulator", emulator_params=ex0.emulator_params)
+    ex1.set_scenario(get_scenario("ideal"), key=jax.random.PRNGKey(9))
+    y1 = ex1.matmul(x, w, "t")
+    assert np.array_equal(np.asarray(y0), np.asarray(y1))
+
+
+def test_scenario_changes_do_not_invalidate_compile_caches():
+    x, w = _data()
+    ex = _executor("emulator")
+    y_plain = ex.matmul(x, w, "t")
+    fn_plain = ex._jit_fns["t"][1]
+    ex.set_scenario(Scenario(name="a", prog_sigma=0.05),
+                    key=jax.random.PRNGKey(3))
+    ya = ex.matmul(x, w, "t")
+    fn_sc = ex._sc_fns["t"][2]
+    ex.set_scenario(Scenario(name="b", prog_sigma=0.15, p_stuck_off=0.02,
+                             read_sigma=0.05, n_levels=8,
+                             drift_nu=0.02, drift_t=1e3),
+                    key=jax.random.PRNGKey(4))
+    yb = ex.matmul(x, w, "t")
+    # same compiled scenario forward, exactly one trace across scenarios
+    assert ex._sc_fns["t"][2] is fn_sc
+    assert fn_sc._cache_size() == 1
+    # the plain forward is untouched, and clearing the scenario reuses it
+    assert ex._jit_fns["t"][1] is fn_plain
+    ex.set_scenario(None)
+    y_back = ex.matmul(x, w, "t")
+    assert ex._jit_fns["t"][1] is fn_plain
+    np.testing.assert_array_equal(np.asarray(y_back), np.asarray(y_plain))
+    assert not np.allclose(np.asarray(ya), np.asarray(yb))
+
+
+def test_device_draw_deterministic_and_keyed():
+    x, w = _data()
+    sc = Scenario(name="det", prog_sigma=0.1)
+    ya = _executor().set_scenario(sc, key=jax.random.PRNGKey(5)).matmul(
+        x, w, "t")
+    yb = _executor().set_scenario(sc, key=jax.random.PRNGKey(5)).matmul(
+        x, w, "t")
+    yc = _executor().set_scenario(sc, key=jax.random.PRNGKey(6)).matmul(
+        x, w, "t")
+    np.testing.assert_array_equal(np.asarray(ya), np.asarray(yb))
+    assert not np.allclose(np.asarray(ya), np.asarray(yc))
+
+
+def test_read_noise_cycle_to_cycle_and_reproducible():
+    x, w = _data()
+    ex = _executor()
+    sc = Scenario(name="rn", read_sigma=0.1)
+    ex.set_scenario(sc, key=jax.random.PRNGKey(5))
+    y1 = np.asarray(ex.matmul(x, w, "t"))
+    y2 = np.asarray(ex.matmul(x, w, "t"))
+    assert not np.array_equal(y1, y2)                  # fresh draw per read
+    ex.set_scenario(sc, key=jax.random.PRNGKey(5))     # restart the sequence
+    np.testing.assert_array_equal(np.asarray(ex.matmul(x, w, "t")), y1)
+    np.testing.assert_array_equal(np.asarray(ex.matmul(x, w, "t")), y2)
+
+
+def test_noise_aware_calibration_runs_against_scenario():
+    x, w = _data(K=64, N=4, B=8)
+    ex = _executor()
+    ex.set_scenario(Scenario(name="cal", prog_sigma=0.1, read_sigma=0.05),
+                    key=jax.random.PRNGKey(8))
+    a, b = ex.calibrate(jax.random.PRNGKey(1), w, "t")
+    assert np.isfinite(a) and np.isfinite(b)
+    y = ex.matmul(x, w, "t")
+    assert np.all(np.isfinite(np.asarray(y)))
+    corr = np.corrcoef(np.asarray(y).ravel(),
+                       np.asarray(x @ w).ravel())[0, 1]
+    assert corr > 0.5                                  # still tracks digital
+
+
+# --------------------------------------------------------------------------- #
+# Sweeps
+# --------------------------------------------------------------------------- #
+def test_sweep_compiles_once_and_is_monotone():
+    x, w = _data(K=64, N=4, B=8)
+    ex = _executor()
+    ex.calibrate(jax.random.PRNGKey(2), w, "t")
+    sweep = ScenarioSweep(ex, w, "t", n_draws=4)
+    key = jax.random.PRNGKey(11)
+    outs = [np.asarray(sweep(x, Scenario(name="sw", prog_sigma=s),
+                             key)).mean(axis=0)
+            for s in (0.0, 0.05, 0.1, 0.2)]
+    assert sweep.trace_count == 1                      # one executable
+    assert sweep.cache_size() == 1
+    ref = outs[0]
+    errs = [float(np.linalg.norm(o - ref)) for o in outs]
+    assert errs[0] == 0.0
+    assert all(errs[i] <= errs[i + 1] + 1e-9 for i in range(len(errs) - 1))
+    assert errs[-1] > 0.0
+
+
+def test_sweep_rejects_static_r_line_scale():
+    x, w = _data(K=64, N=4, B=8)
+    sweep = ScenarioSweep(_executor(), w, "t", n_draws=2)
+    with pytest.raises(ValueError, match="r_line_scale"):
+        sweep(x, get_scenario("ir_degraded"), jax.random.PRNGKey(0))
+
+
+def test_sweep_draws_are_independent_devices():
+    x, w = _data(K=64, N=4, B=8)
+    ex = _executor()
+    sweep = ScenarioSweep(ex, w, "t", n_draws=3)
+    ys = np.asarray(sweep(x, Scenario(name="sw", prog_sigma=0.2),
+                          jax.random.PRNGKey(0)))
+    assert ys.shape[0] == 3
+    assert not np.allclose(ys[0], ys[1])
+    assert not np.allclose(ys[1], ys[2])

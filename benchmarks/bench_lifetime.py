@@ -1,0 +1,216 @@
+"""Fleet lifetime curves: how fast does serving accuracy decay as the
+crossbar fleet ages, and how much of it do the mitigations buy back?
+
+One fleet (fixed device key: same sigma draw, same stuck cells at every
+age) is walked through the drift timeline t = 1h / 1d / 1mo twice per
+backend:
+
+  * **unmitigated** -- calibrated once at deployment, then left alone;
+  * **mitigated**   -- stuck-fault-aware column remapping + noise-aware
+    recalibration at every checkpoint, plus (emulator backend)
+    serving-distribution retraining on the aged fleet
+    (``make_field_retrainer``), hot-swapped into the executor.
+
+The fleet's corner is a per-tile scenario batch (``tile_scenarios``): a
+programming-sigma gradient across output groups plus uniform stuck-off
+rate and drift, so the bench exercises heterogeneity, remapping and the
+scheduler together.  accuracy = 1 / (1 + NRMSE) against the **young
+ideal circuit output** (calibrated): the ground-truth computation the
+fleet performed on day zero is the thing lifetime management tries to
+preserve, for both backends.
+
+Asserted (exit 1 on violation):
+  * mitigation strictly dominates at every drift checkpoint, both backends;
+  * each lifetime walk reuses ONE compiled scenario forward (ages,
+    remaps, recalibrations and hot-swapped retrained params are all
+    traced arguments);
+  * the ideal scenario with the identity permutation is bit-identical to
+    the plain serving fast path.
+
+CSV lines to stdout + results/lifetime_<label>.json.
+
+  PYTHONPATH=src python -m benchmarks.bench_lifetime [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import QUICK, get_emulator
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import CASE_A, EmulatorTrainConfig
+from repro.core.analog import AnalogExecutor
+from repro.nonideal import (LifetimeScheduler, make_field_retrainer,
+                            tile_scenarios)
+from repro.nonideal.lifetime import DEFAULT_TIMELINE
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+P_STUCK_OFF = 0.04
+DRIFT_NU = 0.05
+SIGMA_LO, SIGMA_HI = 0.02, 0.08        # per-tile fab gradient
+
+# CI-budget emulator: enough training that the model floor sits well below
+# the aging signal (the 2-epoch bench_speed SMOKE net is too coarse here)
+LIFETIME_QUICK = EmulatorTrainConfig(n_train=4_000, n_test=500, epochs=80,
+                                     lr=2e-3, lr_halve_at=(40, 60, 72),
+                                     batch_size=512)
+
+
+def _accuracy(y: np.ndarray, ref: np.ndarray) -> float:
+    nrmse = float(np.linalg.norm(np.asarray(y) - ref)
+                  / max(np.linalg.norm(ref), 1e-12))
+    return 1.0 / (1.0 + nrmse)
+
+
+def _fleet_scenario(nb: int, no: int):
+    """Per-tile aging corner: sigma gradient across output groups, uniform
+    stuck-off rate and drift exponent."""
+    sig = np.broadcast_to(np.linspace(SIGMA_LO, SIGMA_HI, no), (nb, no))
+    return tile_scenarios(nb, no, name="fleet", prog_sigma=sig,
+                          p_stuck_off=P_STUCK_OFF, drift_nu=DRIFT_NU)
+
+
+def _make_executor(backend: str, eparams) -> AnalogExecutor:
+    return AnalogExecutor(
+        acfg=AnalogConfig(backend=backend), geom=CASE_A,
+        emulator_params=eparams if backend == "emulator" else None,
+        use_pallas=False)
+
+
+def _ideal_bit_identity(backend: str, eparams, x, w, tag: str) -> bool:
+    """Scenario forward at the ideal point (identity permutation, zero
+    read sigma, current params as traced args) vs the plain fast path."""
+    ex = _make_executor(backend, eparams)
+    y_plain = np.asarray(ex.matmul(x, w, tag))
+    plan = ex._plan_for(w, tag)
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    ep = ex.emulator_params if backend == "emulator" else {}
+    y_sc = ex._jit_sc_for(tag, w)(
+        x2, jnp.float32(1.0), jnp.float32(0.0), plan.g_feat,
+        jnp.float32(0.0), jax.random.PRNGKey(0),
+        jnp.arange(plan.N, dtype=jnp.int32), ep)
+    return bool(np.array_equal(np.asarray(y_sc), y_plain))
+
+
+def run(quick: bool = False, seed: int = 0):
+    geom = CASE_A
+    tcfg = LIFETIME_QUICK if quick else QUICK
+    res = get_emulator(geom.name, tcfg, seed)
+    key = jax.random.PRNGKey(seed)
+    K, N, B = (64, 8, 4) if quick else (128, 16, 8)
+    calib_n = 32 if quick else 64
+    w = jax.random.normal(key, (K, N)) * 0.2
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, K)) * 0.5
+    k_fleet = jax.random.fold_in(key, 2)   # ONE fleet for every run
+
+    # tile lattice of the (K, N) plan under this geometry
+    probe = _make_executor("analytic", None)._plan_for(w, "probe")
+    fleet = _fleet_scenario(probe.NB, probe.NO)
+
+    # ground-truth reference: the young ideal fleet through the circuit
+    # solver, calibrated -- what the hardware computed on day zero
+    exc = _make_executor("circuit", None)
+    exc.calibrate(jax.random.fold_in(key, 9), w, "ref", n=calib_n)
+    ref = np.asarray(exc.matmul(x, w, "ref"))
+
+    curves = []
+    for backend in ("emulator", "circuit"):
+        retrain = None
+        if backend == "emulator":
+            retrain = make_field_retrainer(jax.random.fold_in(key, 4))
+
+        runs = {}
+        for mode, kwargs in (
+                ("unmitigated", dict(remap=False, recalibrate=False,
+                                     retrain=None)),
+                ("mitigated", dict(remap=True, recalibrate=True,
+                                   retrain=retrain))):
+            ex = _make_executor(backend, res.params)
+            sched = LifetimeScheduler(ex, fleet, timeline=DEFAULT_TIMELINE,
+                                      key=k_fleet, calib_n=calib_n, **kwargs)
+            recs = sched.run(w, "life", x)
+            runs[mode] = [{"label": r["label"], "t": r["t"],
+                           "retrained": r["retrained"],
+                           "accuracy": _accuracy(r["y"], ref)}
+                          for r in recs]
+            runs[mode + "_compiled_once"] = \
+                ex._sc_fns["life"][2]._cache_size() == 1
+
+        dominates = [m["accuracy"] > u["accuracy"]
+                     for u, m in zip(runs["unmitigated"][1:],
+                                     runs["mitigated"][1:])]
+        curves.append({
+            "backend": backend,
+            "timeline": [{"label": l, "t": t} for l, t in DEFAULT_TIMELINE],
+            "unmitigated": runs["unmitigated"],
+            "mitigated": runs["mitigated"],
+            "dominates_at_every_checkpoint": all(dominates),
+            "compiled_once": (runs["unmitigated_compiled_once"]
+                              and runs["mitigated_compiled_once"]),
+            "ideal_bit_identical": _ideal_bit_identity(
+                backend, res.params, x, w, "ident"),
+        })
+    return curves
+
+
+def write_json(curves, label: str, quick: bool, seed: int) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"lifetime_{label}.json")
+    doc = {"schema": 1,
+           "label": label,
+           "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+           "jax_backend": jax.default_backend(),
+           "quick": quick,
+           "seed": seed,
+           "fleet": {"p_stuck_off": P_STUCK_OFF, "drift_nu": DRIFT_NU,
+                     "prog_sigma": [SIGMA_LO, SIGMA_HI],
+                     "per_tile": True},
+           "metric": "accuracy = 1/(1+NRMSE) vs the calibrated young-ideal "
+                     "circuit output; mitigated = remap + recalibrate (+ "
+                     "field retraining on the emulator backend)",
+           "curves": curves}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return path
+
+
+def main(quick: bool = False, seed: int = 0, label: str | None = None):
+    curves = run(quick=quick, seed=seed)
+    for c in curves:
+        for u, m in zip(c["unmitigated"], c["mitigated"]):
+            print(f"lifetime_{c['backend']},{u['label']},"
+                  f"{u['accuracy']:.4f},{m['accuracy']:.4f},"
+                  f"{int(m['retrained'])}")
+        print(f"lifetime_{c['backend']}_dominates,"
+              f"{int(c['dominates_at_every_checkpoint'])},bool")
+        print(f"lifetime_{c['backend']}_compiled_once,"
+              f"{int(c['compiled_once'])},bool")
+        print(f"lifetime_{c['backend']}_ideal_bit_identical,"
+              f"{int(c['ideal_bit_identical'])},bool")
+    path = write_json(curves, label or ("quick" if quick else "full"),
+                      quick, seed)
+    print(f"lifetime_json,{os.path.abspath(path)},written")
+    bad = [f"{c['backend']}:{k}" for c in curves
+           for k in ("dominates_at_every_checkpoint", "compiled_once",
+                     "ideal_bit_identical") if not c[k]]
+    if bad:
+        raise SystemExit(f"lifetime invariants violated: {bad}")
+    return curves
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: reduced emulator protocol, small matmul")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--label", default=None)
+    args = ap.parse_args()
+    main(quick=args.quick, seed=args.seed, label=args.label)

@@ -26,12 +26,21 @@ compiles once per shape.
 
 Non-idealities (docs/nonideal.md): ``set_scenario`` activates a
 ``repro.nonideal.Scenario`` (programming variation, read noise, stuck
-cells, drift, quantized levels, line resistance).  Perturbations apply at
-the conductance-plan level; on the serving fast path the perturbed
-conductances, read sigma and read key are traced arguments of a separate
-per-tag scenario forward, so switching scenarios never invalidates the
-compile caches, and the ideal scenario is bit-identical to the plain path.
-``calibrate`` is noise-aware (fits against the active scenario).
+cells, drift, quantized levels, line resistance; scalar or
+(NB, NO)-per-tile).  Perturbations apply at the conductance-plan level;
+on the serving fast path the perturbed conductances, read sigma, read
+key, fault-remap permutation and emulator params are traced arguments of
+a separate per-tag scenario forward, so switching scenarios never
+invalidates the compile caches, and the ideal scenario is bit-identical
+to the plain path.  ``calibrate`` is noise-aware (fits against the
+active scenario).
+
+Lifetime (docs/lifetime.md): ``fault_remap`` permutes output groups away
+from stuck-off cells (inverse gather folded into the plan's assemble),
+and ``set_emulator_params`` hot-swaps retrained emulator params -- both
+ride the scenario forward's traced arguments, so an entire
+drift-timeline walk (``repro.nonideal.lifetime``) compiles once per
+(tag, shape).
 
 Install into a model with ``use_dense_hook(executor.hook)`` -- every
 ``dense()`` in repro.models routes through here.
@@ -55,7 +64,7 @@ from repro.core.circuit import CircuitParams, block_response
 from repro.core.crossbar import ConductancePlan, build_conductance_plan
 from repro.core.emulator import normalize_features
 from repro.nonideal.perturb import (apply_read_noise, perturb_plan,
-                                    scenario_circuit_params)
+                                    remap_plan, scenario_circuit_params)
 from repro.nonideal.scenario import Scenario
 
 
@@ -87,28 +96,39 @@ _st_matmul.defvjp(_st_fwd, _st_bwd)
 
 # --------------------------------------------------------------------------- #
 # Scenario-path straight-through matmul.  The device-state perturbed
-# conductances (gf), read-noise sigma and read key enter as TRACED arguments,
-# so sweeping scenario parameters (or redrawing devices / read cycles) reuses
-# one compiled executable per (tag, shape) -- the non-ideality twin of the
-# calibration-affine-as-traced-scalars trick above.
+# conductances (gf), read-noise sigma, read key, fault-remap output gather
+# (operm) and emulator params (eparams; {} for non-emulator backends) enter
+# as TRACED arguments, so sweeping scenario parameters, redrawing devices /
+# read cycles, swapping remap permutations, or hot-swapping retrained
+# emulator params all reuse one compiled executable per (tag, shape) -- the
+# non-ideality twin of the calibration-affine-as-traced-scalars trick above.
 # --------------------------------------------------------------------------- #
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _st_matmul_sc(ex: "AnalogExecutor", tag: str, x2, w, a, b, gf, rsig, rkey):
-    plan = ex._plan_for(w, tag).with_g(gf, ex.acfg)
+def _st_matmul_sc(ex: "AnalogExecutor", tag: str, x2, w, a, b, gf, rsig, rkey,
+                  operm, eparams):
+    plan = ex._plan_for(w, tag).with_g(gf, ex.acfg).with_perm(operm)
     yv, xs = ex.raw_matmul(x2, w, tag, plan=plan, read_key=rkey,
-                           read_sigma=rsig)
+                           read_sigma=rsig,
+                           eparams=eparams if eparams else None)
     return (a * yv + b) * xs
 
 
-def _st_sc_fwd(ex, tag, x2, w, a, b, gf, rsig, rkey):
-    return _st_matmul_sc(ex, tag, x2, w, a, b, gf, rsig, rkey), (x2, w, gf, rkey)
+def _st_sc_fwd(ex, tag, x2, w, a, b, gf, rsig, rkey, operm, eparams):
+    return (_st_matmul_sc(ex, tag, x2, w, a, b, gf, rsig, rkey, operm,
+                          eparams),
+            (x2, w, gf, rsig, rkey, operm, eparams))
 
 
 def _st_sc_bwd(ex, tag, res, ct):
-    x2, w, gf, rkey = res              # straight-through digital grads; the
-    z = jnp.zeros((), ct.dtype)        # device draw is not a trained quantity
-    return (ct @ w.T, x2.T @ ct, z, z, jnp.zeros_like(gf), z,
-            np.zeros(rkey.shape, jax.dtypes.float0))
+    x2, w, gf, rsig, rkey, operm, eparams = res
+    # straight-through digital grads; the device draw, permutation and
+    # (frozen, serving-time) emulator params are not trained quantities
+    z = jnp.zeros((), ct.dtype)
+    return (ct @ w.T, x2.T @ ct, z, z, jnp.zeros_like(gf),
+            jnp.zeros_like(rsig),
+            np.zeros(rkey.shape, jax.dtypes.float0),
+            np.zeros(operm.shape, jax.dtypes.float0),
+            jax.tree.map(jnp.zeros_like, eparams))
 
 
 _st_matmul_sc.defvjp(_st_sc_fwd, _st_sc_bwd)
@@ -116,6 +136,17 @@ _st_matmul_sc.defvjp(_st_sc_fwd, _st_sc_bwd)
 
 @dataclass(eq=False)
 class AnalogExecutor:
+    """Stateful serving executor for analog matmuls (see module docstring).
+
+    Owns, per weight ``tag``: the cached conductance plan (``_plan_for``),
+    the compiled plain forward (``_jit_for``), the compiled scenario
+    forward (``_jit_sc_for``), the device-state perturbation cache
+    (``_scenario_plan``) and the per-layer calibration affine.  Scenario
+    state is set with ``set_scenario``; retrained emulator params are
+    hot-swapped with ``set_emulator_params``; ``fault_remap`` turns on
+    stuck-fault-aware column remapping for scenarios with stuck-off cells
+    (docs/lifetime.md).
+    """
     acfg: AnalogConfig
     geom: BlockGeometry = CASE_A
     cp: CircuitParams = field(default_factory=CircuitParams)
@@ -127,6 +158,7 @@ class AnalogExecutor:
     use_pallas: Optional[bool] = None  # None = auto (TPU only)
     scenario: Optional[Scenario] = None          # device non-ideality corner
     scenario_key: Optional[jax.Array] = None     # device-draw base key
+    fault_remap: bool = False          # stuck-fault-aware column remapping
 
     def __post_init__(self):
         self._plans: Dict[str, Tuple[jax.Array, ConductancePlan]] = {}
@@ -139,6 +171,7 @@ class AnalogExecutor:
         # and off never invalidates either compile cache)
         self._pert_cache: Dict[str, tuple] = {}
         self._sc_fns: Dict[str, tuple] = {}
+        self._cal_fns: Dict[str, tuple] = {}
         self._read_calls = 0
         if self.scenario_key is None:
             self.scenario_key = jax.random.PRNGKey(0)
@@ -155,13 +188,30 @@ class AnalogExecutor:
 
         Clears the perturbed-conductance cache and resets the read-cycle
         counter, but does NOT touch any compiled forward: scenario
-        parameters, fault draws and read keys are traced arguments of the
-        scenario path, so switching scenarios reuses the executable."""
+        parameters, fault draws, read keys and remap permutations are
+        traced arguments of the scenario path, so switching scenarios
+        reuses the executable.  Keeping ``key`` fixed across calls models
+        the SAME fabricated fleet under different conditions (aging a
+        fleet = same key, growing ``drift_t``); a new ``key`` fabricates a
+        new fleet.  Per-tile scenario batches (``tile_scenarios``) and
+        scalar scenarios are both accepted."""
         self.scenario = scenario
         if key is not None:
             self.scenario_key = key
         self._pert_cache.clear()
         self._read_calls = 0
+        return self
+
+    def set_emulator_params(self, params: dict) -> "AnalogExecutor":
+        """Hot-swap trained emulator params (drift-scheduled retraining).
+
+        The scenario forward takes the params as TRACED arguments, so the
+        swap reuses its compiled executable -- recalibrate + retrain
+        across a drift timeline compiles exactly once per (tag, shape).
+        The plain (no-scenario) forward bakes params in as constants for
+        speed, so it is dropped here and lazily rebuilt on next use."""
+        self.emulator_params = params
+        self._jit_fns.clear()
         return self
 
     def _tag_key(self, tag: str) -> jax.Array:
@@ -179,19 +229,27 @@ class AnalogExecutor:
         return k
 
     def _scenario_plan(self, tag: str, w: jax.Array) -> ConductancePlan:
-        """Device-state perturbed plan, computed once per (tag, plan,
-        scenario) and reused -- as a stable object, so downstream
-        identity-keyed caches (_pre_for) hit across eager calls, and as the
-        source of the traced conductance buffer for the compiled scenario
-        forward."""
+        """Device-state perturbed (and, with ``fault_remap``, stuck-fault
+        remapped) plan, computed once per (tag, plan, scenario) and reused
+        -- as a stable object, so downstream identity-keyed caches
+        (_pre_for) hit across eager calls, and as the source of the traced
+        conductance / permutation buffers for the compiled scenario
+        forward.  ``out_perm`` is always set on the result (identity when
+        remapping is off or the scenario has no stuck-off faults) so the
+        scenario forward sees one stable argument signature."""
         plan = self._plan_for(w, tag)
         ent = self._pert_cache.get(tag)
-        if ent is not None and ent[0] is plan and ent[1] is self.scenario:
-            return ent[2]
+        if ent is not None and ent[0] is plan and ent[1] is self.scenario \
+                and ent[2] == self.fault_remap:
+            return ent[3]
         with jax.ensure_compile_time_eval():
-            pplan = perturb_plan(plan, self.acfg, self.scenario,
-                                 self._tag_key(tag))
-        self._pert_cache[tag] = (plan, self.scenario, pplan)
+            key = self._tag_key(tag)
+            base, operm = plan, jnp.arange(plan.N, dtype=jnp.int32)
+            if self.fault_remap and self.scenario.has_stuck_off:
+                base, operm = remap_plan(plan, self.acfg, self.scenario, key)
+            pplan = perturb_plan(base, self.acfg, self.scenario,
+                                 key).with_perm(operm)
+        self._pert_cache[tag] = (plan, self.scenario, self.fault_remap, pplan)
         return pplan
 
     def _cp_effective(self) -> CircuitParams:
@@ -222,16 +280,20 @@ class AnalogExecutor:
             self._g0_cache.pop(tag, None)
         return plan
 
-    def _blocklast_aux(self) -> dict:
-        assert self.emulator_params is not None, \
+    def _blocklast_aux(self, eparams: Optional[dict] = None) -> dict:
+        """Stage-collapsed emulator weights (conv4xbar.blocklast_weights),
+        cached per params binding.  ``eparams`` overrides the executor's
+        own params (the scenario forward passes hot-swappable traced
+        params through here)."""
+        params = self.emulator_params if eparams is None else eparams
+        assert params is not None, \
             "emulator backend needs trained params (core.emulator)"
-        if any(_is_tracer(v) for v in self.emulator_params.values()):
-            return conv4xbar.blocklast_weights(self.emulator_params, self.geom)
-        if self._aux is None or self._aux_src is not self.emulator_params:
+        if any(_is_tracer(v) for v in params.values()):
+            return conv4xbar.blocklast_weights(params, self.geom)
+        if self._aux is None or self._aux_src is not params:
             with jax.ensure_compile_time_eval():
-                self._aux = conv4xbar.blocklast_weights(self.emulator_params,
-                                                        self.geom)
-            self._aux_src = self.emulator_params
+                self._aux = conv4xbar.blocklast_weights(params, self.geom)
+            self._aux_src = params
             self._g0_cache.clear()
         return self._aux
 
@@ -253,7 +315,9 @@ class AnalogExecutor:
     # ------------------------------------------------------------------ #
     # Backends
     # ------------------------------------------------------------------ #
-    def _backend_fn(self):
+    def _backend_fn(self, eparams: Optional[dict] = None):
+        """Block-response function of the configured backend; ``eparams``
+        overrides the executor's emulator params (hot-swap path)."""
         b = self.acfg.backend
         cp = self._cp_effective()
         if b == "circuit":
@@ -261,38 +325,41 @@ class AnalogExecutor:
         if b == "analytic":
             return lambda x, p: analytic_block_response(x, cp, p)
         if b == "emulator":
-            assert self.emulator_params is not None, \
+            params = self.emulator_params if eparams is None else eparams
+            assert params is not None, \
                 "emulator backend needs trained params (core.emulator)"
             ap = (conv4xbar.apply_fused if self.fused_emulator
                   else conv4xbar.apply)
-            return lambda x, p: ap(self.emulator_params,
+            return lambda x, p: ap(params,
                                    normalize_features(x, self.acfg), p)
         raise ValueError(b)
 
-    def block_outputs(self, x: jax.Array) -> jax.Array:
+    def block_outputs(self, x: jax.Array,
+                      eparams: Optional[dict] = None) -> jax.Array:
         """x: (NBLK, 2, D, H, W) raw-feature block tensors -> (NBLK, O)."""
         periph = jnp.concatenate(
             [jnp.ones((x.shape[0], 1), x.dtype),
              jnp.zeros((x.shape[0], 1), x.dtype)], axis=-1)
-        return self._backend_fn()(x, periph)
+        return self._backend_fn(eparams)(x, periph)
 
     def _pallas_enabled(self) -> bool:
         if self.use_pallas is not None:
             return self.use_pallas
         return jax.default_backend() == "tpu"
 
-    def _eval_blocks(self, plan: ConductancePlan,
-                     vb01: jax.Array) -> jax.Array:
+    def _eval_blocks(self, plan: ConductancePlan, vb01: jax.Array,
+                     eparams: Optional[dict] = None) -> jax.Array:
         """vb01: (M, NB, D, H) wordline drive in [0, 1] -> (M*NB*NO, no)."""
         if self.acfg.backend == "emulator" and self.fast_path \
                 and self._pallas_enabled():
             from repro.kernels.emulator_block import emulator_block_grid
+            params = self.emulator_params if eparams is None else eparams
             M = vb01.shape[0]
             g = plan.g_norm.reshape((plan.n_blocks,) + plan.g_norm.shape[2:])
-            y = emulator_block_grid(self.emulator_params, vb01, g, self.geom)
+            y = emulator_block_grid(params, vb01, g, self.geom)
             return y.reshape(M * plan.n_blocks, -1)
         x = plan.build_x(vb01 * self.acfg.v_read)
-        return self.block_outputs(x.astype(jnp.float32))
+        return self.block_outputs(x.astype(jnp.float32), eparams)
 
     def _drive01(self, u01: jax.Array) -> jax.Array:
         """Gate-overdrive wordline biasing (AnalogConfig.wl_overdrive): map
@@ -309,7 +376,9 @@ class AnalogExecutor:
     def raw_matmul(self, x2d: jax.Array, w: jax.Array, tag: str = "",
                    plan: Optional[ConductancePlan] = None,
                    read_key: Optional[jax.Array] = None,
-                   read_sigma=None) -> Tuple[jax.Array, jax.Array]:
+                   read_sigma=None,
+                   eparams: Optional[dict] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
         """Analog forward for (B,K) @ (K,N): dual-rail inputs, tiled blocks,
         digital block-group accumulation. Output in volts (uncalibrated).
 
@@ -319,10 +388,14 @@ class AnalogExecutor:
         other backends stack the rails on the batch axis.
 
         `plan` overrides the cached conductance plan (repro.nonideal passes
-        device-perturbed plans); with `plan=None` and an active scenario the
-        device-state perturbation is applied here, inside the trace.
+        device-perturbed, possibly fault-remapped plans); with `plan=None`
+        and an active scenario the device-state perturbation (and, with
+        `fault_remap`, the remap) is applied here, inside the trace.
         `read_key`/`read_sigma` add one cycle-to-cycle read-noise draw on
-        top of whatever plan is in effect."""
+        top of whatever plan is in effect (`read_sigma` may be per-tile).
+        `eparams` overrides the executor's emulator params -- the scenario
+        forward passes hot-swapped retrained params through here as traced
+        arguments."""
         if plan is None:
             plan = self._plan_for(w, tag)
             sc = self.scenario
@@ -332,7 +405,7 @@ class AnalogExecutor:
                 else:
                     plan = perturb_plan(plan, self.acfg, sc,
                                         self._tag_key(tag))
-                if read_key is None and sc.read_sigma > 0.0:
+                if read_key is None and sc.has_read_noise:
                     read_key, read_sigma = self._next_read_key(), sc.read_sigma
         if read_key is not None:
             rs = 0.0 if read_sigma is None else read_sigma
@@ -344,7 +417,7 @@ class AnalogExecutor:
         x_scale = jnp.maximum(jnp.max(jnp.abs(x2d)), 1e-9)
         if self.acfg.backend == "emulator" and self.fast_path \
                 and not self._pallas_enabled():
-            aux = self._blocklast_aux()
+            aux = self._blocklast_aux(eparams)
             pre = self._pre_for(plan, tag, aux)
             u = plan.tile_v(self._drive01(jnp.abs(x2d) / x_scale), 1.0)
             pos = plan.tile_v((x2d > 0).astype(jnp.float32), 1.0)
@@ -354,7 +427,7 @@ class AnalogExecutor:
         rails = jnp.concatenate([jnp.clip(x2d, 0.0, None),
                                  jnp.clip(-x2d, 0.0, None)], axis=0)
         vb01 = plan.tile_v(self._drive01(rails / x_scale), 1.0)  # (2B,NB,D,H)
-        outs = self._eval_blocks(plan, vb01.astype(jnp.float32))
+        outs = self._eval_blocks(plan, vb01.astype(jnp.float32), eparams)
         y = plan.assemble(outs)                       # (2B, N)
         return y[:B] - y[B:], x_scale
 
@@ -369,13 +442,17 @@ class AnalogExecutor:
         xc = jax.random.normal(key, (n, w.shape[0])) * 0.5
         sc = self.scenario
         if sc is not None and not sc.is_ideal:
-            draws = max(1, noise_draws) if sc.read_sigma > 0.0 else 1
+            draws = max(1, noise_draws) if sc.has_read_noise else 1
             keys = jax.random.split(
                 jax.random.fold_in(self.scenario_key, 0xCA11B), draws)
-            fn = jax.jit(jax.vmap(
-                lambda kk: self.raw_matmul(xc, w, tag, read_key=kk,
-                                           read_sigma=sc.read_sigma)))
-            yvs, xss = fn(keys)
+            pplan = self._scenario_plan(tag, w)
+            ep = (self.emulator_params
+                  if self.acfg.backend == "emulator" else {})
+            rsig = jnp.broadcast_to(
+                jnp.asarray(sc.read_sigma, jnp.float32),
+                (pplan.NB, pplan.NO))
+            yvs, xss = self._jit_cal_for(tag, w)(
+                xc, pplan.g_feat, rsig, keys, pplan.out_perm, ep)
             yv, xs = yvs.mean(axis=0), xss[0]
         else:
             yv, xs = jax.jit(lambda xx: self.raw_matmul(xx, w, tag))(xc)
@@ -398,23 +475,53 @@ class AnalogExecutor:
         self._jit_fns[tag] = (w, fn)
         return fn
 
+    def _jit_cal_for(self, tag: str, w: jax.Array) -> Callable:
+        """Per-(tag, weight-binding) calibration forward: the noise-draw
+        vmapped raw matmul against a scenario device, with conductances,
+        read sigma / keys, remap permutation and emulator params as
+        traced arguments.  Drift-timeline recalibration
+        (``nonideal.lifetime``) therefore compiles the fit's forward
+        exactly once per (tag, sample-count) instead of once per
+        checkpoint."""
+        ent = self._cal_fns.get(tag)
+        rls = self.scenario.r_line_scale if self.scenario else 1.0
+        if ent is not None and ent[0] is w and ent[1] == rls:
+            return ent[2]
+        wf = w.astype(jnp.float32)
+
+        def one(xc, gf, rsig, kk, operm, ep):
+            plan = self._plan_for(wf, tag).with_g(gf, self.acfg) \
+                .with_perm(operm)
+            return self.raw_matmul(xc, wf, tag, plan=plan, read_key=kk,
+                                   read_sigma=rsig,
+                                   eparams=ep if ep else None)
+
+        fn = jax.jit(lambda xc, gf, rsig, keys, operm, ep: jax.vmap(
+            lambda kk: one(xc, gf, rsig, kk, operm, ep))(keys))
+        self._cal_fns[tag] = (w, rls, fn)
+        return fn
+
     def _jit_sc_for(self, tag: str, w: jax.Array) -> Callable:
         """Per-(tag, weight-binding) scenario forward.  Perturbed
-        conductances, read sigma and read key are traced arguments, so
-        changing scenarios (or read cycles) reuses the executable; only a
-        line-resistance change rebuilds it (CircuitParams is static).
+        conductances, read sigma, read key, remap permutation and emulator
+        params are traced arguments, so changing scenarios, read cycles,
+        remappings, or hot-swapped retrained params reuses the executable;
+        only a line-resistance change rebuilds it (CircuitParams is
+        static).
 
-        The read-noise draw runs even for scenarios with read_sigma == 0
-        (exact identity there): a g_feat-sized threefry sample is tens of
-        microseconds against a millisecond-scale matmul, and keeping it
+        The read-noise draw and the output gather run even for read_sigma
+        == 0 / identity permutations (exact identities there): a
+        g_feat-sized threefry sample and an (N,)-gather are tens of
+        microseconds against a millisecond-scale matmul, and keeping them
         unconditional preserves exactly ONE executable per tag."""
         ent = self._sc_fns.get(tag)
         rls = self.scenario.r_line_scale if self.scenario else 1.0
         if ent is not None and ent[0] is w and ent[1] == rls:
             return ent[2]
         wf = w.astype(jnp.float32)
-        fn = jax.jit(lambda x2, a, b, gf, rsig, rkey:
-                     _st_matmul_sc(self, tag, x2, wf, a, b, gf, rsig, rkey))
+        fn = jax.jit(lambda x2, a, b, gf, rsig, rkey, operm, ep:
+                     _st_matmul_sc(self, tag, x2, wf, a, b, gf, rsig, rkey,
+                                   operm, ep))
         self._sc_fns[tag] = (w, rls, fn)
         return fn
 
@@ -436,10 +543,17 @@ class AnalogExecutor:
         if _is_tracer(x2) or _is_tracer(w) or not tag:
             y = _st_matmul(self, tag, x2, w.astype(jnp.float32), af, bf)
         elif sc is not None and not sc.is_ideal:
-            y = self._jit_sc_for(tag, w)(
-                x2, af, bf, self._scenario_plan(tag, w).g_feat,
+            pplan = self._scenario_plan(tag, w)
+            ep = (self.emulator_params
+                  if self.acfg.backend == "emulator" else {})
+            # read sigma always enters tile-shaped so scalar and per-tile
+            # scenarios share ONE compiled forward per tag
+            rsig = jnp.broadcast_to(
                 jnp.asarray(sc.read_sigma, jnp.float32),
-                self._next_read_key())
+                (pplan.NB, pplan.NO))
+            y = self._jit_sc_for(tag, w)(
+                x2, af, bf, pplan.g_feat, rsig,
+                self._next_read_key(), pplan.out_perm, ep)
         else:
             y = self._jit_for(tag, w)(x2, af, bf)
         return y.reshape(*lead, w.shape[1]).astype(x.dtype)

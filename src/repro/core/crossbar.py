@@ -13,10 +13,11 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import AnalogConfig
 from repro.configs.rram_ps32 import BlockGeometry
@@ -119,6 +120,15 @@ class ConductancePlan:
     per-block (G+, G-) interleave run ONCE when a weight tag is bound, not
     on every forward call.  `g_feat` is indexed by block (NB * NO blocks)
     and broadcast over the batch lazily by whichever backend consumes it.
+
+    `out_perm` (optional) records a fault-aware remapping of logical
+    output columns onto physical block positions: `g_feat`'s NO axis holds
+    the *permuted* layout and `assemble` gathers outputs back into logical
+    order with `y[:, out_perm]`.  Remapping acts at output-group
+    granularity (whole blocks move; a block is the atomic unit every
+    backend evaluates, so moving one is bit-exact at the ideal point --
+    conv/FC feature mixing happens only *within* a block).  `out_perm` may
+    be a traced argument: permutation swaps never recompile consumers.
     """
     K: int
     N: int
@@ -129,10 +139,17 @@ class ConductancePlan:
     no: int                       # outputs per block
     g_feat: jax.Array             # (NB, NO, D, H, W=2*no) raw conductances [S]
     g_norm: jax.Array             # same, normalized to [0, 1] for the emulator
+    out_perm: Optional[jax.Array] = None   # (N,) logical col -> physical col
 
     @property
     def n_blocks(self) -> int:
         return self.NB * self.NO
+
+    def with_perm(self, out_perm: Optional[jax.Array]) -> "ConductancePlan":
+        """Same layout and conductances, different output gather.  The
+        caller is responsible for `g_feat` already holding the matching
+        permuted group layout (see `nonideal.perturb.remap_plan`)."""
+        return dataclasses.replace(self, out_perm=out_perm)
 
     def with_g(self, g_feat: jax.Array, acfg: AnalogConfig) -> "ConductancePlan":
         """Same block layout, different conductances (repro.nonideal injects
@@ -166,10 +183,15 @@ class ConductancePlan:
         return x.reshape(M * self.n_blocks, 2, self.D, self.rows, 2 * self.no)
 
     def assemble(self, outs: jax.Array) -> jax.Array:
-        """(M*NB*NO, no) block outputs -> (M, N) digital block-group sum."""
+        """(M*NB*NO, no) block outputs -> (M, N) digital block-group sum.
+        With `out_perm` set, physical block outputs are gathered back into
+        logical column order (the inverse of the fault-aware remap)."""
         M = outs.shape[0] // self.n_blocks
-        y = outs.reshape(M, self.NB, self.NO * self.no)[:, :, :self.N]
-        return y.sum(axis=1)
+        if self.out_perm is None:
+            y = outs.reshape(M, self.NB, self.NO * self.no)[:, :, :self.N]
+            return y.sum(axis=1)
+        y = outs.reshape(M, self.NB, self.NO * self.no).sum(axis=1)
+        return jnp.take(y, self.out_perm, axis=1)
 
 
 def build_conductance_plan(w: jax.Array, acfg: AnalogConfig,
@@ -198,3 +220,82 @@ def build_conductance_plan(w: jax.Array, acfg: AnalogConfig,
     g_norm = (g_feat - acfg.g_min) / (acfg.g_max - acfg.g_min)
     return ConductancePlan(K=K, N=N, rows=H, D=D, NB=NB, NO=NO, no=no,
                            g_feat=g_feat, g_norm=g_norm)
+
+
+# --------------------------------------------------------------------------- #
+# Stuck-fault-aware remapping (classic fault-tolerant mapping)
+# --------------------------------------------------------------------------- #
+def fault_aware_group_perm(g_feat: np.ndarray, stuck_off: np.ndarray,
+                           plan: ConductancePlan, acfg: AnalogConfig,
+                           top_q: float = 0.9
+                           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Permute logical output groups across physical block positions so
+    large-magnitude weights avoid stuck-at-G_off cells.
+
+    A cell stuck at G_off reads as weight zero: the damage it does equals
+    the conductance excess `g - g_min` the plan wanted to program there.
+    Remapping moves whole output groups (the blocks backends evaluate
+    atomically, so the move is bit-exact at the ideal point; with
+    `no == 1`, as in the paper's case-A geometry, that is per-column).
+    The assignment is lexicographic: first minimize the number of
+    top-`top_q`-quantile |w| cells landing on stuck-off sites, then the
+    total excess landing there -- greedy over logical groups in descending
+    order of top-weight mass, which pairs the most-vulnerable groups with
+    the cleanest physical positions first (rearrangement-inequality
+    heuristic).  Deterministic; the identity permutation falls out exactly
+    when no stuck-off cell overlaps any programmed cell.
+
+    Args:
+      g_feat:    (NB, NO, D, H, W) base-plan conductances (logical layout).
+      stuck_off: (NB, NO, D, H, W) boolean stuck-off mask at *physical*
+                 positions (from `nonideal.perturb.realized_fault_masks`).
+      plan:      the base plan (geometry only).
+      acfg:      conductance range (g_min for the excess measure).
+
+    Returns `(out_perm, gperm, ginv)` int arrays: `out_perm[j]` = physical
+    column of logical column j (the `assemble` gather), `gperm[q]` =
+    physical group of logical group q, `ginv[p]` = logical group at
+    physical position p (the `g_feat` NO-axis gather).
+    """
+    g = np.asarray(g_feat, np.float64)
+    off = np.asarray(stuck_off, bool)
+    span = float(acfg.g_max - acfg.g_min)
+    live = g > 0.0
+    # damage a stuck-off cell does = programmed excess over g_min, in
+    # weight units; padded sites (no physical cell) carry none
+    excess = np.where(live, (g - acfg.g_min) / span, 0.0)
+    pos_excess = excess[excess > 0.0]
+    if pos_excess.size == 0:
+        ident = np.arange(plan.NO, dtype=np.int32)
+        return np.arange(plan.N, dtype=np.int32), ident, ident.copy()
+    thr = np.quantile(pos_excess, top_q)
+    top = (excess >= thr) & live                       # top-decile |w| cells
+    # per-group flattening: (NB, NO, D, H, W) -> (NO, NB*D*H*W)
+    by_group = lambda a: a.transpose(1, 0, 2, 3, 4).reshape(plan.NO, -1)
+    fault = by_group(off)                              # physical positions
+    excess_g = by_group(excess)                        # logical groups
+    top_g = by_group(top).astype(np.float64)
+    dmg = np.einsum("pc,qc->qp", fault, excess_g)
+    hits = np.einsum("pc,qc->qp", fault, top_g)
+    big = dmg.max() + 1.0
+    cost = hits * big + dmg                            # lexicographic
+    # greedy: most-vulnerable logical groups pick first -- ordered by
+    # top-decile cell count FIRST (its own scale: a group's total excess
+    # routinely exceeds dmg.max(), which is damped by the sparse mask)
+    vbig = excess_g.sum(axis=1).max() + 1.0
+    vuln = top_g.sum(axis=1) * vbig + excess_g.sum(axis=1)
+    order = np.argsort(-vuln, kind="stable")
+    gperm = np.full(plan.NO, -1, dtype=np.int32)
+    free = np.ones(plan.NO, bool)
+    for q in order:
+        c = np.where(free, cost[q], np.inf)
+        best = c.min()
+        # prefer staying home on ties -> identity when fault-free
+        p = int(q) if (free[q] and c[q] <= best) else int(np.argmin(c))
+        gperm[q] = p
+        free[p] = False
+    ginv = np.empty_like(gperm)
+    ginv[gperm] = np.arange(plan.NO, dtype=np.int32)
+    cols = np.arange(plan.N, dtype=np.int32)
+    out_perm = gperm[cols // plan.no] * plan.no + cols % plan.no
+    return out_perm.astype(np.int32), gperm, ginv

@@ -31,9 +31,19 @@ def main():
                     help="device non-ideality scenario name from the "
                          "repro.nonideal registry (e.g. prog_mild, stressed); "
                          "requires a non-digital --analog-backend")
+    ap.add_argument("--age", type=float, default=None,
+                    help="seconds since the fleet was programmed: overrides "
+                         "the scenario's drift_t (serve an aged fleet; see "
+                         "docs/lifetime.md)")
+    ap.add_argument("--fault-remap", action="store_true",
+                    help="stuck-fault-aware column remapping: permute output "
+                         "columns so large weights avoid the scenario's "
+                         "stuck-off cells (requires --scenario)")
     args = ap.parse_args()
     if args.scenario and args.analog_backend == "digital":
         ap.error("--scenario requires a non-digital --analog-backend")
+    if (args.fault_remap or args.age is not None) and not args.scenario:
+        ap.error("--fault-remap / --age require --scenario")
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -91,8 +101,12 @@ def main():
         ex = AnalogExecutor(
             acfg=AnalogConfig(enabled=True, backend=args.analog_backend,
                               layers=("mlp",), scenario=args.scenario),
-            geom=CASE_A, emulator_params=eparams)
+            geom=CASE_A, emulator_params=eparams,
+            fault_remap=args.fault_remap)
         if ex.scenario is not None:
+            if args.age is not None:
+                from repro.nonideal import scenario_at_age
+                ex.scenario = scenario_at_age(ex.scenario, args.age)
             key, k_dev = jax.random.split(key)
             ex.set_scenario(ex.scenario, key=k_dev)
             print(f"analog scenario: {ex.scenario}")

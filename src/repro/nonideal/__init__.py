@@ -3,25 +3,38 @@
 Composable crossbar device corners (programming variation, read noise,
 stuck cells, retention drift, line resistance, quantized levels) applied at
 the conductance-plan level so one implementation serves the circuit,
-analytic and emulator backends.  See docs/nonideal.md.
+analytic and emulator backends.  Scenarios may be scalar (one corner for
+the whole plan) or (NB, NO)-tile-indexed batches (``tile_scenarios``:
+per-tile fab heterogeneity); ``remap_plan`` adds stuck-fault-aware column
+remapping and ``lifetime`` schedules recalibration / retraining across a
+drift timeline.  See docs/nonideal.md and docs/lifetime.md.
 """
 from repro.nonideal.data import (generate_dataset_nonideal,
                                  train_noise_aware_emulator)
+from repro.nonideal.lifetime import (DEFAULT_TIMELINE, LifetimeScheduler,
+                                     make_field_retrainer,
+                                     make_noise_aware_retrainer,
+                                     scenario_at_age)
 from repro.nonideal.perturb import (apply_read_noise, drift_factor,
                                     perturb_conductance, perturb_plan,
-                                    quantize_levels, sample_fault_masks,
+                                    quantize_levels, realized_fault_masks,
+                                    remap_plan, sample_fault_masks,
                                     scenario_circuit_params)
 from repro.nonideal.scenario import (BUILTIN_SCENARIOS, Scenario,
-                                     get_scenario, list_scenarios,
-                                     register_scenario, scenario_from_json,
-                                     scenario_to_json)
+                                     collapse_tiles, get_scenario,
+                                     list_scenarios, register_scenario,
+                                     scenario_from_json, scenario_to_json,
+                                     tile_scenarios)
 from repro.nonideal.sweep import ScenarioSweep
 
 __all__ = [
-    "BUILTIN_SCENARIOS", "Scenario", "ScenarioSweep", "apply_read_noise",
-    "drift_factor", "generate_dataset_nonideal", "get_scenario",
-    "list_scenarios", "perturb_conductance", "perturb_plan",
-    "quantize_levels", "register_scenario", "sample_fault_masks",
+    "BUILTIN_SCENARIOS", "DEFAULT_TIMELINE", "LifetimeScheduler", "Scenario",
+    "ScenarioSweep", "apply_read_noise", "collapse_tiles", "drift_factor",
+    "generate_dataset_nonideal", "get_scenario", "list_scenarios",
+    "make_field_retrainer", "make_noise_aware_retrainer",
+    "perturb_conductance", "perturb_plan",
+    "quantize_levels", "realized_fault_masks", "register_scenario",
+    "remap_plan", "sample_fault_masks", "scenario_at_age",
     "scenario_circuit_params", "scenario_from_json", "scenario_to_json",
-    "train_noise_aware_emulator",
+    "tile_scenarios", "train_noise_aware_emulator",
 ]

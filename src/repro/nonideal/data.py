@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import AnalogConfig
 from repro.configs.rram_ps32 import BlockGeometry, EmulatorTrainConfig
@@ -70,3 +71,76 @@ def train_noise_aware_emulator(key, geom: BlockGeometry, acfg: AnalogConfig,
                                      acfg, cp, scenario)
     return train_emulator(kt, geom, acfg, cp, tcfg, data=data,
                           log_every=log_every)
+
+
+def finetune_emulator(key, params: dict, geom: BlockGeometry,
+                      acfg: AnalogConfig, cp: CircuitParams,
+                      scenario: Scenario, n: int = 4096, epochs: int = 30,
+                      batch_size: int = 512, lr: float = 2e-4,
+                      data=None) -> dict:
+    """Warm-start adaptation of a trained emulator to a degraded corner.
+
+    Drift-scheduled retraining from scratch pays full model variance at
+    every checkpoint -- an independently trained net differs from the
+    serving net far more than the corner shifted.  Fine-tuning instead
+    takes a few low-lr Adam epochs from the CURRENT params, so the model
+    moves a short distance toward the degraded response surface (e.g. the
+    low-g region drift concentrates inputs into) and nowhere else.
+
+    ``data`` is an ``(X, Pf, Y)`` triple of normalized block features,
+    peripheral features and raw-volt circuit labels; when None, a
+    noise-aware sample of the aged corner is generated
+    (``generate_dataset_nonideal``).  ``lifetime.make_field_retrainer``
+    passes serving-distribution data instead -- the fleet's own drive
+    statistics against its own drawn devices -- which is what closes the
+    train/serve distribution gap.  Targets are raw volts (the input
+    params already predict volts; no standardization refold).  Returns
+    fresh params; the input dict is not mutated."""
+    import functools
+
+    from repro.core import conv4xbar
+
+    if data is None:
+        kd = jax.random.fold_in(key, 0xF17E)
+        data = generate_dataset_nonideal(kd, n, geom, acfg, cp, scenario)
+    X, Pf, Y = data
+    n = X.shape[0]
+    bs = min(batch_size, n)
+    steps = max(1, n // bs)
+
+    def loss_fn(p, xb, pb, yb):
+        return jnp.mean(jnp.square(conv4xbar.apply_fused(p, xb, pb) - yb))
+
+    @functools.partial(jax.jit, donate_argnums=(1, 2, 3))
+    def epoch_fn(perm, p, m, v, t0):
+        xb = X[perm[:steps * bs]].reshape((steps, bs) + X.shape[1:])
+        yb = Y[perm[:steps * bs]].reshape((steps, bs) + Y.shape[1:])
+        pb = Pf[perm[:steps * bs]].reshape((steps, bs) + Pf.shape[1:])
+
+        def step(carry, xs):
+            p, m, v, t = carry
+            xi, pi, yi = xs
+            l, g = jax.value_and_grad(loss_fn)(p, xi, pi, yi)
+            m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+            v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * jnp.square(b),
+                             v, g)
+            t = t + 1
+            bc1, bc2 = 1 - 0.9 ** t, 1 - 0.999 ** t
+            p = jax.tree.map(
+                lambda pp, mm, vv: pp - lr * (mm / bc1)
+                / (jnp.sqrt(vv / bc2) + 1e-8), p, m, v)
+            return (p, m, v, t), l
+
+        (p, m, v, t), ls = jax.lax.scan(step, (p, m, v, t0), (xb, pb, yb))
+        return p, m, v, t, ls.mean()
+
+    p = {k: jnp.array(v) for k, v in params.items()}      # private copy
+    m = jax.tree.map(jnp.zeros_like, p)
+    v = jax.tree.map(jnp.zeros_like, p)
+    t = jnp.zeros((), jnp.float32)
+    rng = np.random.default_rng(int(jax.random.randint(
+        jax.random.fold_in(key, 0x5EED), (), 0, 2**31 - 1)))
+    for _ in range(epochs):
+        perm = jnp.asarray(rng.permutation(n))
+        p, m, v, t, _ = epoch_fn(perm, p, m, v, t)
+    return p

@@ -1,0 +1,231 @@
+"""Fleet lifetime management: drift-scheduled recalibration / retraining.
+
+A deployed crossbar fleet ages: retention drift shrinks conductances as
+``g * (t / t0)^-nu``, while the programming-variation draw and the stuck
+fault population fixed at fabrication persist.  Serving accuracy decays
+not (mostly) because the hardware forgets, but because the *calibration
+and the emulator were fitted to the young device*.  This module walks a
+drift timeline (t = 1h / 1d / 1mo by default) and, at each checkpoint,
+applies the three mitigations the rest of the subsystem provides:
+
+  * **remap**    -- stuck-fault-aware column remapping
+                    (``perturb.remap_plan``, ``AnalogExecutor.fault_remap``)
+  * **recalibrate** -- noise-aware affine refit against the aged device
+                    (``AnalogExecutor.calibrate``)
+  * **retrain**  -- noise-aware emulator retraining on the aged corner,
+                    hot-swapped with ``AnalogExecutor.set_emulator_params``
+
+All three ride the executor's per-tag *scenario forward*, whose perturbed
+conductances, calibration affine, remap permutation and emulator params
+are traced arguments -- so an entire lifetime walk (ages x remaps x
+recalibrations x retrains) compiles exactly ONCE per (tag, shape).
+``benchmarks/bench_lifetime.py`` productionizes this into
+accuracy-vs-age curves with and without mitigation; docs/lifetime.md is
+the narrative version.
+
+The fleet identity lives in the executor's ``scenario_key``: the
+scheduler ages the scenario (rewrites ``drift_t``) under a FIXED key, so
+every checkpoint sees the same fabricated devices -- the same sigma draw,
+the same stuck cells -- just older.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nonideal.scenario import Scenario, collapse_tiles
+
+# Canonical drift checkpoints: (label, seconds since programming).
+DEFAULT_TIMELINE: Tuple[Tuple[str, float], ...] = (
+    ("1h", 3_600.0),
+    ("1d", 86_400.0),
+    ("1mo", 2_592_000.0),
+)
+
+
+def scenario_at_age(scenario: Scenario, t: float) -> Scenario:
+    """The same device corner, ``t`` seconds after programming.
+
+    Rewrites ``drift_t`` only (per-tile aware: for a tile-indexed batch
+    the age is broadcast to the (NB, NO) lattice so leaf avals stay
+    stable across checkpoints).  Everything else -- sigma, fault rates,
+    the device key held by the executor -- is unchanged: a fleet ages, it
+    is not refabricated."""
+    ts = scenario.tile_shape
+    tt = float(t) if ts is None else jnp.full(ts, float(t), jnp.float32)
+    return dataclasses.replace(scenario, drift_t=tt)
+
+
+def make_noise_aware_retrainer(geom, acfg, cp, key: jax.Array,
+                               n: int = 4096, epochs: int = 30,
+                               lr: float = 2e-4) -> Callable:
+    """Retrain callback for ``LifetimeScheduler``: warm-start fine-tuning
+    of the SERVING params on circuit data perturbed by the *aged* scenario
+    (``nonideal.data.finetune_emulator``).
+
+    Fine-tuning, not from-scratch retraining: an independently trained net
+    differs from the serving net by far more than aging shifted the
+    response surface, so scratch retraining pays full model variance at
+    every checkpoint and can *lose* accuracy.  A few low-lr epochs from
+    the current params track the drifting operating region and nothing
+    else.  (From-scratch remains available as
+    ``data.train_noise_aware_emulator`` for corners that change the
+    response function wholesale, e.g. large ``r_line_scale``.)
+
+    Tile-indexed scenario batches are collapsed to their mean-field
+    corner (the data generator samples block tensors with no (NB, NO)
+    lattice to index).  The key is fixed across checkpoints: common
+    random numbers keep the accuracy-vs-age curve free of data-draw
+    jitter."""
+    from repro.nonideal.data import finetune_emulator
+
+    def retrain(scenario: Scenario, t: float, ex, w, tag: str) -> dict:
+        return finetune_emulator(key, ex.emulator_params, geom, acfg, cp,
+                                 collapse_tiles(scenario), n=n,
+                                 epochs=epochs, lr=lr)
+
+    return retrain
+
+
+def make_field_retrainer(key: jax.Array, n: int = 192, epochs: int = 40,
+                         batch_size: int = 512, lr: float = 3e-4) -> Callable:
+    """Serving-distribution retrain callback: fine-tune the emulator on
+    the fleet's OWN aged blocks under its OWN drive statistics.
+
+    ``make_noise_aware_retrainer`` samples the corner's conductance
+    *distribution*; this one goes further and trains on the exact device
+    the executor serves: the cached scenario plan (device draw, drift,
+    remap included), driven by calibration-style inputs through the same
+    rail/tile path ``raw_matmul`` uses, labeled by the scenario-adjusted
+    circuit solver.  That closes the train/serve distribution gap -- the
+    deployed-fleet analogue of collecting input traces on your own
+    hardware and recalibrating against a SPICE reference.  ``n`` is the
+    number of (K,)-input probes; each contributes ``2 * n_blocks`` block
+    samples (both rails)."""
+    from repro.core.circuit import block_response
+    from repro.core.emulator import normalize_features
+    from repro.nonideal.data import finetune_emulator
+    from repro.nonideal.perturb import scenario_circuit_params
+
+    def retrain(scenario: Scenario, t: float, ex, w, tag: str) -> dict:
+        plan = ex._scenario_plan(tag, w)          # the fleet's aged devices
+        xc = jax.random.normal(jax.random.fold_in(key, 0xF1E1D),
+                               (n, w.shape[0])) * 0.5
+        x2 = xc.astype(jnp.float32)
+        x_scale = jnp.maximum(jnp.max(jnp.abs(x2)), 1e-9)
+        rails = jnp.concatenate([jnp.clip(x2, 0.0, None),
+                                 jnp.clip(-x2, 0.0, None)], axis=0)
+        vb01 = plan.tile_v(ex._drive01(rails / x_scale), 1.0)
+        xb = plan.build_x(vb01 * ex.acfg.v_read).astype(jnp.float32)
+        periph = jnp.concatenate([jnp.ones((xb.shape[0], 1), jnp.float32),
+                                  jnp.zeros((xb.shape[0], 1), jnp.float32)],
+                                 axis=-1)
+        cp_s = scenario_circuit_params(ex.cp, collapse_tiles(scenario))
+        y = jax.jit(lambda b, p: block_response(b, cp_s, p))(xb, periph)
+        data = (normalize_features(xb, ex.acfg), periph, y)
+        return finetune_emulator(key, ex.emulator_params, ex.geom, ex.acfg,
+                                 ex.cp, scenario, epochs=epochs,
+                                 batch_size=batch_size, lr=lr, data=data)
+
+    return retrain
+
+
+@dataclass
+class LifetimeScheduler:
+    """Walk an aging fleet through drift checkpoints, mitigating as it goes.
+
+    Attributes:
+      ex:          the serving ``AnalogExecutor`` to manage (mutated).
+      scenario:    the fleet's device corner at programming time (t = 0);
+                   scalar or per-tile (``tile_scenarios``).
+      timeline:    ``(label, seconds)`` checkpoints, ``DEFAULT_TIMELINE``
+                   = 1h / 1d / 1mo.
+      remap:       enable stuck-fault-aware column remapping.
+      recalibrate: refit the volts->logical affine at every checkpoint.
+      retrain:     optional ``(aged_scenario, t, ex, w, tag) -> params``
+                   callback (``make_field_retrainer`` fine-tunes on the
+                   fleet's own serving distribution;
+                   ``make_noise_aware_retrainer`` on the corner's
+                   distribution); returned params are hot-swapped via
+                   ``set_emulator_params``.
+      key:         fleet fabrication key (fixed: the same devices age
+                   through every checkpoint).
+      calib_n:     calibration sample count (keep small for the circuit
+                   backend; every sample is a block solve).
+
+    ``deploy`` programs the fleet at t = 0 and calibrates; ``step`` ages
+    it to one checkpoint; ``run`` does the whole walk and returns one
+    record per checkpoint.  None of it touches the executor's compiled
+    forwards: every intervention enters the scenario forward as a traced
+    argument (asserted by tests and bench_lifetime).
+    """
+    ex: "object"                       # AnalogExecutor (kept untyped: no cycle)
+    scenario: Scenario
+    timeline: Tuple[Tuple[str, float], ...] = DEFAULT_TIMELINE
+    remap: bool = True
+    recalibrate: bool = True
+    retrain: Optional[Callable[..., Optional[dict]]] = None
+    key: Optional[jax.Array] = None
+    calib_n: int = 128
+    history: List[dict] = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.key is None:
+            self.key = jax.random.PRNGKey(0)
+
+    def _calibrate(self, w, tag: str, step: int):
+        k = jax.random.fold_in(jax.random.fold_in(self.key, 0xCA1), step)
+        return self.ex.calibrate(k, w, tag, n=self.calib_n)
+
+    def deploy(self, w, tag: str) -> Scenario:
+        """Program the fleet (t = 0) and fit the initial calibration.
+
+        Both the mitigated and the unmitigated lifetime start here: a
+        freshly deployed fleet is always calibrated once.  A configured
+        ``retrain`` callback also runs at deployment -- field calibration
+        of the emulator against the fresh hardware, before drift sets in."""
+        self.ex.fault_remap = self.remap
+        sc0 = scenario_at_age(self.scenario, 0.0)
+        self.ex.set_scenario(sc0, key=self.key)
+        retrained = False
+        if self.retrain is not None:
+            params = self.retrain(sc0, 0.0, self.ex, w, tag)
+            if params is not None:
+                self.ex.set_emulator_params(params)
+                retrained = True
+        self._calibrate(w, tag, 0)
+        self.history = [{"label": "t0", "t": 0.0, "retrained": retrained}]
+        return sc0
+
+    def step(self, w, tag: str, label: str, t: float) -> Scenario:
+        """Age the fleet to ``t`` seconds and apply the configured
+        mitigations (retrain -> hot-swap -> recalibrate, in that order:
+        the affine must be fitted against the params that will serve)."""
+        aged = scenario_at_age(self.scenario, t)
+        self.ex.set_scenario(aged, key=self.key)   # same fleet, older
+        retrained = False
+        if self.retrain is not None:
+            params = self.retrain(aged, t, self.ex, w, tag)
+            if params is not None:
+                self.ex.set_emulator_params(params)
+                retrained = True
+        if self.recalibrate:
+            self._calibrate(w, tag, len(self.history))
+        self.history.append({"label": label, "t": t, "retrained": retrained})
+        return aged
+
+    def run(self, w, tag: str, x) -> List[dict]:
+        """Deploy, then walk every checkpoint; returns one record per
+        checkpoint: ``{"label", "t", "retrained", "y"}`` with ``y`` the
+        calibrated analog output of ``x @ w`` at that age."""
+        self.deploy(w, tag)
+        records = [{**self.history[-1], "y": self.ex.matmul(x, w, tag)}]
+        for label, t in self.timeline:
+            self.step(w, tag, label, t)
+            records.append({**self.history[-1],
+                            "y": self.ex.matmul(x, w, tag)})
+        return records

@@ -16,18 +16,33 @@ Each step is an exact bitwise identity at its ideal parameter value: the
 non-ideal candidate is computed on the side and selected with
 ``jnp.where(active, candidate, g)``, multiplicative factors are exactly 1.0
 at zero sigma, and the final clip is a no-op for in-range values.
+
+Per-tile heterogeneity: a tile-indexed scenario batch (``tile_scenarios``,
+leaves shaped ``(NB, NO)``) makes ``perturb_plan`` vmap the perturbation
+over the plan's tile lattice, so each (block-group, output-group) tile
+gets its own scenario level AND its own device key -- the same vmap
+machinery ``ScenarioSweep`` uses for multi-draw sweeps, turned inward.
+
+Fault-aware remapping: ``remap_plan`` predicts the exact stuck-off mask a
+``(plan, scenario, key)`` triple will realize (``realized_fault_masks``),
+asks the conductance planner for an output-group permutation that steers
+large-|w| columns away from stuck-off cells
+(``crossbar.fault_aware_group_perm``), and returns a permuted plan whose
+``out_perm`` gather undoes the move at assemble time.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import AnalogConfig
 from repro.core.circuit import CircuitParams
-from repro.core.crossbar import ConductancePlan
-from repro.nonideal.scenario import Scenario
+from repro.core.crossbar import ConductancePlan, fault_aware_group_perm
+from repro.nonideal.scenario import _LEAF_FIELDS, _leaf_dtype, Scenario
 
 
 def sample_fault_masks(key: jax.Array, shape, p_stuck_on, p_stuck_off):
@@ -83,18 +98,115 @@ def perturb_conductance(g: jax.Array, acfg: AnalogConfig,
 def apply_read_noise(g: jax.Array, acfg: AnalogConfig, read_sigma,
                      key: jax.Array) -> jax.Array:
     """Cycle-to-cycle multiplicative read noise; one key per read cycle.
-    Padded lattice sites (g == 0, no cell) stay exactly zero."""
+    ``read_sigma`` may be a scalar or an (NB, NO) per-tile array (aligned
+    against leading axes of ``g``).  Padded lattice sites (g == 0, no
+    cell) stay exactly zero."""
     eps = jax.random.normal(key, g.shape, jnp.float32)
-    gn = g * (1.0 + jnp.asarray(read_sigma, jnp.float32) * eps)
+    rs = jnp.asarray(read_sigma, jnp.float32)
+    if rs.ndim and rs.ndim < g.ndim:
+        rs = rs.reshape(rs.shape + (1,) * (g.ndim - rs.ndim))
+    gn = g * (1.0 + rs * eps)
     return jnp.where(g > 0.0, jnp.clip(gn, acfg.g_min, acfg.g_max), g)
+
+
+# --------------------------------------------------------------------------- #
+# Plan-level perturbation (scalar scenario or (NB, NO) per-tile batch)
+# --------------------------------------------------------------------------- #
+def _broadcast_scenario(scenario: Scenario, shape) -> Scenario:
+    """Every numeric leaf broadcast to ``shape`` (mixed scalar / per-tile
+    batches become uniformly tiled, ready to vmap over)."""
+    kw = {f: jnp.broadcast_to(
+        jnp.asarray(getattr(scenario, f), _leaf_dtype(f)), shape)
+        for f in _LEAF_FIELDS}
+    return dataclasses.replace(scenario, **kw)
+
+
+def _tile_keys(key: jax.Array, nb: int, no: int) -> jax.Array:
+    """One independent device-draw key per (NB, NO) tile."""
+    keys = jax.random.split(key, nb * no)
+    return keys.reshape((nb, no) + keys.shape[1:])
+
+
+def _check_tile_shape(plan: ConductancePlan, scenario: Scenario):
+    ts = scenario.tile_shape
+    if ts is not None and ts != (plan.NB, plan.NO):
+        raise ValueError(
+            f"per-tile scenario batch shaped {ts} does not match the "
+            f"plan's (NB, NO) = {(plan.NB, plan.NO)} tile lattice")
+    return ts
 
 
 def perturb_plan(plan: ConductancePlan, acfg: AnalogConfig,
                  scenario: Scenario, key: jax.Array) -> ConductancePlan:
     """Device-state-perturbed copy of a conductance plan (static layout
-    unchanged, so consumers compiled for the base plan's shapes are reused)."""
-    return plan.with_g(perturb_conductance(plan.g_feat, acfg, scenario, key),
-                       acfg)
+    unchanged, so consumers compiled for the base plan's shapes are
+    reused).
+
+    With a scalar scenario, one device key perturbs the whole plan.  With
+    a tile-indexed scenario batch (leaves shaped ``(NB, NO)``, see
+    ``tile_scenarios``) the perturbation is vmapped over the tile lattice:
+    tile (i, j) sees scenario level ``leaf[i, j]`` and its own key derived
+    from ``key``, so fab heterogeneity and per-die fault rates compose
+    with everything downstream unchanged."""
+    ts = _check_tile_shape(plan, scenario)
+    if ts is None:
+        return plan.with_g(
+            perturb_conductance(plan.g_feat, acfg, scenario, key), acfg)
+    scb = _broadcast_scenario(scenario, ts)
+    keys = _tile_keys(key, plan.NB, plan.NO)
+    per_tile = jax.vmap(jax.vmap(perturb_conductance,
+                                 in_axes=(0, None, 0, 0)),
+                        in_axes=(0, None, 0, 0))
+    return plan.with_g(per_tile(plan.g_feat, acfg, scb, keys), acfg)
+
+
+def realized_fault_masks(plan: ConductancePlan, scenario: Scenario,
+                         key: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """The exact (stuck_on, stuck_off) masks ``perturb_plan`` will realize
+    for this (plan, scenario, key) -- same key-split discipline, scalar or
+    per-tile.  The masks depend only on shapes and the key, never on the
+    conductance values, which is what lets the remapper move weights
+    around without moving the faults."""
+    ts = _check_tile_shape(plan, scenario)
+    shape = plan.g_feat.shape
+    if ts is None:
+        _, kf = jax.random.split(key)
+        return sample_fault_masks(kf, shape, scenario.p_stuck_on,
+                                  scenario.p_stuck_off)
+    scb = _broadcast_scenario(scenario, ts)
+    keys = _tile_keys(key, plan.NB, plan.NO)
+
+    def one(st: Scenario, k):
+        _, kf = jax.random.split(k)
+        return sample_fault_masks(kf, shape[2:], st.p_stuck_on,
+                                  st.p_stuck_off)
+
+    return jax.vmap(jax.vmap(one))(scb, keys)
+
+
+def remap_plan(plan: ConductancePlan, acfg: AnalogConfig, scenario: Scenario,
+               key: jax.Array, top_q: float = 0.9
+               ) -> Tuple[ConductancePlan, jax.Array]:
+    """Stuck-fault-aware remapped copy of a conductance plan.
+
+    Predicts the deterministic stuck-off mask for ``(plan, scenario,
+    key)``, computes an output-group permutation that keeps large-|w|
+    (top-``top_q``-quantile) weights off stuck-off cells
+    (``crossbar.fault_aware_group_perm``), and returns
+    ``(remapped_plan, out_perm)``: the remapped plan carries the permuted
+    conductance groups AND the ``out_perm`` inverse gather, so
+    ``plan.assemble`` hands back logically-ordered outputs.  Identity when
+    the scenario has no stuck-off faults.  Perturb the result with the
+    SAME ``key``: the masks depend only on shapes, so the faults land on
+    the same physical cells the permutation was planned against."""
+    if not scenario.has_stuck_off:
+        return plan, jnp.arange(plan.N, dtype=jnp.int32)
+    _, off = realized_fault_masks(plan, scenario, key)
+    out_perm, gperm, ginv = fault_aware_group_perm(
+        np.asarray(plan.g_feat), np.asarray(off), plan, acfg, top_q=top_q)
+    remapped = plan.with_g(jnp.take(plan.g_feat, jnp.asarray(ginv), axis=1),
+                           acfg).with_perm(jnp.asarray(out_perm, jnp.int32))
+    return remapped, remapped.out_perm
 
 
 def scenario_circuit_params(cp: CircuitParams,

@@ -8,6 +8,13 @@ compilation.  ``name`` and ``r_line_scale`` are static aux data:
 ``r_line_scale`` rewrites ``CircuitParams`` (a hashed static), so changing
 it recompiles the circuit backend by design.
 
+Leaves may be scalars (one corner for the whole plan) or ``(NB, NO)``
+arrays -- one value per (block-group, output-group) tile of a
+``ConductancePlan`` -- describing per-tile fab heterogeneity.  Build such
+tile-indexed scenario batches with ``tile_scenarios``; ``perturb_plan``
+vmaps the perturbation over the tile lattice so each tile gets its own
+sigma / drift / fault draw (docs/nonideal.md, "Per-tile heterogeneity").
+
 Fields (composition order documented in docs/nonideal.md):
   n_levels     -- quantized programming levels over [g_min, g_max]
                   (0 or 1 = continuous programming)
@@ -34,9 +41,11 @@ from __future__ import annotations
 import dataclasses
 import json
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 _LEAF_FIELDS: Tuple[str, ...] = (
     "prog_sigma", "read_sigma", "p_stuck_on", "p_stuck_off",
@@ -45,8 +54,35 @@ _LEAF_FIELDS: Tuple[str, ...] = (
 _AUX_FIELDS: Tuple[str, ...] = ("name", "r_line_scale")
 
 
+def _leaf_dtype(f: str):
+    return jnp.int32 if f == "n_levels" else jnp.float32
+
+
+def _leaf_max(v) -> float:
+    """Concrete max of a leaf (python scalar stays pure python: ``is_ideal``
+    sits on the serving hot path and must not sync the device per call)."""
+    if isinstance(v, (int, float)):
+        return float(v)
+    return float(jnp.max(jnp.asarray(v)))
+
+
+def _leaf_min(v) -> float:
+    if isinstance(v, (int, float)):
+        return float(v)
+    return float(jnp.min(jnp.asarray(v)))
+
+
 @dataclass(frozen=True)
 class Scenario:
+    """One device non-ideality corner (see module docstring for field
+    semantics and docs/nonideal.md for the composition order).
+
+    Numeric fields are pytree leaves and may be python scalars or
+    ``(NB, NO)`` jax arrays (per-tile heterogeneity, ``tile_scenarios``);
+    ``name`` and ``r_line_scale`` are static aux data.  Instances are
+    frozen: derive variants with ``dataclasses.replace`` (e.g. aging a
+    corner by rewriting ``drift_t``, as ``lifetime.scenario_at_age`` does).
+    """
     name: str = "ideal"
     prog_sigma: float = 0.0
     read_sigma: float = 0.0
@@ -63,18 +99,68 @@ class Scenario:
         # sweeps -- Scenario(prog_sigma=0) must not retrace vs prog_sigma=0.0
         for f in _LEAF_FIELDS:
             v = getattr(self, f)
-            if not isinstance(v, jax.Array):
+            if isinstance(v, jax.Array):
+                continue
+            if isinstance(v, (np.ndarray, list, tuple)):
+                object.__setattr__(self, f, jnp.asarray(v, _leaf_dtype(f)))
+            elif isinstance(v, (bool, int, float, np.number)):
                 object.__setattr__(
                     self, f, int(v) if f == "n_levels" else float(v))
+            # anything else (e.g. jax transform sentinels during pytree
+            # unflattening inside vmap) passes through untouched
         object.__setattr__(self, "r_line_scale", float(self.r_line_scale))
 
     @property
+    def tile_shape(self) -> Optional[Tuple[int, ...]]:
+        """``(NB, NO)`` for a tile-indexed scenario batch, None for a scalar
+        (whole-plan) scenario.  All non-scalar leaves must agree in shape."""
+        shapes = {tuple(getattr(self, f).shape) for f in _LEAF_FIELDS
+                  if isinstance(getattr(self, f), jax.Array)
+                  and getattr(self, f).ndim > 0}
+        if not shapes:
+            return None
+        if len(shapes) > 1:
+            raise ValueError(f"inconsistent per-tile leaf shapes: "
+                             f"{sorted(shapes)}")
+        return shapes.pop()
+
+    @property
     def is_ideal(self) -> bool:
-        """True iff every perturbation is an exact identity."""
-        return (self.prog_sigma == 0.0 and self.read_sigma == 0.0
-                and self.p_stuck_on == 0.0 and self.p_stuck_off == 0.0
-                and (self.drift_nu == 0.0 or self.drift_t <= 0.0)
-                and self.r_line_scale == 1.0 and self.n_levels < 2)
+        """True iff every perturbation is an exact identity (for per-tile
+        batches: at every tile).  Cached -- the check runs once per
+        Scenario object, not once per matmul call."""
+        c = self.__dict__.get("_is_ideal")
+        if c is None:
+            c = (_leaf_max(self.prog_sigma) == 0.0
+                 and _leaf_max(self.read_sigma) == 0.0
+                 and _leaf_max(self.p_stuck_on) == 0.0
+                 and _leaf_max(self.p_stuck_off) == 0.0
+                 and ((_leaf_max(self.drift_nu) == 0.0
+                       and _leaf_min(self.drift_nu) == 0.0)
+                      or _leaf_max(self.drift_t) <= 0.0)
+                 and self.r_line_scale == 1.0
+                 and _leaf_max(self.n_levels) < 2)
+            object.__setattr__(self, "_is_ideal", c)
+        return c
+
+    @property
+    def has_read_noise(self) -> bool:
+        """True if any tile draws cycle-to-cycle read noise (cached)."""
+        c = self.__dict__.get("_has_read_noise")
+        if c is None:
+            c = _leaf_max(self.read_sigma) > 0.0
+            object.__setattr__(self, "_has_read_noise", c)
+        return c
+
+    @property
+    def has_stuck_off(self) -> bool:
+        """True if any tile has a nonzero stuck-at-G_off rate (cached) --
+        the trigger for fault-aware remapping."""
+        c = self.__dict__.get("_has_stuck_off")
+        if c is None:
+            c = _leaf_max(self.p_stuck_off) > 0.0
+            object.__setattr__(self, "_has_stuck_off", c)
+        return c
 
 
 def _flatten(s: Scenario):
@@ -92,12 +178,59 @@ jax.tree_util.register_pytree_node(Scenario, _flatten, _unflatten)
 
 
 # --------------------------------------------------------------------------- #
+# Per-tile scenario batches
+# --------------------------------------------------------------------------- #
+def tile_scenarios(nb: int, no: int, base: Optional[Scenario] = None,
+                   *, name: Optional[str] = None, **fields) -> Scenario:
+    """Build a ``(nb, no)``-tile-indexed scenario batch.
+
+    Every numeric leaf is broadcast to an ``(nb, no)`` array -- one value
+    per (block-group, output-group) tile of a ``ConductancePlan`` -- so
+    ``perturb_plan`` gives each tile its own sigma / drift level and its
+    own device draw.  ``fields`` override ``base`` per leaf and may be
+    scalars (uniform) or anything broadcastable to ``(nb, no)``:
+
+        tile_scenarios(2, 8, prog_sigma=0.05)                  # uniform
+        tile_scenarios(2, 8, prog_sigma=jnp.linspace(...))     # gradient
+
+    ``r_line_scale`` stays a whole-plan static (it rewrites the circuit
+    solver's ``CircuitParams``, which has no tile axis).
+    """
+    base = base if base is not None else Scenario(name="tiled")
+    kw = {}
+    for f in _LEAF_FIELDS:
+        v = fields.pop(f, getattr(base, f))
+        kw[f] = jnp.broadcast_to(jnp.asarray(v, _leaf_dtype(f)), (nb, no))
+    if fields:
+        raise TypeError(f"unknown Scenario fields: {sorted(fields)}")
+    return Scenario(name=name or base.name,
+                    r_line_scale=base.r_line_scale, **kw)
+
+
+def collapse_tiles(s: Scenario) -> Scenario:
+    """Mean-field scalar Scenario from a tile-indexed batch (identity for
+    scalar scenarios).  For consumers that need ONE corner -- e.g. the
+    noise-aware training-data generator, which perturbs per-sample block
+    tensors that have no (NB, NO) lattice to index."""
+    if s.tile_shape is None:
+        return s
+    kw = {}
+    for f in _LEAF_FIELDS:
+        m = float(jnp.mean(jnp.asarray(getattr(s, f), jnp.float32)))
+        kw[f] = int(round(m)) if f == "n_levels" else m
+    return Scenario(name=s.name, r_line_scale=s.r_line_scale, **kw)
+
+
+# --------------------------------------------------------------------------- #
 # String-keyed registry + JSON (de)serialization
 # --------------------------------------------------------------------------- #
 _REGISTRY: Dict[str, Scenario] = {}
 
 
 def register_scenario(s: Scenario, overwrite: bool = False) -> Scenario:
+    """Add ``s`` to the process-wide registry under ``s.name``.  Refuses
+    silent overwrites (pass ``overwrite=True`` to replace); returns ``s``
+    for chaining."""
     if s.name in _REGISTRY and not overwrite:
         raise ValueError(f"scenario {s.name!r} already registered "
                          f"(pass overwrite=True to replace)")
@@ -106,6 +239,9 @@ def register_scenario(s: Scenario, overwrite: bool = False) -> Scenario:
 
 
 def get_scenario(name: str) -> Scenario:
+    """Look up a registered scenario by name (KeyError lists what exists
+    -- this is what ``AnalogConfig.scenario`` / ``serve --scenario``
+    resolve through)."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -114,14 +250,26 @@ def get_scenario(name: str) -> Scenario:
 
 
 def list_scenarios() -> Tuple[str, ...]:
+    """Sorted names of every registered scenario (built-ins + user)."""
     return tuple(sorted(_REGISTRY))
 
 
+def _json_default(o):
+    if isinstance(o, (jax.Array, np.ndarray)):
+        return np.asarray(o).tolist()
+    raise TypeError(f"not JSON serializable: {type(o)}")
+
+
 def scenario_to_json(s: Scenario) -> str:
-    return json.dumps(dataclasses.asdict(s), sort_keys=True)
+    """Canonical JSON encoding (sorted keys; per-tile array leaves become
+    nested lists).  Inverse of ``scenario_from_json``."""
+    return json.dumps(dataclasses.asdict(s), sort_keys=True,
+                      default=_json_default)
 
 
 def scenario_from_json(doc: str) -> Scenario:
+    """Parse ``scenario_to_json`` output; rejects unknown fields.  List
+    values round-trip back into (NB, NO) per-tile array leaves."""
     d = json.loads(doc)
     known = {f.name for f in dataclasses.fields(Scenario)}
     bad = set(d) - known

@@ -6,6 +6,11 @@ pytree of traced leaves and the device/read keys as a vmapped key batch, so
 a whole accuracy-vs-sigma (or vs-drift-time) curve reuses ONE executable.
 ``trace_count`` / ``cache_size()`` expose that invariant to tests and to
 bench_robustness.
+
+Per-tile scenario batches (``tile_scenarios``, leaves shaped (NB, NO))
+sweep the same way: their leaves are traced (NB, NO) arrays, so varying a
+heterogeneity *pattern* across calls still reuses one executable -- only
+switching between scalar and tiled leaf shapes compiles a second variant.
 """
 from __future__ import annotations
 
@@ -40,6 +45,8 @@ class ScenarioSweep:
         self._fn = None
 
     def cache_size(self) -> int:
+        """Number of compiled executables behind the sweep (tests assert
+        this stays 1 across a whole curve)."""
         return self._fn._cache_size() if self._fn is not None else 0
 
     def _build(self):

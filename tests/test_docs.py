@@ -1,0 +1,49 @@
+"""Docs health as part of tier-1: every internal link in README / ROADMAP /
+docs/*.md resolves (file and #anchor), and every ``>>>`` example in those
+pages passes under doctest — the docs stay executable truth."""
+import doctest
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_doc_files_found():
+    files = check_docs.doc_files()
+    assert "README.md" in files
+    assert os.path.join("docs", "architecture.md") in files
+    assert os.path.join("docs", "nonideal.md") in files
+    assert os.path.join("docs", "lifetime.md") in files
+    assert os.path.join("docs", "performance.md") in files
+
+
+def test_internal_links_resolve():
+    errors = []
+    for rel in check_docs.doc_files():
+        errors += check_docs.check_links(rel)
+    assert not errors, "\n".join(errors)
+
+
+def test_doc_doctests_pass():
+    failures = []
+    for rel in check_docs.doc_files():
+        failures += check_docs.run_doctests(rel)
+    assert not failures, "\n".join(failures)
+
+
+def test_checker_catches_broken_link(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text("see [missing](no/such/file.md) and "
+                   "[anchor](bad.md#nope)\n\n# Real Heading\n")
+    errs = check_docs.check_links(os.path.relpath(bad, check_docs.REPO))
+    assert len(errs) == 2
+
+
+def test_slugify_matches_github_style():
+    assert check_docs.slugify("Per-tile heterogeneity") == \
+        "per-tile-heterogeneity"
+    assert check_docs.slugify("## The `Scenario` schema!") == \
+        "-the-scenario-schema"

@@ -1,0 +1,341 @@
+"""Tests for fleet lifetime management: per-tile scenario batches,
+stuck-fault-aware remapping invariants (bit-exact round trip, padding
+preserved, top-decile weights kept off stuck-off cells, compile-cache
+stability), emulator hot-swap, and the drift-timeline scheduler."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import CASE_A
+from repro.core import conv4xbar
+from repro.core.analog import AnalogExecutor
+from repro.core.crossbar import fault_aware_group_perm
+from repro.models.common import init_params
+from repro.nonideal import (LifetimeScheduler, Scenario, ScenarioSweep,
+                            collapse_tiles, make_field_retrainer,
+                            perturb_plan, realized_fault_masks, remap_plan,
+                            scenario_at_age, scenario_from_json,
+                            scenario_to_json, tile_scenarios)
+
+ACFG = AnalogConfig()
+
+
+def _executor(backend="analytic", **kw):
+    if backend == "emulator":
+        kw.setdefault("emulator_params", init_params(
+            jax.random.PRNGKey(7), conv4xbar.conv4xbar_schema(CASE_A,
+                                                              n_periph=2)))
+        kw.setdefault("use_pallas", False)
+    return AnalogExecutor(acfg=AnalogConfig(backend=backend), geom=CASE_A,
+                          **kw)
+
+
+def _data(K=70, N=16, B=4, seed=0):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (K, N)) * 0.3
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, K)) * 0.5
+    return x, w
+
+
+# --------------------------------------------------------------------------- #
+# Per-tile scenario batches
+# --------------------------------------------------------------------------- #
+def test_tile_scenarios_shapes_json_and_collapse():
+    s = tile_scenarios(2, 4, prog_sigma=jnp.linspace(0.0, 0.3, 4),
+                       p_stuck_off=0.01, n_levels=16, name="tiled")
+    assert s.tile_shape == (2, 4)
+    for f in ("prog_sigma", "p_stuck_off", "drift_nu", "n_levels"):
+        assert getattr(s, f).shape == (2, 4)
+    assert s.n_levels.dtype == jnp.int32
+    # JSON round-trips array leaves as nested lists
+    s2 = scenario_from_json(scenario_to_json(s))
+    assert s2.tile_shape == (2, 4)
+    np.testing.assert_array_equal(np.asarray(s.prog_sigma),
+                                  np.asarray(s2.prog_sigma))
+    # mean-field collapse
+    c = collapse_tiles(s)
+    assert c.tile_shape is None
+    assert c.prog_sigma == pytest.approx(0.15)
+    assert c.n_levels == 16
+    assert not s.is_ideal and not c.is_ideal
+    assert tile_scenarios(2, 4).is_ideal          # all-zero batch is ideal
+
+
+def test_per_tile_perturbation_isolated_to_its_tile():
+    x, w = _data()
+    ex = _executor()
+    plan = ex._plan_for(w, "t")
+    sig = np.zeros((plan.NB, plan.NO))
+    sig[0, 3] = 0.2
+    ts = tile_scenarios(plan.NB, plan.NO, prog_sigma=sig, name="one_tile")
+    pp = perturb_plan(plan, ACFG, ts, jax.random.PRNGKey(5))
+    changed = np.asarray(pp.g_feat != plan.g_feat).any(axis=(2, 3, 4))
+    assert changed[0, 3]
+    changed[0, 3] = False
+    assert not changed.any()       # every other tile bit-identical
+
+
+def test_per_tile_shape_mismatch_raises():
+    x, w = _data()
+    ex = _executor()
+    plan = ex._plan_for(w, "t")
+    bad = tile_scenarios(plan.NB + 1, plan.NO, prog_sigma=0.1, name="bad")
+    with pytest.raises(ValueError, match="tile lattice"):
+        perturb_plan(plan, ACFG, bad, jax.random.PRNGKey(0))
+
+
+def test_per_tile_sweep_compiles_once_across_patterns():
+    x, w = _data(K=64, N=8, B=4)
+    ex = _executor()
+    ex.calibrate(jax.random.PRNGKey(2), w, "t", n=32)
+    plan = ex._plan_for(w, "t")
+    sweep = ScenarioSweep(ex, w, "t", n_draws=2)
+    key = jax.random.PRNGKey(11)
+    outs = []
+    for hi in (0.05, 0.2, 0.4):
+        grad = np.broadcast_to(np.linspace(0.0, hi, plan.NO),
+                               (plan.NB, plan.NO))
+        s = tile_scenarios(plan.NB, plan.NO, prog_sigma=grad, name="sw")
+        outs.append(np.asarray(sweep(x, s, key)))
+    assert sweep.trace_count == 1          # heterogeneity pattern is traced
+    assert sweep.cache_size() == 1
+    assert not np.allclose(outs[0], outs[2])
+
+
+# --------------------------------------------------------------------------- #
+# Stuck-fault-aware remapping
+# --------------------------------------------------------------------------- #
+def test_remap_identity_without_stuck_off_faults():
+    x, w = _data()
+    ex = _executor()
+    plan = ex._plan_for(w, "t")
+    rp, operm = remap_plan(plan, ACFG, Scenario(name="clean", prog_sigma=0.2),
+                           jax.random.PRNGKey(0))
+    assert rp is plan
+    np.testing.assert_array_equal(np.asarray(operm), np.arange(plan.N))
+
+
+def test_remap_roundtrip_bit_identical_at_ideal_point():
+    """A remapped (but unperturbed) plan must produce bit-identical outputs
+    to the base plan: groups move wholesale and the assemble gather undoes
+    the move exactly."""
+    x, w = _data()
+    sc = Scenario(name="f", p_stuck_off=0.05)
+    for backend in ("analytic", "emulator"):
+        ex = _executor(backend)
+        plan = ex._plan_for(w, "t")
+        rp, operm = remap_plan(plan, ACFG, sc, jax.random.PRNGKey(7))
+        assert not np.array_equal(np.asarray(operm), np.arange(plan.N))
+        # conductance round trip: physical layout gathered back == base
+        np.testing.assert_array_equal(
+            np.asarray(rp.g_feat)[:, np.asarray(operm) // plan.no],
+            np.asarray(plan.g_feat))
+        y_base, s_base = ex.raw_matmul(x, w, "t")
+        y_remap, s_remap = ex.raw_matmul(x, w, "t", plan=rp)
+        np.testing.assert_array_equal(np.asarray(y_base),
+                                      np.asarray(y_remap))
+        np.testing.assert_array_equal(np.asarray(s_base),
+                                      np.asarray(s_remap))
+
+
+def test_remap_preserves_padding_cells():
+    x, w = _data(K=70, N=13)       # row padding AND a partial output group
+    ex = _executor()
+    plan = ex._plan_for(w, "t")
+    assert (np.asarray(plan.g_feat) == 0.0).any()
+    sc = Scenario(name="f", p_stuck_off=0.05, prog_sigma=0.1)
+    rp, operm = remap_plan(plan, ACFG, sc, jax.random.PRNGKey(3))
+    pp = perturb_plan(rp, ACFG, sc, jax.random.PRNGKey(3))
+    # padded (no-cell) sites travel with their group and stay exactly zero
+    assert np.asarray(pp.g_feat == 0.0).sum() == \
+        np.asarray(plan.g_feat == 0.0).sum()
+    np.testing.assert_array_equal(np.asarray(pp.g_feat == 0.0),
+                                  np.asarray(rp.g_feat == 0.0))
+
+
+def test_remap_keeps_top_decile_weights_off_stuck_cells():
+    x, w = _data(K=70, N=16)
+    ex = _executor()
+    plan = ex._plan_for(w, "t")
+    sc = Scenario(name="f", p_stuck_off=0.03)
+    key = jax.random.PRNGKey(7)
+    _, off = realized_fault_masks(plan, sc, key)
+    off = np.asarray(off)
+    span = ACFG.g_max - ACFG.g_min
+
+    def top_hits(g_feat):
+        g = np.asarray(g_feat)
+        excess = np.where(g > 0, (g - ACFG.g_min) / span, 0.0)
+        thr = np.quantile(excess[excess > 0], 0.9)
+        return int((off & (excess >= thr)).sum())
+
+    before = top_hits(plan.g_feat)
+    rp, operm = remap_plan(plan, ACFG, sc, key, top_q=0.9)
+    after = top_hits(rp.g_feat)
+    assert before > 0, "test vacuous: no top-decile weight was at risk"
+    assert after == 0, f"remap left {after} top-decile weights on " \
+                       f"stuck-off cells (was {before})"
+
+
+def test_remap_toggle_invalidates_perturbation_cache():
+    """Flipping fault_remap between calls must not serve the stale
+    (un)remapped plan from the perturbation cache."""
+    x, w = _data()
+    ex = _executor()
+    ex.set_scenario(Scenario(name="f", p_stuck_off=0.05),
+                    key=jax.random.PRNGKey(1))
+    y_off = np.asarray(ex.matmul(x, w, "t"))
+    p_off = ex._pert_cache["t"][3]
+    ex.fault_remap = True
+    y_on = np.asarray(ex.matmul(x, w, "t"))
+    p_on = ex._pert_cache["t"][3]
+    assert p_on is not p_off
+    assert not np.array_equal(np.asarray(p_on.out_perm),
+                              np.asarray(p_off.out_perm))
+    assert not np.allclose(y_on, y_off)
+    ex.fault_remap = False
+    np.testing.assert_array_equal(np.asarray(ex.matmul(x, w, "t")), y_off)
+
+
+def test_tiled_negative_drift_nu_is_not_ideal():
+    """A per-tile batch mixing nu == 0 and nu < 0 tiles must not be
+    classified ideal (max-only check would drop the drift silently)."""
+    nu = np.zeros((2, 3))
+    nu[1, 2] = -0.05                   # conductance growth on one tile
+    s = tile_scenarios(2, 3, drift_nu=nu, drift_t=1e4, name="neg_nu")
+    assert not s.is_ideal
+
+
+def test_executor_remap_compile_cache_stable():
+    x, w = _data()
+    ex = _executor("emulator", fault_remap=True)
+    ex.set_scenario(Scenario(name="a", p_stuck_off=0.04, prog_sigma=0.05),
+                    key=jax.random.PRNGKey(1))
+    ya = np.asarray(ex.matmul(x, w, "t"))
+    fn = ex._sc_fns["t"][2]
+    # different fleet -> different fault mask -> different permutation
+    ex.set_scenario(Scenario(name="a", p_stuck_off=0.04, prog_sigma=0.05),
+                    key=jax.random.PRNGKey(2))
+    yb = np.asarray(ex.matmul(x, w, "t"))
+    # heavier faults, per-tile batch
+    plan = ex._plan_for(w, "t")
+    ex.set_scenario(tile_scenarios(plan.NB, plan.NO, p_stuck_off=0.08,
+                                   prog_sigma=0.05, name="tiled"),
+                    key=jax.random.PRNGKey(3))
+    yc = np.asarray(ex.matmul(x, w, "t"))
+    assert ex._sc_fns["t"][2] is fn
+    assert fn._cache_size() == 1           # permutations are traced args
+    assert not np.allclose(ya, yb) and not np.allclose(yb, yc)
+    # determinism: same fleet key reproduces the same remap + outputs
+    ex.set_scenario(Scenario(name="a", p_stuck_off=0.04, prog_sigma=0.05),
+                    key=jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(np.asarray(ex.matmul(x, w, "t")), ya)
+
+
+def test_ideal_scenario_with_remap_enabled_bit_identical_to_plain():
+    x, w = _data()
+    ex0 = _executor("emulator")
+    y0 = np.asarray(ex0.matmul(x, w, "t"))
+    ex1 = _executor("emulator", emulator_params=ex0.emulator_params,
+                    fault_remap=True)
+    ex1.set_scenario(Scenario(name="ideal"), key=jax.random.PRNGKey(9))
+    np.testing.assert_array_equal(np.asarray(ex1.matmul(x, w, "t")), y0)
+    # and the scenario forward itself, fed identity args, is bit-identical
+    plan = ex1._plan_for(w, "t")
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    y_sc = ex1._jit_sc_for("t", w)(
+        x2, jnp.float32(1.0), jnp.float32(0.0), plan.g_feat,
+        jnp.float32(0.0), jax.random.PRNGKey(0),
+        jnp.arange(plan.N, dtype=jnp.int32), ex1.emulator_params)
+    np.testing.assert_array_equal(np.asarray(y_sc), y0)
+
+
+# --------------------------------------------------------------------------- #
+# Emulator hot-swap
+# --------------------------------------------------------------------------- #
+def test_hot_swap_keeps_scenario_cache_and_rebinds_plain_path():
+    x, w = _data()
+    ex = _executor("emulator")
+    ex.set_scenario(Scenario(name="s", prog_sigma=0.05),
+                    key=jax.random.PRNGKey(3))
+    y1 = np.asarray(ex.matmul(x, w, "t"))
+    fn = ex._sc_fns["t"][2]
+    new_p = init_params(jax.random.PRNGKey(8),
+                        conv4xbar.conv4xbar_schema(CASE_A, n_periph=2))
+    ex.set_emulator_params(new_p)
+    y2 = np.asarray(ex.matmul(x, w, "t"))
+    assert ex._sc_fns["t"][2] is fn and fn._cache_size() == 1
+    assert not np.allclose(y1, y2)         # the swap actually took effect
+    # plain path must not serve stale baked-in constants after the swap
+    ex.set_scenario(None)
+    y3 = np.asarray(ex.matmul(x, w, "t"))
+    fresh = _executor("emulator", emulator_params=new_p)
+    np.testing.assert_array_equal(y3, np.asarray(fresh.matmul(x, w, "t")))
+
+
+# --------------------------------------------------------------------------- #
+# Drift-timeline scheduler
+# --------------------------------------------------------------------------- #
+def test_scenario_at_age_scalar_and_tiled():
+    sc = Scenario(name="fleet", prog_sigma=0.05, drift_nu=0.05)
+    assert scenario_at_age(sc, 86_400.0).drift_t == 86_400.0
+    assert scenario_at_age(sc, 86_400.0).prog_sigma == 0.05
+    ts = tile_scenarios(2, 3, prog_sigma=0.05, drift_nu=0.05)
+    aged = scenario_at_age(ts, 3_600.0)
+    assert aged.drift_t.shape == (2, 3)
+    assert float(aged.drift_t[0, 0]) == 3_600.0
+
+
+def test_scheduler_mitigation_dominates_unmitigated():
+    x, w = _data(K=64, N=8, B=4)
+    fleet = Scenario(name="aging", prog_sigma=0.05, p_stuck_off=0.04,
+                     drift_nu=0.05)
+    kf = jax.random.PRNGKey(11)
+    exi = _executor()
+    exi.calibrate(jax.random.PRNGKey(9), w, "t", n=32)
+    ref = np.asarray(exi.matmul(x, w, "t"))    # young ideal, calibrated
+
+    def acc(y):
+        n = np.linalg.norm(np.asarray(y) - ref) / np.linalg.norm(ref)
+        return 1.0 / (1.0 + n)
+
+    un = LifetimeScheduler(_executor(), fleet, remap=False,
+                           recalibrate=False, key=kf, calib_n=32)
+    ru = un.run(w, "t", x)
+    mi = LifetimeScheduler(_executor(), fleet, remap=True,
+                           recalibrate=True, key=kf, calib_n=32)
+    rm = mi.run(w, "t", x)
+    assert [r["label"] for r in ru] == ["t0", "1h", "1d", "1mo"]
+    accs_u = [acc(r["y"]) for r in ru]
+    accs_m = [acc(r["y"]) for r in rm]
+    # unmitigated decays monotonically; mitigation dominates at every age
+    assert all(a >= b - 1e-9 for a, b in zip(accs_u, accs_u[1:]))
+    assert all(m > u for u, m in zip(accs_u[1:], accs_m[1:]))
+    # one compiled scenario forward per walk, and recalibration at every
+    # checkpoint reuses ONE compiled calibration forward too
+    assert un.ex._sc_fns["t"][2]._cache_size() == 1
+    assert mi.ex._sc_fns["t"][2]._cache_size() == 1
+    assert mi.ex._cal_fns["t"][2]._cache_size() == 1
+
+
+def test_scheduler_field_retrain_hot_swaps_compile_once():
+    x, w = _data(K=64, N=8, B=4)
+    ex = _executor("emulator")
+    p0 = ex.emulator_params
+    fleet = Scenario(name="aging", prog_sigma=0.05, p_stuck_off=0.03,
+                     drift_nu=0.05)
+    sched = LifetimeScheduler(
+        ex, fleet, timeline=(("1h", 3_600.0), ("1d", 86_400.0)),
+        remap=True, recalibrate=True,
+        retrain=make_field_retrainer(jax.random.PRNGKey(5), n=32, epochs=2),
+        key=jax.random.PRNGKey(4), calib_n=16)
+    recs = sched.run(w, "t", x)
+    assert [r["retrained"] for r in recs] == [True, True, True]
+    assert ex.emulator_params is not p0        # swapped
+    assert ex._sc_fns["t"][2]._cache_size() == 1
+    for r in recs:
+        assert np.all(np.isfinite(np.asarray(r["y"])))

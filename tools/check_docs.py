@@ -1,0 +1,109 @@
+#!/usr/bin/env python
+"""Docs health checker: internal-link validation + doctest runner.
+
+Walks README.md, ROADMAP.md and docs/*.md, and
+
+  1. resolves every markdown link ``[text](target)``: relative targets
+     must exist on disk, and ``#fragment`` anchors must match a heading
+     (GitHub slug rules) in the target file;
+  2. runs ``python -m doctest`` semantics over each file's ``>>>``
+     examples (``doctest.testfile``), so the code blocks in the docs are
+     executable truth, not decoration.
+
+Exit 1 with a per-file report on any broken link or failing example.
+
+  PYTHONPATH=src python tools/check_docs.py [--no-doctest]
+"""
+from __future__ import annotations
+
+import argparse
+import doctest
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+LINK_RE = re.compile(r"\[([^\]]*)\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def doc_files():
+    files = [p for p in ("README.md", "ROADMAP.md") if
+             os.path.exists(os.path.join(REPO, p))]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        files += sorted(os.path.join("docs", f) for f in os.listdir(docs)
+                        if f.endswith(".md"))
+    return files
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation, dashes."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        return {slugify(m.group(1)) for m in HEADING_RE.finditer(f.read())}
+
+
+def check_links(rel_path: str) -> list:
+    path = os.path.join(REPO, rel_path)
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    errors = []
+    for m in LINK_RE.finditer(text):
+        target = m.group(2)
+        if target.startswith(EXTERNAL):
+            continue
+        base, _, frag = target.partition("#")
+        if base:
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), base))
+            if not os.path.exists(resolved):
+                errors.append(f"{rel_path}: broken link -> {target}")
+                continue
+        else:
+            resolved = path
+        if frag and resolved.endswith(".md"):
+            if slugify(frag) not in anchors_of(resolved):
+                errors.append(f"{rel_path}: missing anchor -> {target}")
+    return errors
+
+
+def run_doctests(rel_path: str) -> list:
+    res = doctest.testfile(
+        os.path.join(REPO, rel_path), module_relative=False,
+        optionflags=doctest.ELLIPSIS | doctest.NORMALIZE_WHITESPACE)
+    if res.failed:
+        return [f"{rel_path}: {res.failed}/{res.attempted} doctests failed"]
+    return []
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-doctest", action="store_true",
+                    help="links only (doctests need jax importable)")
+    args = ap.parse_args(argv)
+    src = os.path.join(REPO, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    errors = []
+    for rel in doc_files():
+        errors += check_links(rel)
+        if not args.no_doctest:
+            errors += run_doctests(rel)
+    if errors:
+        print("\n".join(errors))
+        print(f"FAILED: {len(errors)} docs problem(s)")
+        return 1
+    kind = "links" if args.no_doctest else "links + doctests"
+    print(f"docs OK ({kind}) across {len(doc_files())} files")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

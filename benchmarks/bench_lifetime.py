@@ -11,6 +11,18 @@ backend:
     serving-distribution retraining on the aged fleet
     (``make_field_retrainer``), hot-swapped into the executor.
 
+and, on the emulator backend, a third time:
+
+  * **conditioned** -- ONE scenario-conditioned emulator
+    (``train_conditioned_emulator``) with remap + recalibration, a
+    ONE-TIME field calibration at deployment
+    (``make_conditioned_field_calibrator``: the realized device across
+    its predicted drift trajectory) and ZERO retraining between
+    checkpoints: the net reads the fleet's age and corner off its
+    scenario-feature input (docs/emulator.md).  The gate is that this
+    single net tracks (within ``COND_TRACK_TOL``) or beats the
+    per-checkpoint fine-tuned baseline at every drift checkpoint.
+
 The fleet's corner is a per-tile scenario batch (``tile_scenarios``): a
 programming-sigma gradient across output groups plus uniform stuck-off
 rate and drift, so the bench exercises heterogeneity, remapping and the
@@ -21,11 +33,14 @@ preserve, for both backends.
 
 Asserted (exit 1 on violation):
   * mitigation strictly dominates at every drift checkpoint, both backends;
+  * the conditioned net matches or beats the fine-tuned baseline at every
+    drift checkpoint with zero retrains recorded;
   * each lifetime walk reuses ONE compiled scenario forward (ages,
-    remaps, recalibrations and hot-swapped retrained params are all
-    traced arguments);
-  * the ideal scenario with the identity permutation is bit-identical to
-    the plain serving fast path.
+    remaps, recalibrations, hot-swapped retrained params AND scenario
+    features are all traced arguments);
+  * the ideal scenario with the identity permutation (and, conditioned,
+    the all-zero feature block) is bit-identical to the plain serving
+    fast path.
 
 CSV lines to stdout + results/lifetime_<label>.json.
 
@@ -42,12 +57,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import QUICK, get_emulator
+from benchmarks.common import QUICK, get_conditioned_emulator, get_emulator
 from repro.configs.base import AnalogConfig
 from repro.configs.rram_ps32 import CASE_A, EmulatorTrainConfig
 from repro.core.analog import AnalogExecutor
-from repro.nonideal import (LifetimeScheduler, make_field_retrainer,
-                            tile_scenarios)
+from repro.nonideal import (LifetimeScheduler,
+                            make_conditioned_field_calibrator,
+                            make_field_retrainer, tile_scenarios)
 from repro.nonideal.lifetime import DEFAULT_TIMELINE
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
@@ -55,6 +71,12 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 P_STUCK_OFF = 0.04
 DRIFT_NU = 0.05
 SIGMA_LO, SIGMA_HI = 0.02, 0.08        # per-tile fab gradient
+
+# "matching" margin for the conditioned-vs-finetuned gate: the conditioned
+# net must come within this accuracy of the per-checkpoint fine-tuned
+# baseline at every drift checkpoint (it usually beats it -- the margin
+# absorbs model-variance noise between two independently trained nets)
+COND_TRACK_TOL = 0.01
 
 # CI-budget emulator: enough training that the model floor sits well below
 # the aging signal (the 2-epoch bench_speed SMOKE net is too coarse here)
@@ -86,7 +108,10 @@ def _make_executor(backend: str, eparams) -> AnalogExecutor:
 
 def _ideal_bit_identity(backend: str, eparams, x, w, tag: str) -> bool:
     """Scenario forward at the ideal point (identity permutation, zero
-    read sigma, current params as traced args) vs the plain fast path."""
+    read sigma, all-zero scenario features, current params as traced args)
+    vs the plain fast path.  For a conditioned net the zero feature block
+    is exactly the ideal corner's encoding, so the identity must hold
+    there too."""
     ex = _make_executor(backend, eparams)
     y_plain = np.asarray(ex.matmul(x, w, tag))
     plan = ex._plan_for(w, tag)
@@ -95,7 +120,7 @@ def _ideal_bit_identity(backend: str, eparams, x, w, tag: str) -> bool:
     y_sc = ex._jit_sc_for(tag, w)(
         x2, jnp.float32(1.0), jnp.float32(0.0), plan.g_feat,
         jnp.float32(0.0), jax.random.PRNGKey(0),
-        jnp.arange(plan.N, dtype=jnp.int32), ep)
+        jnp.arange(plan.N, dtype=jnp.int32), ep, ex._zero_sfeat)
     return bool(np.array_equal(np.asarray(y_sc), y_plain))
 
 
@@ -103,6 +128,7 @@ def run(quick: bool = False, seed: int = 0):
     geom = CASE_A
     tcfg = LIFETIME_QUICK if quick else QUICK
     res = get_emulator(geom.name, tcfg, seed)
+    cond = get_conditioned_emulator(geom.name, tcfg, seed)
     key = jax.random.PRNGKey(seed)
     K, N, B = (64, 8, 4) if quick else (128, 16, 8)
     calib_n = 32 if quick else 64
@@ -126,13 +152,25 @@ def run(quick: bool = False, seed: int = 0):
         if backend == "emulator":
             retrain = make_field_retrainer(jax.random.fold_in(key, 4))
 
+        modes = [
+            ("unmitigated", res.params, dict(remap=False, recalibrate=False,
+                                             retrain=None)),
+            ("mitigated", res.params, dict(remap=True, recalibrate=True,
+                                           retrain=retrain)),
+        ]
+        if backend == "emulator":
+            # ONE conditioned net: one-time field calibration at deploy
+            # (the realized device across its predicted drift trajectory),
+            # then zero retraining between checkpoints -- age and corner
+            # ride the scenario-feature input
+            modes.append(("conditioned", cond.params,
+                          dict(remap=True, recalibrate=True,
+                               retrain=make_conditioned_field_calibrator(
+                                   jax.random.fold_in(key, 5)))))
+
         runs = {}
-        for mode, kwargs in (
-                ("unmitigated", dict(remap=False, recalibrate=False,
-                                     retrain=None)),
-                ("mitigated", dict(remap=True, recalibrate=True,
-                                   retrain=retrain))):
-            ex = _make_executor(backend, res.params)
+        for mode, eparams, kwargs in modes:
+            ex = _make_executor(backend, eparams)
             sched = LifetimeScheduler(ex, fleet, timeline=DEFAULT_TIMELINE,
                                       key=k_fleet, calib_n=calib_n, **kwargs)
             recs = sched.run(w, "life", x)
@@ -146,7 +184,7 @@ def run(quick: bool = False, seed: int = 0):
         dominates = [m["accuracy"] > u["accuracy"]
                      for u, m in zip(runs["unmitigated"][1:],
                                      runs["mitigated"][1:])]
-        curves.append({
+        curve = {
             "backend": backend,
             "timeline": [{"label": l, "t": t} for l, t in DEFAULT_TIMELINE],
             "unmitigated": runs["unmitigated"],
@@ -156,7 +194,25 @@ def run(quick: bool = False, seed: int = 0):
                               and runs["mitigated_compiled_once"]),
             "ideal_bit_identical": _ideal_bit_identity(
                 backend, res.params, x, w, "ident"),
-        })
+        }
+        if backend == "emulator":
+            tracks = [c["accuracy"] >= m["accuracy"] - COND_TRACK_TOL
+                      for m, c in zip(runs["mitigated"][1:],
+                                      runs["conditioned"][1:])]
+            curve.update({
+                "conditioned": runs["conditioned"],
+                "conditioned_tracks_finetune": all(tracks),
+                # "zero retraining BETWEEN checkpoints": the deploy-time
+                # field calibration (records[0]) is the one allowed
+                "conditioned_zero_retrains": not any(
+                    r["retrained"] for r in runs["conditioned"][1:]),
+                "conditioned_compiled_once":
+                    runs["conditioned_compiled_once"],
+                "conditioned_ideal_bit_identical": _ideal_bit_identity(
+                    backend, cond.params, x, w, "ident_cond"),
+                "cond_track_tol": COND_TRACK_TOL,
+            })
+        curves.append(curve)
     return curves
 
 
@@ -174,7 +230,9 @@ def write_json(curves, label: str, quick: bool, seed: int) -> str:
                      "per_tile": True},
            "metric": "accuracy = 1/(1+NRMSE) vs the calibrated young-ideal "
                      "circuit output; mitigated = remap + recalibrate (+ "
-                     "field retraining on the emulator backend)",
+                     "field retraining on the emulator backend); "
+                     "conditioned = ONE scenario-conditioned emulator, "
+                     "remap + recalibrate, zero retraining",
            "curves": curves}
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
@@ -185,9 +243,12 @@ def write_json(curves, label: str, quick: bool, seed: int) -> str:
 def main(quick: bool = False, seed: int = 0, label: str | None = None):
     curves = run(quick=quick, seed=seed)
     for c in curves:
-        for u, m in zip(c["unmitigated"], c["mitigated"]):
+        conditioned = c.get("conditioned")
+        for i, (u, m) in enumerate(zip(c["unmitigated"], c["mitigated"])):
+            cond_col = (f",{conditioned[i]['accuracy']:.4f}"
+                        if conditioned else "")
             print(f"lifetime_{c['backend']},{u['label']},"
-                  f"{u['accuracy']:.4f},{m['accuracy']:.4f},"
+                  f"{u['accuracy']:.4f},{m['accuracy']:.4f}{cond_col},"
                   f"{int(m['retrained'])}")
         print(f"lifetime_{c['backend']}_dominates,"
               f"{int(c['dominates_at_every_checkpoint'])},bool")
@@ -195,12 +256,21 @@ def main(quick: bool = False, seed: int = 0, label: str | None = None):
               f"{int(c['compiled_once'])},bool")
         print(f"lifetime_{c['backend']}_ideal_bit_identical,"
               f"{int(c['ideal_bit_identical'])},bool")
+        if conditioned:
+            for k in ("conditioned_tracks_finetune",
+                      "conditioned_zero_retrains",
+                      "conditioned_compiled_once",
+                      "conditioned_ideal_bit_identical"):
+                print(f"lifetime_{c['backend']}_{k},{int(c[k])},bool")
     path = write_json(curves, label or ("quick" if quick else "full"),
                       quick, seed)
     print(f"lifetime_json,{os.path.abspath(path)},written")
+    gates = ("dominates_at_every_checkpoint", "compiled_once",
+             "ideal_bit_identical", "conditioned_tracks_finetune",
+             "conditioned_zero_retrains", "conditioned_compiled_once",
+             "conditioned_ideal_bit_identical")
     bad = [f"{c['backend']}:{k}" for c in curves
-           for k in ("dominates_at_every_checkpoint", "compiled_once",
-                     "ideal_bit_identical") if not c[k]]
+           for k in gates if not c.get(k, True)]
     if bad:
         raise SystemExit(f"lifetime invariants violated: {bad}")
     return curves

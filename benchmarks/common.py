@@ -36,6 +36,33 @@ def timed(fn, *args, warmup: int = 1, iters: int = 5):
     return statistics.median(ts), out
 
 
+def _load_cached(path: str) -> EmulatorResult:
+    data = np.load(path, allow_pickle=True)
+    params = {k: jax.numpy.asarray(v) for k, v in data.items()
+              if not k.startswith("__")}
+    meta = data["__meta"].item() if "__meta" in data else {}
+    return EmulatorResult(params=params, history={},
+                          train_mse=meta.get("train_mse", float("nan")),
+                          test_mse=meta.get("test_mse", float("nan")),
+                          test_mae=meta.get("test_mae", float("nan")),
+                          bound=meta.get("bound", float("nan")),
+                          accepted=bool(meta.get("accepted", False)),
+                          sig_prob=meta.get("sig_prob", float("nan")))
+
+
+def save_emulator_npz(res: EmulatorResult, path: str) -> str:
+    """Benchmarks-cache npz format (also what serve --emulator-params
+    loads)."""
+    np.savez(path,
+             __meta=np.array({"train_mse": res.train_mse,
+                              "test_mse": res.test_mse,
+                              "test_mae": res.test_mae, "bound": res.bound,
+                              "accepted": res.accepted,
+                              "sig_prob": res.sig_prob}, dtype=object),
+             **{k: np.asarray(v) for k, v in res.params.items()})
+    return path
+
+
 def get_emulator(geom_name: str, tcfg: EmulatorTrainConfig = QUICK,
                  seed: int = 0, refresh: bool = False) -> EmulatorResult:
     """Train (or load from cache) one emulator per block geometry."""
@@ -46,24 +73,30 @@ def get_emulator(geom_name: str, tcfg: EmulatorTrainConfig = QUICK,
     acfg = AnalogConfig()
     cp = CircuitParams()
     if os.path.exists(path) and not refresh:
-        data = np.load(path, allow_pickle=True)
-        params = {k: jax.numpy.asarray(v) for k, v in data.items()
-                  if not k.startswith("__")}
-        meta = data["__meta"].item() if "__meta" in data else {}
-        return EmulatorResult(params=params, history={},
-                              train_mse=meta.get("train_mse", float("nan")),
-                              test_mse=meta.get("test_mse", float("nan")),
-                              test_mae=meta.get("test_mae", float("nan")),
-                              bound=meta.get("bound", float("nan")),
-                              accepted=bool(meta.get("accepted", False)),
-                              sig_prob=meta.get("sig_prob", float("nan")))
+        return _load_cached(path)
     res = train_emulator(jax.random.PRNGKey(seed), geom, acfg, cp, tcfg,
                          log_every=max(1, tcfg.epochs // 8))
-    np.savez(path,
-             __meta=np.array({"train_mse": res.train_mse,
-                              "test_mse": res.test_mse,
-                              "test_mae": res.test_mae, "bound": res.bound,
-                              "accepted": res.accepted,
-                              "sig_prob": res.sig_prob}, dtype=object),
-             **{k: np.asarray(v) for k, v in res.params.items()})
+    save_emulator_npz(res, path)
+    return res
+
+
+def get_conditioned_emulator(geom_name: str,
+                             tcfg: EmulatorTrainConfig = QUICK,
+                             seed: int = 0,
+                             refresh: bool = False) -> EmulatorResult:
+    """Train (or load from cache) ONE scenario-conditioned emulator per
+    block geometry: every sample draws its own device corner and the
+    corner's feature encoding rides the peripheral vector, so the same
+    params serve the whole manifold (docs/emulator.md)."""
+    from repro.nonideal.data import train_conditioned_emulator
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    tag = f"{geom_name}_cond_n{tcfg.n_train}_e{tcfg.epochs}_s{seed}"
+    path = os.path.join(CACHE_DIR, tag + ".npz")
+    geom = BLOCKS[geom_name]
+    if os.path.exists(path) and not refresh:
+        return _load_cached(path)
+    res = train_conditioned_emulator(jax.random.PRNGKey(seed), geom,
+                                     AnalogConfig(), CircuitParams(), tcfg,
+                                     log_every=max(1, tcfg.epochs // 8))
+    save_emulator_npz(res, path)
     return res

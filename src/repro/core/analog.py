@@ -42,6 +42,18 @@ ride the scenario forward's traced arguments, so an entire
 drift-timeline walk (``repro.nonideal.lifetime``) compiles once per
 (tag, shape).
 
+Conditioning (docs/emulator.md): a *scenario-conditioned* emulator
+(peripheral width > 2, ``nonideal.data.train_conditioned_emulator``)
+consumes ``scenario_features(scenario)`` alongside the cell features, so
+ONE net covers the whole corner manifold with zero per-corner
+retraining.  The feature vector is a traced argument of the scenario
+forward (corner/age changes never recompile), enters the blocklast fast
+path as an fc0 bias shift that is exactly zero at the ideal corner, and
+the plain path folds the ideal (all-zero) encoding into the cached
+weights -- so an unconditioned and a conditioned net share every code
+path and the ideal conditioned forward is bit-identical to the plain
+one.
+
 Install into a model with ``use_dense_hook(executor.hook)`` -- every
 ``dense()`` in repro.models routes through here.
 """
@@ -65,7 +77,8 @@ from repro.core.crossbar import ConductancePlan, build_conductance_plan
 from repro.core.emulator import normalize_features
 from repro.nonideal.perturb import (apply_read_noise, perturb_plan,
                                     remap_plan, scenario_circuit_params)
-from repro.nonideal.scenario import Scenario
+from repro.nonideal.scenario import (N_SCENARIO_FEATURES, Scenario,
+                                     scenario_features)
 
 
 def _is_tracer(x) -> bool:
@@ -105,22 +118,23 @@ _st_matmul.defvjp(_st_fwd, _st_bwd)
 # --------------------------------------------------------------------------- #
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
 def _st_matmul_sc(ex: "AnalogExecutor", tag: str, x2, w, a, b, gf, rsig, rkey,
-                  operm, eparams):
+                  operm, eparams, sfeat):
     plan = ex._plan_for(w, tag).with_g(gf, ex.acfg).with_perm(operm)
     yv, xs = ex.raw_matmul(x2, w, tag, plan=plan, read_key=rkey,
                            read_sigma=rsig,
-                           eparams=eparams if eparams else None)
+                           eparams=eparams if eparams else None,
+                           sfeat=sfeat)
     return (a * yv + b) * xs
 
 
-def _st_sc_fwd(ex, tag, x2, w, a, b, gf, rsig, rkey, operm, eparams):
+def _st_sc_fwd(ex, tag, x2, w, a, b, gf, rsig, rkey, operm, eparams, sfeat):
     return (_st_matmul_sc(ex, tag, x2, w, a, b, gf, rsig, rkey, operm,
-                          eparams),
-            (x2, w, gf, rsig, rkey, operm, eparams))
+                          eparams, sfeat),
+            (x2, w, gf, rsig, rkey, operm, eparams, sfeat))
 
 
 def _st_sc_bwd(ex, tag, res, ct):
-    x2, w, gf, rsig, rkey, operm, eparams = res
+    x2, w, gf, rsig, rkey, operm, eparams, sfeat = res
     # straight-through digital grads; the device draw, permutation and
     # (frozen, serving-time) emulator params are not trained quantities
     z = jnp.zeros((), ct.dtype)
@@ -128,7 +142,8 @@ def _st_sc_bwd(ex, tag, res, ct):
             jnp.zeros_like(rsig),
             np.zeros(rkey.shape, jax.dtypes.float0),
             np.zeros(operm.shape, jax.dtypes.float0),
-            jax.tree.map(jnp.zeros_like, eparams))
+            jax.tree.map(jnp.zeros_like, eparams),
+            jnp.zeros_like(sfeat))
 
 
 _st_matmul_sc.defvjp(_st_sc_fwd, _st_sc_bwd)
@@ -173,6 +188,11 @@ class AnalogExecutor:
         self._sc_fns: Dict[str, tuple] = {}
         self._cal_fns: Dict[str, tuple] = {}
         self._read_calls = 0
+        # scenario-feature cache (one encode per Scenario object) and the
+        # zero vector fed to the scenario forward when conditioning is
+        # inactive -- one stable (N_SCENARIO_FEATURES,) aval either way
+        self._sfeat_ent: Optional[tuple] = None
+        self._zero_sfeat = jnp.zeros((N_SCENARIO_FEATURES,), jnp.float32)
         if self.scenario_key is None:
             self.scenario_key = jax.random.PRNGKey(0)
         if self.scenario is None and self.acfg.scenario:
@@ -199,8 +219,35 @@ class AnalogExecutor:
         if key is not None:
             self.scenario_key = key
         self._pert_cache.clear()
+        self._sfeat_ent = None
         self._read_calls = 0
         return self
+
+    @property
+    def emulator_conditioned(self) -> bool:
+        """True when the bound emulator params are scenario-conditioned
+        (peripheral width > 2: fc0 has rows for ``scenario_features``).
+        Static -- derived from param shapes -- so callers may branch on it
+        at trace time (docs/emulator.md)."""
+        return (self.emulator_params is not None
+                and conv4xbar.n_periph_of(self.emulator_params,
+                                          self.geom) > 2)
+
+    def _scenario_features(self) -> jax.Array:
+        """Feature encoding of the active scenario, cached per Scenario
+        object (the encode is a handful of scalar reductions, but matmul
+        is the serving hot path).  Forced eager: the executor's scenario
+        leaves are concrete state, and under an ENCLOSING jit (serve loop)
+        the encode must come out concrete so the cache never holds a
+        leaked tracer."""
+        sc = self.scenario
+        ent = self._sfeat_ent
+        if ent is not None and ent[0] is sc:
+            return ent[1]
+        with jax.ensure_compile_time_eval():
+            v = scenario_features(sc)
+        self._sfeat_ent = (sc, v)
+        return v
 
     def set_emulator_params(self, params: dict) -> "AnalogExecutor":
         """Hot-swap trained emulator params (drift-scheduled retraining).
@@ -335,11 +382,26 @@ class AnalogExecutor:
         raise ValueError(b)
 
     def block_outputs(self, x: jax.Array,
-                      eparams: Optional[dict] = None) -> jax.Array:
-        """x: (NBLK, 2, D, H, W) raw-feature block tensors -> (NBLK, O)."""
+                      eparams: Optional[dict] = None,
+                      sfeat: Optional[jax.Array] = None) -> jax.Array:
+        """x: (NBLK, 2, D, H, W) raw-feature block tensors -> (NBLK, O).
+
+        For a scenario-conditioned emulator the peripheral vector is
+        widened to ``(gain, offset, *scenario_features)``; ``sfeat=None``
+        feeds the ideal corner's all-zero feature block."""
+        n = x.shape[0]
         periph = jnp.concatenate(
-            [jnp.ones((x.shape[0], 1), x.dtype),
-             jnp.zeros((x.shape[0], 1), x.dtype)], axis=-1)
+            [jnp.ones((n, 1), x.dtype), jnp.zeros((n, 1), x.dtype)], axis=-1)
+        if self.acfg.backend == "emulator":
+            params = self.emulator_params if eparams is None else eparams
+            npf = (conv4xbar.n_periph_of(params, self.geom)
+                   if params is not None else 2)
+            if npf > 2:
+                tail = (jnp.zeros((npf - 2,), x.dtype) if sfeat is None
+                        else sfeat.astype(x.dtype))
+                periph = jnp.concatenate(
+                    [periph, jnp.broadcast_to(tail[None], (n, npf - 2))],
+                    axis=-1)
         return self._backend_fn(eparams)(x, periph)
 
     def _pallas_enabled(self) -> bool:
@@ -348,18 +410,26 @@ class AnalogExecutor:
         return jax.default_backend() == "tpu"
 
     def _eval_blocks(self, plan: ConductancePlan, vb01: jax.Array,
-                     eparams: Optional[dict] = None) -> jax.Array:
+                     eparams: Optional[dict] = None,
+                     sfeat: Optional[jax.Array] = None) -> jax.Array:
         """vb01: (M, NB, D, H) wordline drive in [0, 1] -> (M*NB*NO, no)."""
         if self.acfg.backend == "emulator" and self.fast_path \
                 and self._pallas_enabled():
-            from repro.kernels.emulator_block import emulator_block_grid
             params = self.emulator_params if eparams is None else eparams
-            M = vb01.shape[0]
-            g = plan.g_norm.reshape((plan.n_blocks,) + plan.g_norm.shape[2:])
-            y = emulator_block_grid(params, vb01, g, self.geom)
-            return y.reshape(M * plan.n_blocks, -1)
+            # the grid kernel bakes the constant peripheral block (which is
+            # the ideal all-zero scenario encoding for a conditioned net);
+            # explicit non-ideal features fall through to the block-tensor
+            # path, which threads them through the peripheral vector
+            if sfeat is None or conv4xbar.n_periph_of(params,
+                                                      self.geom) <= 2:
+                from repro.kernels.emulator_block import emulator_block_grid
+                M = vb01.shape[0]
+                g = plan.g_norm.reshape((plan.n_blocks,)
+                                        + plan.g_norm.shape[2:])
+                y = emulator_block_grid(params, vb01, g, self.geom)
+                return y.reshape(M * plan.n_blocks, -1)
         x = plan.build_x(vb01 * self.acfg.v_read)
-        return self.block_outputs(x.astype(jnp.float32), eparams)
+        return self.block_outputs(x.astype(jnp.float32), eparams, sfeat)
 
     def _drive01(self, u01: jax.Array) -> jax.Array:
         """Gate-overdrive wordline biasing (AnalogConfig.wl_overdrive): map
@@ -377,7 +447,8 @@ class AnalogExecutor:
                    plan: Optional[ConductancePlan] = None,
                    read_key: Optional[jax.Array] = None,
                    read_sigma=None,
-                   eparams: Optional[dict] = None
+                   eparams: Optional[dict] = None,
+                   sfeat: Optional[jax.Array] = None
                    ) -> Tuple[jax.Array, jax.Array]:
         """Analog forward for (B,K) @ (K,N): dual-rail inputs, tiled blocks,
         digital block-group accumulation. Output in volts (uncalibrated).
@@ -395,7 +466,11 @@ class AnalogExecutor:
         top of whatever plan is in effect (`read_sigma` may be per-tile).
         `eparams` overrides the executor's emulator params -- the scenario
         forward passes hot-swapped retrained params through here as traced
-        arguments."""
+        arguments.  `sfeat` is the scenario-feature vector a conditioned
+        emulator consumes (traced in the scenario forward); with
+        `sfeat=None` and an active scenario it is derived here, so the
+        in-trace path conditions too, and with no scenario the net sees
+        the ideal (all-zero) corner encoding."""
         if plan is None:
             plan = self._plan_for(w, tag)
             sc = self.scenario
@@ -407,6 +482,9 @@ class AnalogExecutor:
                                         self._tag_key(tag))
                 if read_key is None and sc.has_read_noise:
                     read_key, read_sigma = self._next_read_key(), sc.read_sigma
+                if sfeat is None and self.acfg.backend == "emulator" \
+                        and eparams is None and self.emulator_conditioned:
+                    sfeat = self._scenario_features()
         if read_key is not None:
             rs = 0.0 if read_sigma is None else read_sigma
             plan = plan.with_g(
@@ -419,15 +497,22 @@ class AnalogExecutor:
                 and not self._pallas_enabled():
             aux = self._blocklast_aux(eparams)
             pre = self._pre_for(plan, tag, aux)
+            shift = None
+            if sfeat is not None and "f0_scen" in aux:
+                # conditioned corner contribution: one (fc0_out,) bias
+                # shift, exactly zero at the ideal (all-zero) encoding
+                shift = sfeat @ aux["f0_scen"]
             u = plan.tile_v(self._drive01(jnp.abs(x2d) / x_scale), 1.0)
             pos = plan.tile_v((x2d > 0).astype(jnp.float32), 1.0)
             y2 = conv4xbar.apply_blocklast(aux, pre, u, pos,
-                                           chunk=self.fast_chunk)
+                                           chunk=self.fast_chunk,
+                                           fc0_shift=shift)
             return plan.assemble(y2[0]) - plan.assemble(y2[1]), x_scale
         rails = jnp.concatenate([jnp.clip(x2d, 0.0, None),
                                  jnp.clip(-x2d, 0.0, None)], axis=0)
         vb01 = plan.tile_v(self._drive01(rails / x_scale), 1.0)  # (2B,NB,D,H)
-        outs = self._eval_blocks(plan, vb01.astype(jnp.float32), eparams)
+        outs = self._eval_blocks(plan, vb01.astype(jnp.float32), eparams,
+                                 sfeat)
         y = plan.assemble(outs)                       # (2B, N)
         return y[:B] - y[B:], x_scale
 
@@ -451,8 +536,10 @@ class AnalogExecutor:
             rsig = jnp.broadcast_to(
                 jnp.asarray(sc.read_sigma, jnp.float32),
                 (pplan.NB, pplan.NO))
+            sf = (self._scenario_features() if self.acfg.backend == "emulator"
+                  and self.emulator_conditioned else self._zero_sfeat)
             yvs, xss = self._jit_cal_for(tag, w)(
-                xc, pplan.g_feat, rsig, keys, pplan.out_perm, ep)
+                xc, pplan.g_feat, rsig, keys, pplan.out_perm, ep, sf)
             yv, xs = yvs.mean(axis=0), xss[0]
         else:
             yv, xs = jax.jit(lambda xx: self.raw_matmul(xx, w, tag))(xc)
@@ -489,15 +576,15 @@ class AnalogExecutor:
             return ent[2]
         wf = w.astype(jnp.float32)
 
-        def one(xc, gf, rsig, kk, operm, ep):
+        def one(xc, gf, rsig, kk, operm, ep, sf):
             plan = self._plan_for(wf, tag).with_g(gf, self.acfg) \
                 .with_perm(operm)
             return self.raw_matmul(xc, wf, tag, plan=plan, read_key=kk,
                                    read_sigma=rsig,
-                                   eparams=ep if ep else None)
+                                   eparams=ep if ep else None, sfeat=sf)
 
-        fn = jax.jit(lambda xc, gf, rsig, keys, operm, ep: jax.vmap(
-            lambda kk: one(xc, gf, rsig, kk, operm, ep))(keys))
+        fn = jax.jit(lambda xc, gf, rsig, keys, operm, ep, sf: jax.vmap(
+            lambda kk: one(xc, gf, rsig, kk, operm, ep, sf))(keys))
         self._cal_fns[tag] = (w, rls, fn)
         return fn
 
@@ -519,9 +606,9 @@ class AnalogExecutor:
         if ent is not None and ent[0] is w and ent[1] == rls:
             return ent[2]
         wf = w.astype(jnp.float32)
-        fn = jax.jit(lambda x2, a, b, gf, rsig, rkey, operm, ep:
+        fn = jax.jit(lambda x2, a, b, gf, rsig, rkey, operm, ep, sf:
                      _st_matmul_sc(self, tag, x2, wf, a, b, gf, rsig, rkey,
-                                   operm, ep))
+                                   operm, ep, sf))
         self._sc_fns[tag] = (w, rls, fn)
         return fn
 
@@ -547,13 +634,18 @@ class AnalogExecutor:
             ep = (self.emulator_params
                   if self.acfg.backend == "emulator" else {})
             # read sigma always enters tile-shaped so scalar and per-tile
-            # scenarios share ONE compiled forward per tag
+            # scenarios share ONE compiled forward per tag; the scenario
+            # features likewise always enter as one (N_SCENARIO_FEATURES,)
+            # traced vector (zeros when conditioning is inactive)
             rsig = jnp.broadcast_to(
                 jnp.asarray(sc.read_sigma, jnp.float32),
                 (pplan.NB, pplan.NO))
+            sf = (self._scenario_features()
+                  if self.acfg.backend == "emulator"
+                  and self.emulator_conditioned else self._zero_sfeat)
             y = self._jit_sc_for(tag, w)(
                 x2, af, bf, pplan.g_feat, rsig,
-                self._next_read_key(), pplan.out_perm, ep)
+                self._next_read_key(), pplan.out_perm, ep, sf)
         else:
             y = self._jit_for(tag, w)(x2, af, bf)
         return y.reshape(*lead, w.shape[1]).astype(x.dtype)

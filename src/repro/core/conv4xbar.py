@@ -90,6 +90,15 @@ def conv4xbar_schema(geom: BlockGeometry, n_periph: int = 0,
     return s
 
 
+def n_periph_of(params, geom: BlockGeometry) -> int:
+    """Peripheral-feature width a trained param set was bound to (the fc0
+    rows past the conv flatten).  Static even for traced params -- shapes
+    are aval data -- so callers may branch on it at trace time.  ``> 2``
+    means the net is scenario-conditioned: rows ``2:`` of the peripheral
+    block consume ``nonideal.scenario_features`` (docs/emulator.md)."""
+    return int(params["fc0_w"].shape[0]) - flat_features(geom)
+
+
 def _head(params, h, n_fc):
     for i in range(n_fc):
         h = h @ params[f"fc{i}_w"] + params[f"fc{i}_b"]
@@ -195,8 +204,19 @@ def blocklast_weights(params, geom: BlockGeometry,
     n_periph = f0.shape[0] - flat
     b0 = params["fc0_b"]
     if n_periph:
-        pc = jnp.asarray(periph_const[:n_periph], f0.dtype)
+        # pad with zeros past the supplied constants: a conditioned net's
+        # scenario-feature rows (2:) encode the IDEAL corner as exactly 0,
+        # so the zero fold keeps the plain fast path bit-identical to the
+        # unconditioned one; the scenario forward adds the corner's
+        # contribution as a traced fc0 shift (apply_blocklast(fc0_shift=))
+        pc = jnp.zeros((n_periph,), f0.dtype)
+        pc = pc.at[:min(len(periph_const), n_periph)].set(
+            jnp.asarray(periph_const[:n_periph], f0.dtype))
         b0 = b0 + pc @ f0[flat:]
+    if n_periph > len(periph_const):
+        # scenario-feature rows of fc0: the conditioned corner's fc0
+        # contribution is sfeat @ f0_scen, a per-call bias shift
+        aux["f0_scen"] = f0[flat + len(periph_const):]
     fcs = [(perm, b0)]
     for i in range(1, _n_fc(params)):
         fcs.append((params[f"fc{i}_w"], params[f"fc{i}_b"]))
@@ -225,9 +245,12 @@ def blocklast_precompute(aux: dict, g_norm: jax.Array) -> dict:
     return {"g0": g0, "celu0": celu0, "y0": y0}
 
 
-def _tail_stages(aux: dict, h: jax.Array, n: int, shp) -> jax.Array:
+def _tail_stages(aux: dict, h: jax.Array, n: int, shp,
+                 fc0_shift: jax.Array | None = None) -> jax.Array:
     """Conv stages 2.. + FC head on channels-last rows.  h: 2-D (rows, C)
-    laid out as shp=(n, D, W, G) x channels; -> (n, O)."""
+    laid out as shp=(n, D, W, G) x channels; -> (n, O).  ``fc0_shift`` is
+    an optional per-call bias shift on fc0's pre-activation (the
+    conditioned emulator's scenario-feature contribution)."""
     for wk, b, k in aux["hstages"][1:]:
         # one flat GEMM over (k*C) -- batched matmuls over small trailing
         # matrices are pathologically slow on CPU backends
@@ -240,17 +263,24 @@ def _tail_stages(aux: dict, h: jax.Array, n: int, shp) -> jax.Array:
     fcs = aux["fcs"]
     for i, (fw, fb) in enumerate(fcs):
         h = h @ fw + fb
+        if i == 0 and fc0_shift is not None:
+            h = h + fc0_shift
         if i < len(fcs) - 1:
             h = jax.nn.celu(h)
     return h
 
 
 def apply_blocklast(aux: dict, pre: dict, u01: jax.Array, pos01: jax.Array,
-                    *, chunk: int = 4) -> jax.Array:
+                    *, chunk: int = 4,
+                    fc0_shift: jax.Array | None = None) -> jax.Array:
     """Single-pass dual-rail blockified forward.
 
     u01:   (M, NB, D, H) |x|-magnitude wordline drive in [0, 1]
     pos01: (M, NB, D, H) 1.0 where the positive rail is driven (x > 0)
+    fc0_shift: optional (fc0_out,) pre-activation shift -- a conditioned
+    emulator's scenario-feature contribution ``sfeat @ aux["f0_scen"]``,
+    traced so corner/age changes reuse the executable (exactly zero at the
+    ideal corner, where the plain path omits it entirely).
     Returns (2, M*NB*NO, O): block outputs of the (v+, v-) rails.
 
     The stage-0 CELU runs once on the magnitude drive; each rail's stage-1
@@ -288,7 +318,8 @@ def apply_blocklast(aux: dict, pre: dict, u01: jax.Array, pos01: jax.Array,
         h = jax.nn.celu(jnp.stack([y0[None] + t_pos,
                                    y0[None] + t_full - t_pos]))
         n2 = 2 * mc * NB * NO
-        h = _tail_stages(aux, h.reshape(n2, -1), n2, (n2, D, W, G))
+        h = _tail_stages(aux, h.reshape(n2, -1), n2, (n2, D, W, G),
+                         fc0_shift=fc0_shift)
         return h.reshape(2, mc * NB * NO, -1)
 
     vb = v0.reshape(Mp // mc, mc, NB, D, H, C0)

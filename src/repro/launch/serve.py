@@ -39,11 +39,18 @@ def main():
                     help="stuck-fault-aware column remapping: permute output "
                          "columns so large weights avoid the scenario's "
                          "stuck-off cells (requires --scenario)")
+    ap.add_argument("--conditioned-emulator", action="store_true",
+                    help="require --emulator-params to hold a scenario-"
+                         "conditioned Conv4Xbar (peripheral width > 2): one "
+                         "net serves every --scenario/--age corner with zero "
+                         "retraining (docs/emulator.md)")
     args = ap.parse_args()
     if args.scenario and args.analog_backend == "digital":
         ap.error("--scenario requires a non-digital --analog-backend")
     if (args.fault_remap or args.age is not None) and not args.scenario:
         ap.error("--fault-remap / --age require --scenario")
+    if args.conditioned_emulator and args.analog_backend != "emulator":
+        ap.error("--conditioned-emulator requires --analog-backend=emulator")
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -103,6 +110,16 @@ def main():
                               layers=("mlp",), scenario=args.scenario),
             geom=CASE_A, emulator_params=eparams,
             fault_remap=args.fault_remap)
+        if args.conditioned_emulator:
+            from repro.nonideal import (N_SCENARIO_FEATURES,
+                                        SCENARIO_FEATURE_NAMES)
+            assert ex.emulator_conditioned, \
+                "--conditioned-emulator: params are not scenario-" \
+                "conditioned (peripheral width must be 2 + " \
+                f"{N_SCENARIO_FEATURES}; train with " \
+                "nonideal.data.train_conditioned_emulator)"
+            print(f"conditioned emulator: {N_SCENARIO_FEATURES} scenario "
+                  f"features ({', '.join(SCENARIO_FEATURE_NAMES[:4])}, ...)")
         if ex.scenario is not None:
             if args.age is not None:
                 from repro.nonideal import scenario_at_age

@@ -7,11 +7,17 @@ analytic and emulator backends.  Scenarios may be scalar (one corner for
 the whole plan) or (NB, NO)-tile-indexed batches (``tile_scenarios``:
 per-tile fab heterogeneity); ``remap_plan`` adds stuck-fault-aware column
 remapping and ``lifetime`` schedules recalibration / retraining across a
-drift timeline.  See docs/nonideal.md and docs/lifetime.md.
+drift timeline.  ``scenario_features`` encodes a corner as a fixed-length
+vector and ``train_conditioned_emulator`` trains ONE emulator over the
+whole corner manifold (zero per-corner retraining).  See docs/nonideal.md,
+docs/lifetime.md and docs/emulator.md.
 """
-from repro.nonideal.data import (generate_dataset_nonideal,
+from repro.nonideal.data import (ScenarioSpace, generate_dataset_conditioned,
+                                 generate_dataset_nonideal, sample_scenarios,
+                                 train_conditioned_emulator,
                                  train_noise_aware_emulator)
 from repro.nonideal.lifetime import (DEFAULT_TIMELINE, LifetimeScheduler,
+                                     make_conditioned_field_calibrator,
                                      make_field_retrainer,
                                      make_noise_aware_retrainer,
                                      scenario_at_age)
@@ -20,21 +26,26 @@ from repro.nonideal.perturb import (apply_read_noise, drift_factor,
                                     quantize_levels, realized_fault_masks,
                                     remap_plan, sample_fault_masks,
                                     scenario_circuit_params)
-from repro.nonideal.scenario import (BUILTIN_SCENARIOS, Scenario,
+from repro.nonideal.scenario import (BUILTIN_SCENARIOS, N_SCENARIO_FEATURES,
+                                     SCENARIO_FEATURE_NAMES, Scenario,
                                      collapse_tiles, get_scenario,
                                      list_scenarios, register_scenario,
-                                     scenario_from_json, scenario_to_json,
-                                     tile_scenarios)
+                                     scenario_features, scenario_from_json,
+                                     scenario_to_json, tile_scenarios)
 from repro.nonideal.sweep import ScenarioSweep
 
 __all__ = [
-    "BUILTIN_SCENARIOS", "DEFAULT_TIMELINE", "LifetimeScheduler", "Scenario",
-    "ScenarioSweep", "apply_read_noise", "collapse_tiles", "drift_factor",
+    "BUILTIN_SCENARIOS", "DEFAULT_TIMELINE", "LifetimeScheduler",
+    "N_SCENARIO_FEATURES", "SCENARIO_FEATURE_NAMES", "Scenario",
+    "ScenarioSpace", "ScenarioSweep", "apply_read_noise", "collapse_tiles",
+    "drift_factor", "generate_dataset_conditioned",
     "generate_dataset_nonideal", "get_scenario", "list_scenarios",
-    "make_field_retrainer", "make_noise_aware_retrainer",
+    "make_conditioned_field_calibrator", "make_field_retrainer",
+    "make_noise_aware_retrainer",
     "perturb_conductance", "perturb_plan",
     "quantize_levels", "realized_fault_masks", "register_scenario",
-    "remap_plan", "sample_fault_masks", "scenario_at_age",
-    "scenario_circuit_params", "scenario_from_json", "scenario_to_json",
-    "tile_scenarios", "train_noise_aware_emulator",
+    "remap_plan", "sample_fault_masks", "sample_scenarios",
+    "scenario_at_age", "scenario_circuit_params", "scenario_features",
+    "scenario_from_json", "scenario_to_json", "tile_scenarios",
+    "train_conditioned_emulator", "train_noise_aware_emulator",
 ]

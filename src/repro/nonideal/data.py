@@ -7,8 +7,24 @@ draw per training sample) and label with the scenario-adjusted circuit
 learns the response surface of the degraded hardware, which is how
 non-idealities that have no analytic hook (IR drop under faults, drifted
 operating points) reach the emulator backend.
+
+Three training modes live here (docs/emulator.md):
+
+  * ``train_noise_aware_emulator`` -- one net per corner (the original
+    per-configuration protocol);
+  * ``finetune_emulator`` -- warm-start adaptation of a trained net to a
+    new corner (what the lifetime scheduler's retrain callbacks use);
+  * ``train_conditioned_emulator`` -- ONE net for the whole corner
+    manifold: each training sample draws its own scenario from a
+    ``ScenarioSpace`` and the scenario's feature encoding
+    (``scenario_features``) is appended to the peripheral features, so
+    the net learns response-surface-versus-corner jointly and serves any
+    corner/age with zero retraining.
 """
 from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,9 +35,10 @@ from repro.configs.rram_ps32 import BlockGeometry, EmulatorTrainConfig
 from repro.core.circuit import CircuitParams, block_response
 from repro.core.emulator import (EmulatorResult, normalize_features,
                                  sample_block_inputs, train_emulator)
-from repro.nonideal.perturb import (apply_read_noise, perturb_conductance,
+from repro.nonideal.perturb import (_broadcast_scenario, apply_read_noise,
+                                    perturb_conductance,
                                     scenario_circuit_params)
-from repro.nonideal.scenario import Scenario
+from repro.nonideal.scenario import Scenario, scenario_features
 
 
 def generate_dataset_nonideal(key, n: int, geom: BlockGeometry,
@@ -59,6 +76,180 @@ def generate_dataset_nonideal(key, n: int, geom: BlockGeometry,
     Pf = jnp.concatenate(ps) if with_periph else None
     Y = jnp.concatenate(ys)
     return X, Pf, Y
+
+
+# --------------------------------------------------------------------------- #
+# Scenario-conditioned training: one emulator for the whole corner manifold
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class ScenarioSpace:
+    """The corner manifold a conditioned emulator trains over.
+
+    Each field is a ``(lo, hi)`` uniform sampling range for the matching
+    ``Scenario`` knob; drift ages are log-uniform over
+    ``[60 s, drift_t_max]`` with a ``p_undrifted`` point mass at exactly
+    t = 0 (a freshly programmed fleet is a corner the net must serve
+    bit-for-bit well, not a measure-zero edge).  ``n_levels`` is a choice
+    set.  ``r_line_scale`` is deliberately absent: it rewrites the circuit
+    solver's static ``CircuitParams``, so it cannot vary per sample inside
+    one compiled label batch -- line-resistance corners keep the
+    per-corner retrain/fine-tune path (docs/emulator.md).  The defaults
+    cover every built-in registry corner except ``ir_degraded``.
+    """
+    prog_sigma: Tuple[float, float] = (0.0, 0.15)
+    read_sigma: Tuple[float, float] = (0.0, 0.06)
+    p_stuck_on: Tuple[float, float] = (0.0, 0.01)
+    p_stuck_off: Tuple[float, float] = (0.0, 0.06)
+    drift_nu: Tuple[float, float] = (0.0, 0.08)
+    drift_t_max: float = 2_592_000.0          # one month
+    p_undrifted: float = 0.25
+    n_levels: Tuple[int, ...] = (0, 16, 32)
+    # serving-statistics mixture.  Per-checkpoint field fine-tunes train
+    # on the fleet's own serving distribution; for ONE conditioned net to
+    # match them with zero retraining, its training data must cover that
+    # distribution too, not just uniform (V, G) blocks:
+    #   * with probability ``p_serving_drive`` a sample's voltages are
+    #     drawn the way the executor drives them -- per-row zero with
+    #     probability ``serve_sparsity`` (a rail sees relu'd activations),
+    #     nonzero rows gate-overdriven into [v_th, v_read]
+    #     (``AnalogConfig.wl_overdrive``) -- instead of uniform;
+    #   * with probability ``p_weightlike`` a sample's conductances are
+    #     WEIGHT-derived differential pairs (one rail at g_min, the other
+    #     encoding |w| of a random sub-unit-scale weight, exactly
+    #     ``crossbar.weights_to_conductance``) instead of uniform over
+    #     [g_min, g_max]^W -- the low-g differential manifold serving
+    #     actually lives on (and drift pushes further down).
+    p_serving_drive: float = 0.5
+    serve_sparsity: float = 0.5
+    p_weightlike: float = 0.5
+    weight_scale: Tuple[float, float] = (0.05, 0.6)
+
+
+def sample_scenarios(key, n: int,
+                     space: Optional[ScenarioSpace] = None) -> Scenario:
+    """One ``Scenario`` whose numeric leaves are ``(n,)`` arrays -- n
+    independent corners drawn from ``space``, ready to vmap a per-sample
+    perturbation over (the batch-axis twin of ``tile_scenarios``)."""
+    space = space if space is not None else ScenarioSpace()
+    ks = jax.random.split(key, 8)
+
+    def u(k, rng):
+        return jax.random.uniform(k, (n,), minval=rng[0], maxval=rng[1])
+
+    t_raw = jnp.exp(jax.random.uniform(
+        ks[5], (n,), minval=jnp.log(60.0),
+        maxval=jnp.log(jnp.maximum(space.drift_t_max, 61.0))))
+    drift_t = jnp.where(jax.random.uniform(ks[6], (n,)) < space.p_undrifted,
+                        0.0, t_raw)
+    nl = jnp.asarray(space.n_levels, jnp.int32)[
+        jax.random.randint(ks[7], (n,), 0, len(space.n_levels))]
+    s = Scenario(name="manifold",
+                 prog_sigma=u(ks[0], space.prog_sigma),
+                 read_sigma=u(ks[1], space.read_sigma),
+                 p_stuck_on=u(ks[2], space.p_stuck_on),
+                 p_stuck_off=u(ks[3], space.p_stuck_off),
+                 drift_nu=u(ks[4], space.drift_nu),
+                 drift_t=drift_t, n_levels=nl)
+    # broadcast the remaining scalar leaves (drift_t0) to (n,) so every
+    # leaf carries the batch axis and a plain vmap(in_axes=0) applies
+    return _broadcast_scenario(s, (n,))
+
+
+def generate_dataset_conditioned(key, n: int, geom: BlockGeometry,
+                                 acfg: AnalogConfig, cp: CircuitParams,
+                                 space: Optional[ScenarioSpace] = None,
+                                 batch: int = 2048):
+    """Training data for the scenario-conditioned emulator.
+
+    Every sample draws its OWN corner from ``space`` (then its own device
+    and read draw under that corner), so one dataset covers the manifold
+    instead of one frozen scenario; the sample's feature encoding
+    (``scenario_features``) is appended to the peripheral features --
+    ``Pf`` is ``(n, 2 + N_SCENARIO_FEATURES)`` and ``train_emulator``
+    sizes the net's fc0 accordingly.  A ``p_serving_drive`` fraction of
+    samples swaps the uniform wordline voltages for serving-statistics
+    drives (sparse rails, gate-overdriven levels), closing the
+    train/serve distribution gap the per-checkpoint field fine-tunes
+    otherwise exploit.  Labels come from the base circuit solver on the
+    perturbed conductances (``r_line_scale`` is static and stays 1 --
+    see ``ScenarioSpace``)."""
+    space = space if space is not None else ScenarioSpace()
+    solve = jax.jit(lambda x, p: block_response(x, cp, p))
+
+    def _one(xi, si: Scenario, kd, kr):
+        g = perturb_conductance(xi[1], acfg, si, kd)
+        g = apply_read_noise(g, acfg, si.read_sigma, kr)
+        return xi.at[1].set(g), scenario_features(si)
+
+    perturb = jax.jit(jax.vmap(_one))
+
+    def _mix_serving(x, k):
+        """Swap a fraction of samples onto serving statistics: drive rows
+        sparse + overdriven into [v_th, v_read] (matching ``_drive01``),
+        conductances weight-derived differential pairs (matching
+        ``build_conductance_plan``)."""
+        ka, kb, kc, kd_, ke, kf = jax.random.split(k, 6)
+        B = x.shape[0]
+        vshape = (B,) + x.shape[2:4]                   # (B, D, H)
+        live = jax.random.uniform(ka, vshape) >= space.serve_sparsity
+        lvl = cp.v_th + jax.random.uniform(kb, vshape) * (acfg.v_read
+                                                          - cp.v_th)
+        v_serve = jnp.where(live, lvl, 0.0)
+        pick_v = (jax.random.uniform(kc, (B, 1, 1))
+                  < space.p_serving_drive)
+        v = jnp.where(pick_v, v_serve, x[:, 0, :, :, 0])
+        x = x.at[:, 0].set(
+            jnp.broadcast_to(v[..., None], (B,) + x.shape[2:]))
+        # weight-like differential conductances: wn in [-1, 1] at a random
+        # per-sample scale, G+ <- w > 0, G- <- -w > 0 (other rail g_min)
+        no = x.shape[4] // 2
+        wshape = (B,) + x.shape[2:4] + (no,)
+        lo, hi = space.weight_scale
+        s = jnp.exp(jax.random.uniform(kd_, (B, 1, 1, 1),
+                                       minval=jnp.log(lo),
+                                       maxval=jnp.log(hi)))
+        wn = jnp.clip(jax.random.normal(ke, wshape) * s, -1.0, 1.0)
+        span = acfg.g_max - acfg.g_min
+        gp = acfg.g_min + span * jnp.clip(wn, 0.0, 1.0)
+        gn = acfg.g_min + span * jnp.clip(-wn, 0.0, 1.0)
+        g_w = jnp.stack([gp, gn], axis=-1).reshape((B,) + x.shape[2:])
+        pick_g = (jax.random.uniform(kf, (B, 1, 1, 1))
+                  < space.p_weightlike)
+        return x.at[:, 1].set(jnp.where(pick_g, g_w, x[:, 1]))
+
+    mix = jax.jit(_mix_serving)
+    xs, ps, ys = [], [], []
+    done = 0
+    while done < n:
+        b = min(batch, n - done)
+        key, ks, kc, kd, kr, kv = jax.random.split(key, 6)
+        # fixed-size sample + tail slice: compiles exactly once
+        x, periph = sample_block_inputs(ks, batch, geom, acfg, True)
+        x = mix(x, kv)
+        scen = sample_scenarios(kc, batch, space)
+        x, sfeat = perturb(x, scen, jax.random.split(kd, batch),
+                           jax.random.split(kr, batch))
+        y = solve(x, periph)
+        xs.append(normalize_features(x[:b], acfg))
+        ps.append(jnp.concatenate([periph[:b], sfeat[:b]], axis=-1))
+        ys.append(y[:b])
+        done += b
+    return jnp.concatenate(xs), jnp.concatenate(ps), jnp.concatenate(ys)
+
+
+def train_conditioned_emulator(key, geom: BlockGeometry, acfg: AnalogConfig,
+                               cp: CircuitParams, tcfg: EmulatorTrainConfig,
+                               space: Optional[ScenarioSpace] = None,
+                               log_every: int = 0) -> EmulatorResult:
+    """Paper training protocol over the corner manifold: ONE age-aware,
+    corner-aware Conv4Xbar (peripheral width 2 + N_SCENARIO_FEATURES)
+    that replaces per-corner retraining and the lifetime scheduler's
+    per-checkpoint fine-tunes (docs/emulator.md)."""
+    kd, kt = jax.random.split(key)
+    data = generate_dataset_conditioned(kd, tcfg.n_train + tcfg.n_test,
+                                        geom, acfg, cp, space=space)
+    return train_emulator(kt, geom, acfg, cp, tcfg, data=data,
+                          log_every=log_every)
 
 
 def train_noise_aware_emulator(key, geom: BlockGeometry, acfg: AnalogConfig,

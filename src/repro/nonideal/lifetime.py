@@ -15,6 +15,17 @@ applies the three mitigations the rest of the subsystem provides:
   * **retrain**  -- noise-aware emulator retraining on the aged corner,
                     hot-swapped with ``AnalogExecutor.set_emulator_params``
 
+A fourth option supersedes the third: a *scenario-conditioned* emulator
+(``nonideal.data.train_conditioned_emulator``, docs/emulator.md) reads
+the aged corner off its scenario-feature input, so the scheduler limits
+retraining to a ONE-TIME deployment field calibration
+(``make_conditioned_field_calibrator``: the realized device across its
+predicted drift trajectory, knowable at t = 0 because drift is
+deterministic given the fabrication draw) and the walk needs zero
+retraining between checkpoints (``prefer_conditioned``) -- the
+per-checkpoint fine-tune path stays available as the fallback and the
+accuracy baseline.
+
 All three ride the executor's per-tag *scenario forward*, whose perturbed
 conductances, calibration affine, remap permutation and emulator params
 are traced arguments -- so an entire lifetime walk (ages x remaps x
@@ -91,6 +102,28 @@ def make_noise_aware_retrainer(geom, acfg, cp, key: jax.Array,
     return retrain
 
 
+def _probe_blocks(ex, plan, key: jax.Array, n: int, w, solve):
+    """Serving-exact probe blocks for field fine-tuning: drive ``n``
+    random inputs through the plan's rail/tile path exactly as
+    ``raw_matmul`` does (dual rail, gate overdrive), label with the
+    circuit ``solve`` fn.  Returns ``(X_normalized, periph2, Y)`` --
+    every retrain/calibration callback shares this one construction so
+    the train/serve drive discipline cannot drift apart."""
+    from repro.core.emulator import normalize_features
+
+    xc = jax.random.normal(key, (n, w.shape[0])) * 0.5
+    x2 = xc.astype(jnp.float32)
+    x_scale = jnp.maximum(jnp.max(jnp.abs(x2)), 1e-9)
+    rails = jnp.concatenate([jnp.clip(x2, 0.0, None),
+                             jnp.clip(-x2, 0.0, None)], axis=0)
+    vb01 = plan.tile_v(ex._drive01(rails / x_scale), 1.0)
+    xb = plan.build_x(vb01 * ex.acfg.v_read).astype(jnp.float32)
+    periph = jnp.concatenate([jnp.ones((xb.shape[0], 1), jnp.float32),
+                              jnp.zeros((xb.shape[0], 1), jnp.float32)],
+                             axis=-1)
+    return normalize_features(xb, ex.acfg), periph, solve(xb, periph)
+
+
 def make_field_retrainer(key: jax.Array, n: int = 192, epochs: int = 40,
                          batch_size: int = 512, lr: float = 3e-4) -> Callable:
     """Serving-distribution retrain callback: fine-tune the emulator on
@@ -107,26 +140,80 @@ def make_field_retrainer(key: jax.Array, n: int = 192, epochs: int = 40,
     number of (K,)-input probes; each contributes ``2 * n_blocks`` block
     samples (both rails)."""
     from repro.core.circuit import block_response
-    from repro.core.emulator import normalize_features
     from repro.nonideal.data import finetune_emulator
     from repro.nonideal.perturb import scenario_circuit_params
 
     def retrain(scenario: Scenario, t: float, ex, w, tag: str) -> dict:
         plan = ex._scenario_plan(tag, w)          # the fleet's aged devices
-        xc = jax.random.normal(jax.random.fold_in(key, 0xF1E1D),
-                               (n, w.shape[0])) * 0.5
-        x2 = xc.astype(jnp.float32)
-        x_scale = jnp.maximum(jnp.max(jnp.abs(x2)), 1e-9)
-        rails = jnp.concatenate([jnp.clip(x2, 0.0, None),
-                                 jnp.clip(-x2, 0.0, None)], axis=0)
-        vb01 = plan.tile_v(ex._drive01(rails / x_scale), 1.0)
-        xb = plan.build_x(vb01 * ex.acfg.v_read).astype(jnp.float32)
-        periph = jnp.concatenate([jnp.ones((xb.shape[0], 1), jnp.float32),
-                                  jnp.zeros((xb.shape[0], 1), jnp.float32)],
-                                 axis=-1)
         cp_s = scenario_circuit_params(ex.cp, collapse_tiles(scenario))
-        y = jax.jit(lambda b, p: block_response(b, cp_s, p))(xb, periph)
-        data = (normalize_features(xb, ex.acfg), periph, y)
+        solve = jax.jit(lambda b, p: block_response(b, cp_s, p))
+        data = _probe_blocks(ex, plan, jax.random.fold_in(key, 0xF1E1D),
+                             n, w, solve)
+        return finetune_emulator(key, ex.emulator_params, ex.geom, ex.acfg,
+                                 ex.cp, scenario, epochs=epochs,
+                                 batch_size=batch_size, lr=lr, data=data)
+
+    return retrain
+
+
+def make_conditioned_field_calibrator(key: jax.Array,
+                                      ages: Tuple[float, ...] = (
+                                          0.0, 3_600.0, 86_400.0,
+                                          604_800.0, 2_592_000.0),
+                                      n: int = 96, epochs: int = 240,
+                                      batch_size: int = 512,
+                                      lr: float = 3e-4) -> Callable:
+    """Deployment-only field calibration for a CONDITIONED emulator.
+
+    ``make_field_retrainer`` closes the train/serve gap by fine-tuning on
+    the fleet's own realized devices -- but it must re-run at every
+    checkpoint because the unconditioned net cannot represent age.  A
+    conditioned net can, so the device-specific adaptation is paid ONCE,
+    at deployment: retention drift is deterministic given ``(nu, t)``
+    (``g * (t/t0)^-nu`` on the fabrication draw the executor already
+    holds), so the fleet's aged devices are *predictable* at t = 0.  This
+    callback fine-tunes on the realized device at every age in ``ages``
+    jointly -- each age's blocks carrying that age's
+    ``scenario_features`` in the peripheral vector -- and returns None at
+    every later checkpoint (zero retraining between checkpoints; the
+    scheduler records ``retrained`` only at deploy).  The conditioned
+    forward then tracks the fleet between and beyond the calibrated ages
+    through its ``drift_age`` input.  The default ``epochs`` is sized to
+    the per-checkpoint loop's CUMULATIVE optimization budget (4-5
+    checkpoints x ~50 epochs) -- same total work, paid once, off the
+    serving path; ``bench_lifetime`` shows it matching or beating the
+    per-checkpoint fine-tunes at every drift checkpoint."""
+    from repro.core.circuit import block_response
+    from repro.nonideal.data import finetune_emulator
+    from repro.nonideal.perturb import scenario_circuit_params
+    from repro.nonideal.scenario import scenario_features
+
+    def retrain(scenario: Scenario, t: float, ex, w,
+                tag: str) -> Optional[dict]:
+        if t > 0.0:
+            return None                   # deployment-only
+        cp_s = scenario_circuit_params(ex.cp, collapse_tiles(scenario))
+        solve = jax.jit(lambda b, p2: block_response(b, cp_s, p2))
+        xs, ps, ys = [], [], []
+        for i, ta in enumerate(ages):
+            aged = scenario_at_age(scenario, ta)
+            # serving-exact aged plan: same fabrication key, same remap
+            # discipline the executor will use at this age
+            ex.set_scenario(aged, key=ex.scenario_key)
+            plan = ex._scenario_plan(tag, w)
+            X, periph2, y = _probe_blocks(ex, plan,
+                                          jax.random.fold_in(key, i),
+                                          n, w, solve)
+            sf = jnp.asarray(scenario_features(aged), jnp.float32)
+            xs.append(X)
+            ps.append(jnp.concatenate(
+                [periph2,
+                 jnp.broadcast_to(sf[None], (X.shape[0], sf.shape[0]))],
+                axis=-1))
+            ys.append(y)
+        ex.set_scenario(scenario_at_age(scenario, 0.0), key=ex.scenario_key)
+        data = (jnp.concatenate(xs), jnp.concatenate(ps),
+                jnp.concatenate(ys))
         return finetune_emulator(key, ex.emulator_params, ex.geom, ex.acfg,
                                  ex.cp, scenario, epochs=epochs,
                                  batch_size=batch_size, lr=lr, data=data)
@@ -152,6 +239,16 @@ class LifetimeScheduler:
                    ``make_noise_aware_retrainer`` on the corner's
                    distribution); returned params are hot-swapped via
                    ``set_emulator_params``.
+      prefer_conditioned: when the executor serves a *scenario-conditioned*
+                   emulator (``AnalogExecutor.emulator_conditioned``), run
+                   the retrain callback at DEPLOYMENT only (one-time field
+                   calibration, e.g.
+                   ``make_conditioned_field_calibrator``) and never
+                   between checkpoints -- the net reads the aged corner
+                   off its scenario-feature input (docs/emulator.md).
+                   Set False to force per-checkpoint fine-tuning (the
+                   accuracy baseline ``bench_lifetime`` compares
+                   against).
       key:         fleet fabrication key (fixed: the same devices age
                    through every checkpoint).
       calib_n:     calibration sample count (keep small for the circuit
@@ -169,6 +266,7 @@ class LifetimeScheduler:
     remap: bool = True
     recalibrate: bool = True
     retrain: Optional[Callable[..., Optional[dict]]] = None
+    prefer_conditioned: bool = True
     key: Optional[jax.Array] = None
     calib_n: int = 128
     history: List[dict] = field(default_factory=list)
@@ -176,6 +274,26 @@ class LifetimeScheduler:
     def __post_init__(self):
         if self.key is None:
             self.key = jax.random.PRNGKey(0)
+
+    @property
+    def conditioned(self) -> bool:
+        """True when the walk rides a scenario-conditioned emulator instead
+        of per-checkpoint fine-tunes (see ``prefer_conditioned``)."""
+        return self.prefer_conditioned \
+            and getattr(self.ex, "emulator_conditioned", False)
+
+    def _retrain(self, scenario: Scenario, t: float, w, tag: str) -> bool:
+        """Run the retrain callback under the conditioned-first policy
+        (conditioned net => deployment-time calibration only, zero
+        retraining between checkpoints); True iff params were
+        hot-swapped."""
+        if self.retrain is None or (self.conditioned and t > 0.0):
+            return False
+        params = self.retrain(scenario, t, self.ex, w, tag)
+        if params is None:
+            return False
+        self.ex.set_emulator_params(params)
+        return True
 
     def _calibrate(self, w, tag: str, step: int):
         k = jax.random.fold_in(jax.random.fold_in(self.key, 0xCA1), step)
@@ -187,18 +305,15 @@ class LifetimeScheduler:
         Both the mitigated and the unmitigated lifetime start here: a
         freshly deployed fleet is always calibrated once.  A configured
         ``retrain`` callback also runs at deployment -- field calibration
-        of the emulator against the fresh hardware, before drift sets in."""
+        of the emulator against the fresh hardware, before drift sets in
+        -- unless a conditioned net supersedes it (``prefer_conditioned``)."""
         self.ex.fault_remap = self.remap
         sc0 = scenario_at_age(self.scenario, 0.0)
         self.ex.set_scenario(sc0, key=self.key)
-        retrained = False
-        if self.retrain is not None:
-            params = self.retrain(sc0, 0.0, self.ex, w, tag)
-            if params is not None:
-                self.ex.set_emulator_params(params)
-                retrained = True
+        retrained = self._retrain(sc0, 0.0, w, tag)
         self._calibrate(w, tag, 0)
-        self.history = [{"label": "t0", "t": 0.0, "retrained": retrained}]
+        self.history = [{"label": "t0", "t": 0.0, "retrained": retrained,
+                         "conditioned": self.conditioned}]
         return sc0
 
     def step(self, w, tag: str, label: str, t: float) -> Scenario:
@@ -207,15 +322,11 @@ class LifetimeScheduler:
         the affine must be fitted against the params that will serve)."""
         aged = scenario_at_age(self.scenario, t)
         self.ex.set_scenario(aged, key=self.key)   # same fleet, older
-        retrained = False
-        if self.retrain is not None:
-            params = self.retrain(aged, t, self.ex, w, tag)
-            if params is not None:
-                self.ex.set_emulator_params(params)
-                retrained = True
+        retrained = self._retrain(aged, t, w, tag)
         if self.recalibrate:
             self._calibrate(w, tag, len(self.history))
-        self.history.append({"label": label, "t": t, "retrained": retrained})
+        self.history.append({"label": label, "t": t, "retrained": retrained,
+                             "conditioned": self.conditioned})
         return aged
 
     def run(self, w, tag: str, x) -> List[dict]:

@@ -222,6 +222,75 @@ def collapse_tiles(s: Scenario) -> Scenario:
 
 
 # --------------------------------------------------------------------------- #
+# Scenario feature encoding (the conditioned emulator's corner descriptor)
+# --------------------------------------------------------------------------- #
+# Canonical layout of the scenario-feature vector appended to the emulator's
+# peripheral features (docs/emulator.md).  The ordering is part of the
+# trained-params contract: a conditioned Conv4Xbar's fc0 rows are bound to
+# THESE positions, so the tuple is append-only and JSON-stable (tests pin
+# it).  Per-tile scenario batches are reduced to fixed-length summary stats
+# (mean + max over the (NB, NO) tile lattice), so scalar and tiled corners
+# share one encoding.  Every feature is exactly 0.0 at the ideal corner --
+# that is what makes the ideal conditioned forward bit-identical to the
+# unconditioned fast path (the zero block contributes nothing to fc0).
+SCENARIO_FEATURE_NAMES: Tuple[str, ...] = (
+    "prog_sigma_mean", "prog_sigma_max",
+    "read_sigma_mean", "read_sigma_max",
+    "p_stuck_on_mean", "p_stuck_on_max",
+    "p_stuck_off_mean", "p_stuck_off_max",
+    "drift_nu_mean", "drift_nu_max",
+    "drift_age",          # log1p(mean(drift_t / drift_t0)) / 16
+    "r_line_scale_m1",    # r_line_scale - 1
+    "quant_inv",          # 2 / n_levels for n_levels >= 2, else 0
+)
+N_SCENARIO_FEATURES = len(SCENARIO_FEATURE_NAMES)
+
+# drift_age normalizer: log1p(1 month / 1 s) ~= 14.8, so /16 keeps the
+# feature in [0, ~1] over any plausible service life
+_DRIFT_AGE_SCALE = 16.0
+
+
+def scenario_features(s: Scenario) -> jax.Array:
+    """Encode a scenario as the fixed-length ``(N_SCENARIO_FEATURES,)`` f32
+    vector a conditioned emulator consumes (layout:
+    ``SCENARIO_FEATURE_NAMES``).
+
+    Pure jnp on the numeric leaves, so it traces: inside the executor's
+    scenario forward (or a ``ScenarioSweep``) the features are functions of
+    traced leaves and corner/age changes never recompile.  Per-tile
+    ``(NB, NO)`` leaves reduce to (mean, max) summary stats; scalar leaves
+    reduce to themselves, so a scalar corner and its uniform tile batch
+    encode identically.  ``r_line_scale`` is static aux data and enters as
+    a constant.  The ideal scenario encodes to the all-zero vector:
+
+    >>> import numpy as np
+    >>> from repro.nonideal import Scenario, scenario_features
+    >>> bool(np.all(np.asarray(scenario_features(Scenario())) == 0.0))
+    True
+    """
+    def mean(v):
+        return jnp.mean(jnp.asarray(v, jnp.float32))
+
+    def mx(v):
+        return jnp.max(jnp.asarray(v, jnp.float32))
+
+    age = jnp.log1p(mean(s.drift_t) / jnp.maximum(mean(s.drift_t0), 1e-30)) \
+        / _DRIFT_AGE_SCALE
+    nl = mx(s.n_levels)
+    quant = jnp.where(nl >= 2.0, 2.0 / jnp.maximum(nl, 2.0), 0.0)
+    return jnp.stack([
+        mean(s.prog_sigma), mx(s.prog_sigma),
+        mean(s.read_sigma), mx(s.read_sigma),
+        mean(s.p_stuck_on), mx(s.p_stuck_on),
+        mean(s.p_stuck_off), mx(s.p_stuck_off),
+        mean(s.drift_nu), mx(s.drift_nu),
+        age,
+        jnp.asarray(s.r_line_scale - 1.0, jnp.float32),
+        quant,
+    ])
+
+
+# --------------------------------------------------------------------------- #
 # String-keyed registry + JSON (de)serialization
 # --------------------------------------------------------------------------- #
 _REGISTRY: Dict[str, Scenario] = {}

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.nonideal.perturb import perturb_plan
-from repro.nonideal.scenario import Scenario
+from repro.nonideal.scenario import Scenario, scenario_features
 
 
 class ScenarioSweep:
@@ -55,12 +55,17 @@ class ScenarioSweep:
         def fwd(x2, scen: Scenario, keys, a, b):
             self.trace_count += 1          # trace-time side effect, by design
             plan = ex._plan_for(w, tag)    # concrete w -> cached, baked
+            # conditioned emulator: the swept corner's feature encoding is
+            # a function of the traced scenario leaves, so it rides the
+            # same single executable as the corner sweep itself
+            sf = (scenario_features(scen)
+                  if getattr(ex, "emulator_conditioned", False) else None)
 
             def one(k):
                 kd, kr = jax.random.split(k)
                 p = perturb_plan(plan, ex.acfg, scen, kd)
                 yv, xs = ex.raw_matmul(x2, w, tag, plan=p, read_key=kr,
-                                       read_sigma=scen.read_sigma)
+                                       read_sigma=scen.read_sigma, sfeat=sf)
                 return (a * yv + b) * xs
 
             return jax.vmap(one)(keys)

@@ -1,0 +1,280 @@
+"""Tests for the scenario-conditioned emulator: the scenario_features
+encoding (fixed length, pinned ordering, per-tile reduction determinism,
+JSON stability, all-zero ideal), conditioned training data / schema
+plumbing, fast-path/slow-path agreement of the conditioned forward, ideal
+bit-identity, compile-cache invariance across corner/age swaps, and the
+lifetime scheduler's conditioned-first policy."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import CASE_A, EmulatorTrainConfig
+from repro.core import conv4xbar
+from repro.core.analog import AnalogExecutor
+from repro.core.circuit import CircuitParams
+from repro.models.common import init_params
+from repro.nonideal import (BUILTIN_SCENARIOS, N_SCENARIO_FEATURES,
+                            SCENARIO_FEATURE_NAMES, LifetimeScheduler,
+                            Scenario, ScenarioSweep, get_scenario,
+                            sample_scenarios, scenario_at_age,
+                            scenario_features, tile_scenarios)
+from repro.nonideal.data import generate_dataset_conditioned
+
+ACFG = AnalogConfig()
+NF = N_SCENARIO_FEATURES
+
+
+def _cond_params(seed=7):
+    return init_params(jax.random.PRNGKey(seed),
+                       conv4xbar.conv4xbar_schema(CASE_A, n_periph=2 + NF))
+
+
+def _executor(params=None, **kw):
+    kw.setdefault("use_pallas", False)
+    return AnalogExecutor(
+        acfg=AnalogConfig(backend="emulator"), geom=CASE_A,
+        emulator_params=params if params is not None else _cond_params(),
+        **kw)
+
+
+def _data(K=70, N=8, B=4, seed=0):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (K, N)) * 0.3
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, K)) * 0.5
+    return x, w
+
+
+# --------------------------------------------------------------------------- #
+# Feature encoding
+# --------------------------------------------------------------------------- #
+def test_feature_layout_is_pinned():
+    """The ordering is part of the trained-params contract (fc0 rows bind
+    to positions): any reorder/rename must be caught, append-only."""
+    assert SCENARIO_FEATURE_NAMES == (
+        "prog_sigma_mean", "prog_sigma_max",
+        "read_sigma_mean", "read_sigma_max",
+        "p_stuck_on_mean", "p_stuck_on_max",
+        "p_stuck_off_mean", "p_stuck_off_max",
+        "drift_nu_mean", "drift_nu_max",
+        "drift_age", "r_line_scale_m1", "quant_inv")
+    assert N_SCENARIO_FEATURES == len(SCENARIO_FEATURE_NAMES)
+
+
+def test_features_fixed_length_and_finite_across_registry():
+    for s in BUILTIN_SCENARIOS:
+        v = np.asarray(scenario_features(s))
+        assert v.shape == (NF,) and v.dtype == np.float32
+        assert np.all(np.isfinite(v))
+
+
+def test_ideal_scenario_encodes_to_zero():
+    assert np.array_equal(np.asarray(scenario_features(Scenario())),
+                          np.zeros(NF, np.float32))
+    # and a uniformly-ideal tile batch too
+    assert np.array_equal(np.asarray(scenario_features(tile_scenarios(2, 4))),
+                          np.zeros(NF, np.float32))
+
+
+def test_per_tile_reduction_deterministic_and_correct():
+    grad = np.linspace(0.0, 0.3, 4)
+    s = tile_scenarios(2, 4, prog_sigma=np.broadcast_to(grad, (2, 4)),
+                       p_stuck_off=0.01, name="grad")
+    v1 = np.asarray(scenario_features(s))
+    v2 = np.asarray(scenario_features(s))
+    np.testing.assert_array_equal(v1, v2)              # deterministic
+    i = SCENARIO_FEATURE_NAMES.index
+    assert v1[i("prog_sigma_mean")] == pytest.approx(grad.mean())
+    assert v1[i("prog_sigma_max")] == pytest.approx(grad.max())
+    assert v1[i("p_stuck_off_mean")] == pytest.approx(0.01)
+    # a uniform tile batch encodes identically to its scalar corner
+    u = tile_scenarios(2, 4, prog_sigma=0.05, name="uni")
+    np.testing.assert_allclose(
+        np.asarray(scenario_features(u)),
+        np.asarray(scenario_features(Scenario(name="sc", prog_sigma=0.05))),
+        rtol=1e-6)
+
+
+def test_features_json_roundtrip_stable():
+    """The encoding survives a JSON round trip bit-for-bit (feature vectors
+    are logged next to BENCH artifacts and must be reproducible)."""
+    for s in (get_scenario("stressed"),
+              tile_scenarios(2, 3, prog_sigma=0.07, drift_nu=0.05,
+                             drift_t=3.6e3, name="rt")):
+        v = np.asarray(scenario_features(s), np.float32)
+        back = np.asarray(json.loads(json.dumps(v.tolist())), np.float32)
+        np.testing.assert_array_equal(v, back)
+
+
+def test_drift_age_monotone_in_t():
+    ages = [float(np.asarray(scenario_features(
+        scenario_at_age(Scenario(name="d", drift_nu=0.05), t)))[
+            SCENARIO_FEATURE_NAMES.index("drift_age")])
+        for t in (0.0, 3.6e3, 8.64e4, 2.592e6)]
+    assert ages[0] == 0.0
+    assert all(a < b for a, b in zip(ages, ages[1:]))
+
+
+# --------------------------------------------------------------------------- #
+# Conditioned training data
+# --------------------------------------------------------------------------- #
+def test_sampled_scenarios_and_dataset_shapes():
+    s = sample_scenarios(jax.random.PRNGKey(0), 16)
+    assert s.prog_sigma.shape == (16,) and s.drift_t0.shape == (16,)
+    assert s.n_levels.dtype == jnp.int32
+    # some undrifted samples, some aged (the t=0 point mass)
+    t = np.asarray(s.drift_t)
+    assert (t == 0.0).any() and (t > 0.0).any()
+    X, Pf, Y = generate_dataset_conditioned(
+        jax.random.PRNGKey(1), 40, CASE_A, ACFG, CircuitParams(), batch=32)
+    assert X.shape[0] == Pf.shape[0] == Y.shape[0] == 40
+    assert Pf.shape[-1] == 2 + NF                      # gain, offset, sfeat
+    assert np.all(np.isfinite(np.asarray(Y)))
+
+
+def test_n_periph_detection():
+    assert conv4xbar.n_periph_of(_cond_params(), CASE_A) == 2 + NF
+    plain = init_params(jax.random.PRNGKey(1),
+                        conv4xbar.conv4xbar_schema(CASE_A, n_periph=2))
+    assert conv4xbar.n_periph_of(plain, CASE_A) == 2
+    assert _executor().emulator_conditioned
+    assert not _executor(plain).emulator_conditioned
+
+
+# --------------------------------------------------------------------------- #
+# Conditioned forward: correctness + bit-identity + cache invariance
+# --------------------------------------------------------------------------- #
+def test_conditioned_fastpath_matches_periph_concat():
+    """The blocklast fc0-shift formulation must agree with the reference
+    path that concatenates the features into the peripheral vector."""
+    x, w = _data()
+    sf = scenario_features(get_scenario("stressed"))
+    fast = _executor()
+    slow = _executor(fast.emulator_params, fast_path=False)
+    yf, sfx = fast.raw_matmul(x, w, "t", sfeat=sf)
+    ys, ssx = slow.raw_matmul(x, w, "t", sfeat=sf)
+    np.testing.assert_allclose(np.asarray(yf), np.asarray(ys),
+                               rtol=2e-4, atol=2e-6)
+    np.testing.assert_array_equal(np.asarray(sfx), np.asarray(ssx))
+    # and the features visibly steer the conditioned net
+    y0, _ = fast.raw_matmul(x, w, "t")
+    assert not np.allclose(np.asarray(yf), np.asarray(y0))
+
+
+def test_conditioned_ideal_bit_identical_to_plain():
+    x, w = _data()
+    ex0 = _executor()
+    y0 = np.asarray(ex0.matmul(x, w, "t"))
+    ex1 = _executor(ex0.emulator_params)
+    ex1.set_scenario(Scenario(name="ideal"), key=jax.random.PRNGKey(9))
+    np.testing.assert_array_equal(np.asarray(ex1.matmul(x, w, "t")), y0)
+    # scenario forward fed the ideal (all-zero) feature block explicitly
+    plan = ex1._plan_for(w, "t")
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    y_sc = ex1._jit_sc_for("t", w)(
+        x2, jnp.float32(1.0), jnp.float32(0.0), plan.g_feat,
+        jnp.float32(0.0), jax.random.PRNGKey(0),
+        jnp.arange(plan.N, dtype=jnp.int32), ex1.emulator_params,
+        ex1._zero_sfeat)
+    np.testing.assert_array_equal(np.asarray(y_sc), y0)
+
+
+def test_corner_and_age_swaps_zero_recompiles():
+    """The tentpole cache invariant: sweeping corners AND ages through the
+    conditioned forward (features, conductances, params all traced) must
+    reuse exactly one executable per tag."""
+    x, w = _data()
+    ex = _executor(fault_remap=True)
+    outs = []
+    for sc in (get_scenario("stressed"),
+               scenario_at_age(get_scenario("stressed"), 3.6e3),
+               scenario_at_age(get_scenario("stressed"), 2.592e6),
+               get_scenario("prog_heavy"),
+               get_scenario("drift_1day")):
+        ex.set_scenario(sc, key=jax.random.PRNGKey(1))
+        outs.append(np.asarray(ex.matmul(x, w, "t")))
+    fn = ex._sc_fns["t"][2]
+    assert fn._cache_size() == 1
+    # ages actually change the served numbers (the net sees drift_age)
+    assert not np.allclose(outs[1], outs[2])
+    # per-tile batch rides the same executable too
+    plan = ex._plan_for(w, "t")
+    ex.set_scenario(tile_scenarios(plan.NB, plan.NO, prog_sigma=0.06,
+                                   drift_nu=0.05, drift_t=8.64e4,
+                                   name="tiled"),
+                    key=jax.random.PRNGKey(2))
+    ex.matmul(x, w, "t")
+    assert ex._sc_fns["t"][2] is fn and fn._cache_size() == 1
+
+
+def test_conditioned_sweep_compiles_once():
+    x, w = _data(K=64, N=8)
+    ex = _executor()
+    ex.calibrate(jax.random.PRNGKey(2), w, "t", n=16)
+    sweep = ScenarioSweep(ex, w, "t", n_draws=2)
+    key = jax.random.PRNGKey(11)
+    outs = [np.asarray(sweep(x, Scenario(name="sw", prog_sigma=s,
+                                         drift_nu=0.05, drift_t=t), key))
+            for s, t in ((0.0, 0.0), (0.05, 3.6e3), (0.1, 2.592e6))]
+    assert sweep.trace_count == 1 and sweep.cache_size() == 1
+    assert not np.allclose(outs[0], outs[2])
+
+
+# --------------------------------------------------------------------------- #
+# Scheduler policy
+# --------------------------------------------------------------------------- #
+def test_scheduler_conditioned_retrains_at_deploy_only():
+    """Conditioned-first policy: the retrain callback is a one-time
+    deployment field calibration -- never invoked between checkpoints."""
+    x, w = _data(K=64, N=8)
+    calls = []
+
+    def fake_retrain(sc, t, ex, w_, tag):
+        calls.append(t)
+        return None
+
+    ex = _executor()
+    sched = LifetimeScheduler(ex, Scenario(name="aging", prog_sigma=0.05,
+                                           drift_nu=0.05),
+                              timeline=(("1h", 3.6e3),),
+                              retrain=fake_retrain, key=jax.random.PRNGKey(3),
+                              calib_n=16)
+    recs = sched.run(w, "t", x)
+    assert sched.conditioned
+    assert calls == [0.0]                  # deploy-time calibration only
+    assert all(r["conditioned"] and not r["retrained"]
+               for r in sched.history)
+    assert all(np.all(np.isfinite(np.asarray(r["y"]))) for r in recs)
+    # fallback: forcing the fine-tune path re-enables per-checkpoint calls
+    calls.clear()
+    ex2 = _executor()
+    sched2 = LifetimeScheduler(ex2, Scenario(name="aging", prog_sigma=0.05,
+                                             drift_nu=0.05),
+                               timeline=(("1h", 3.6e3),),
+                               retrain=fake_retrain, prefer_conditioned=False,
+                               key=jax.random.PRNGKey(3), calib_n=16)
+    sched2.run(w, "t", x)
+    assert calls == [0.0, 3.6e3]
+
+
+def test_conditioned_field_calibrator_deploy_only_and_hot_swaps():
+    """make_conditioned_field_calibrator fine-tunes once at t = 0 on the
+    realized device across sampled ages and returns None afterwards."""
+    from repro.nonideal import make_conditioned_field_calibrator
+    x, w = _data(K=64, N=8)
+    ex = _executor(fault_remap=True)
+    p0 = ex.emulator_params
+    cal = make_conditioned_field_calibrator(
+        jax.random.PRNGKey(5), ages=(0.0, 3.6e3), n=8, epochs=2)
+    sched = LifetimeScheduler(ex, Scenario(name="aging", prog_sigma=0.05,
+                                           p_stuck_off=0.03, drift_nu=0.05),
+                              timeline=(("1h", 3.6e3),), retrain=cal,
+                              key=jax.random.PRNGKey(4), calib_n=16)
+    recs = sched.run(w, "t", x)
+    assert [r["retrained"] for r in sched.history] == [True, False]
+    assert ex.emulator_params is not p0            # deploy swap happened
+    assert ex._sc_fns["t"][2]._cache_size() == 1   # still compile-once
+    assert all(np.all(np.isfinite(np.asarray(r["y"]))) for r in recs)

@@ -250,7 +250,8 @@ def test_ideal_scenario_with_remap_enabled_bit_identical_to_plain():
     y_sc = ex1._jit_sc_for("t", w)(
         x2, jnp.float32(1.0), jnp.float32(0.0), plan.g_feat,
         jnp.float32(0.0), jax.random.PRNGKey(0),
-        jnp.arange(plan.N, dtype=jnp.int32), ex1.emulator_params)
+        jnp.arange(plan.N, dtype=jnp.int32), ex1.emulator_params,
+        ex1._zero_sfeat)
     np.testing.assert_array_equal(np.asarray(y_sc), y0)
 
 

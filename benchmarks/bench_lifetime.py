@@ -35,12 +35,14 @@ Asserted (exit 1 on violation):
   * mitigation strictly dominates at every drift checkpoint, both backends;
   * the conditioned net matches or beats the fine-tuned baseline at every
     drift checkpoint with zero retrains recorded;
-  * each lifetime walk reuses ONE compiled scenario forward (ages,
-    remaps, recalibrations, hot-swapped retrained params AND scenario
-    features are all traced arguments);
-  * the ideal scenario with the identity permutation (and, conditioned,
-    the all-zero feature block) is bit-identical to the plain serving
-    fast path.
+  * each lifetime walk reuses ONE compiled unified forward per input
+    shape (ages, remaps, recalibrations, hot-swapped retrained params
+    AND scenario features are all leaves of the one traced
+    ``DeploymentState``: only the matmul batch and the two calibration
+    probe batches -- cold and warm-start -- add executables);
+  * ``DeploymentState.ideal()`` (identity permutation, zero read sigma
+    and, conditioned, the all-zero feature block) is bit-identical to
+    the plain serving fast path.
 
 CSV lines to stdout + results/lifetime_<label>.json.
 
@@ -61,6 +63,7 @@ from benchmarks.common import QUICK, get_conditioned_emulator, get_emulator
 from repro.configs.base import AnalogConfig
 from repro.configs.rram_ps32 import CASE_A, EmulatorTrainConfig
 from repro.core.analog import AnalogExecutor
+from repro.core.deployment import DeploymentState
 from repro.nonideal import (LifetimeScheduler,
                             make_conditioned_field_calibrator,
                             make_field_retrainer, tile_scenarios)
@@ -107,20 +110,18 @@ def _make_executor(backend: str, eparams) -> AnalogExecutor:
 
 
 def _ideal_bit_identity(backend: str, eparams, x, w, tag: str) -> bool:
-    """Scenario forward at the ideal point (identity permutation, zero
-    read sigma, all-zero scenario features, current params as traced args)
-    vs the plain fast path.  For a conditioned net the zero feature block
-    is exactly the ideal corner's encoding, so the identity must hold
-    there too."""
+    """Unified forward fed ``DeploymentState.ideal()`` (unperturbed
+    conductances, zero read sigma, identity permutation, all-zero
+    scenario features, unit affine) vs the serving path's own output.
+    For a conditioned net the zero feature block is exactly the ideal
+    corner's encoding, so the identity must hold there too."""
     ex = _make_executor(backend, eparams)
     y_plain = np.asarray(ex.matmul(x, w, tag))
     plan = ex._plan_for(w, tag)
     x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
     ep = ex.emulator_params if backend == "emulator" else {}
-    y_sc = ex._jit_sc_for(tag, w)(
-        x2, jnp.float32(1.0), jnp.float32(0.0), plan.g_feat,
-        jnp.float32(0.0), jax.random.PRNGKey(0),
-        jnp.arange(plan.N, dtype=jnp.int32), ep, ex._zero_sfeat)
+    y_sc = ex._unified_for(tag, w)(x2, DeploymentState.ideal(plan,
+                                                             eparams=ep))
     return bool(np.array_equal(np.asarray(y_sc), y_plain))
 
 
@@ -178,8 +179,14 @@ def run(quick: bool = False, seed: int = 0):
                            "retrained": r["retrained"],
                            "accuracy": _accuracy(r["y"], ref)}
                           for r in recs]
+            # ONE unified forward; executables count only distinct input
+            # SHAPES: the matmul batch, plus (when recalibrating) the
+            # cold-calibration probe batch and its warm half-budget batch.
+            # Ages, remaps, read draws, retrained params and affines are
+            # all DeploymentState leaves and never add executables.
+            expected = 2 if mode == "unmitigated" else 3
             runs[mode + "_compiled_once"] = \
-                ex._sc_fns["life"][2]._cache_size() == 1
+                ex._fns["life"][2]._cache_size() == expected
 
         dominates = [m["accuracy"] > u["accuracy"]
                      for u, m in zip(runs["unmitigated"][1:],

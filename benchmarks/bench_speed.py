@@ -85,8 +85,8 @@ def run(batch: int = 2048, seed: int = 0, tcfg=QUICK, iters: int = 3,
         fn = jax.jit(lambda a: ex.matmul(a, w, "bench"))
         dt, _ = timed(fn, xin, iters=iters)
         sys_rows[backend] = dt * 1e6
-    # scenario serving overhead: same matmul through the per-tag scenario
-    # path ("stressed" corner), timed as the eager dispatch (read noise
+    # scenario serving overhead: same matmul through the per-tag unified
+    # forward ("stressed" corner), timed as the eager dispatch (read noise
     # redrawn per call, in-trace fast-path precompute).  Worst case: a serve
     # loop that jits an enclosing step bakes the perturbation at trace time
     # and pays ~the plain emulator row instead.
@@ -94,9 +94,19 @@ def run(batch: int = 2048, seed: int = 0, tcfg=QUICK, iters: int = 3,
     ex_sc = AnalogExecutor(
         acfg=dataclasses.replace(acfg, backend="emulator"), geom=geom,
         cp=cp, emulator_params=res.params)
-    ex_sc.set_scenario(get_scenario("stressed"), key=jax.random.PRNGKey(seed))
+    ex_sc.deploy(scenario=get_scenario("stressed"),
+                 key=jax.random.PRNGKey(seed))
     dt, _ = timed(lambda a: ex_sc.matmul(a, w, "bench"), xin, iters=iters)
     sys_rows["emulator_nonideal"] = dt * 1e6
+    # unified cache at the IDEAL deployment: the eager per-tag dispatch
+    # with the whole DeploymentState as ONE traced argument -- the single
+    # jit-cache family that replaced the plain/calibration/scenario trio.
+    # Gated below within 5% of the fast-path rows it unified.
+    ex_u = AnalogExecutor(
+        acfg=dataclasses.replace(acfg, backend="emulator"), geom=geom,
+        cp=cp, emulator_params=res.params)
+    dt, _ = timed(lambda a: ex_u.matmul(a, w, "bench"), xin, iters=iters)
+    sys_rows["emulator_unified"] = dt * 1e6
     # scenario-conditioned emulator on the PLAIN fast path: the ideal
     # (all-zero) feature block folds into the cached weights, so the
     # conditioning overhead should be within noise of the emulator row
@@ -144,11 +154,17 @@ def main(csv=True, quick: bool = False, label: str | None = None):
                              with_circuit=False)
     else:
         rows, sys_rows = run()
+    # unified-cache gate: the ONE per-tag forward (DeploymentState as a
+    # single traced arg) must stay within 5% of the fast-path rows it
+    # unified -- the jit-baked plain row and the traced scenario row
+    ref = max(sys_rows["emulator"], sys_rows["emulator_nonideal"])
+    unified_ok = sys_rows["emulator_unified"] <= 1.05 * ref
     if csv:
         for k, v in rows.items():
             print(f"speed_block_{k},{v:.2f},us_per_block")
         for k, v in sys_rows.items():
             print(f"speed_matmul_{k},{v:.1f},us_per_matmul_512x32_b16")
+        print(f"speed_unified_within_5pct,{int(unified_ok)},bool")
         if "circuit" in rows:
             speedup = rows["circuit"] / rows["emulator_fused"]
             print(f"speed_emulator_speedup,{speedup:.1f},circuit/emulator_fused"
@@ -156,6 +172,11 @@ def main(csv=True, quick: bool = False, label: str | None = None):
     path = write_json(rows, sys_rows,
                       label or ("quick" if quick else "full"))
     print(f"bench_json,{os.path.abspath(path)},appended")
+    if not unified_ok:
+        raise SystemExit(
+            f"unified-cache overhead gate violated: emulator_unified "
+            f"{sys_rows['emulator_unified']:.1f} us > 1.05 x "
+            f"max(emulator, emulator_nonideal) = {1.05 * ref:.1f} us")
     return rows, sys_rows
 
 

@@ -1,0 +1,192 @@
+"""Task-level robustness: accuracy vs sigma / vs age on ACTUAL token
+prediction, through a ``ServeSession`` (repro.launch.serve).
+
+``bench_robustness`` and ``bench_lifetime`` measure matmul fidelity; this
+bench closes the ROADMAP's "task-level robustness" loop: one reduced
+model serves its MLP projections on analog hardware, the fleet's device
+corner is swept (programming sigma; retention age), and each point
+reports how the MODEL's predictions degrade against the digital serve:
+
+  * ``token_agreement`` -- fraction of greedy-decoded tokens matching
+    the digital reference (the headline task metric);
+  * ``acc_logits``      -- 1 / (1 + NRMSE) of the decode-step logit
+    trajectory vs digital (continuous, CRN-monotone companion).
+
+Both backends run (emulator on every MLP projection; circuit on the
+down-projections -- each probe is a Newton block solve, so its analog
+surface is kept CI-sized), with per-site noise-aware calibration at each
+sweep point.  The sweep exercises the DeploymentState redesign
+end-to-end: every point re-materializes the per-site device states and
+threads them through the SAME compiled prefill/decode executables --
+
+Asserted (exit 1 on violation):
+  * compile-once: ``prefill_traces == decode_traces == 1`` per backend
+    across the whole sigma x age sweep, and each call site's unified
+    forward holds exactly one calibration executable;
+  * on the sigma axis, the ideal corner scores at least as well as the
+    heaviest swept corner on ``acc_logits`` (common-random-numbers fleet
+    key; the age axis is reported ungated -- see the note in ``run``);
+  * every metric is finite.
+
+CSV lines to stdout + results/task_<label>.json.
+
+  PYTHONPATH=src python -m benchmarks.bench_task [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.bench_speed import SMOKE
+from benchmarks.common import QUICK, get_emulator
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import CASE_A
+from repro.core.analog import AnalogExecutor
+from repro.launch.serve import ServeSession
+from repro.nonideal import Scenario
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+ARCH = "gemma3-1b"
+LAYERS = 2                       # < len(pattern): unrolled, state-threaded
+SIGMAS = (0.0, 0.05, 0.15)
+SIGMAS_QUICK = (0.0, 0.1)
+AGES = (0.0, 86_400.0, 2_592_000.0)     # deploy / 1d / 1mo
+AGES_QUICK = (0.0, 2_592_000.0)
+AGE_SIGMA = 0.03                 # fab corner the aging fleet starts from
+DRIFT_NU = 0.05
+
+
+def _metrics(out: dict, ref: dict) -> dict:
+    tok = out["tokens"] == ref["tokens"]
+    lo, lr = out["logits"], ref["logits"]
+    nrmse = float(np.linalg.norm(lo - lr) / max(np.linalg.norm(lr), 1e-12))
+    return {"token_agreement": float(np.mean(tok)),
+            "acc_logits": 1.0 / (1.0 + nrmse)}
+
+
+def _backend_executor(backend: str, eparams):
+    # circuit: every probe is a Newton block solve -- serve only the
+    # down-projections to keep the CI budget; emulator serves all of MLP
+    layers = ("mlp",) if backend == "emulator" else ("mlp.down",)
+    return AnalogExecutor(
+        acfg=AnalogConfig(backend=backend, layers=layers), geom=CASE_A,
+        emulator_params=eparams if backend == "emulator" else None,
+        use_pallas=False)
+
+
+def run(quick: bool = False, seed: int = 0):
+    res = get_emulator(CASE_A.name, SMOKE if quick else QUICK, seed)
+    B, P, G = (2, 8, 6) if quick else (4, 16, 12)
+    calib_n = 8 if quick else 16
+    sigmas = SIGMAS_QUICK if quick else SIGMAS
+    ages = AGES_QUICK if quick else AGES
+    fleet_key = jax.random.fold_in(jax.random.PRNGKey(seed), 7)  # CRN
+
+    ref = ServeSession(ARCH, reduced=True, reduced_layers=LAYERS, batch=B,
+                       prompt_len=P, gen=G, seed=seed,
+                       executor=None).generate()
+
+    curves = []
+    for backend in ("emulator", "circuit"):
+        ex = _backend_executor(backend, res.params)
+        sess = ServeSession(ARCH, reduced=True, reduced_layers=LAYERS,
+                            batch=B, prompt_len=P, gen=G, seed=seed,
+                            executor=ex)
+
+        def point(scenario):
+            ex.deploy(scenario=scenario, key=fleet_key)
+            sess.calibrate(n=calib_n)
+            return _metrics(sess.generate(), ref)
+
+        sigma_pts = [point(Scenario(name="task", prog_sigma=s))
+                     for s in sigmas]
+        age_pts = [point(Scenario(name="task", prog_sigma=AGE_SIGMA,
+                                  drift_nu=DRIFT_NU, drift_t=t))
+                   for t in ages]
+        # compile-once across the WHOLE sweep: the per-site device states
+        # are traced arguments of the serving steps, and each site's
+        # unified forward compiled exactly one calibration batch shape
+        site_fns = [ex._fns[sk][2] for sk in sess.sites()]
+        compiled_once = (sess.prefill_traces == 1
+                         and sess.decode_traces == 1
+                         and all(fn._cache_size() == 1 for fn in site_fns))
+        curves.append({
+            "backend": backend,
+            "analog_layers": list(ex.acfg.layers),
+            "n_sites": len(sess.sites()),
+            "compiled_once": compiled_once,
+            "sigma": {"levels": list(sigmas), "points": sigma_pts},
+            "age": {"levels": list(ages), "sigma": AGE_SIGMA,
+                    "nu": DRIFT_NU, "points": age_pts},
+            # weak endpoint check, SIGMA axis only: the calibrated ideal
+            # corner may not strictly beat a mild corner on a tiny greedy
+            # decode (probe budgets are CI-sized), so allow token-noise
+            # tolerance.  The age axis is reported ungated: recalibrated
+            # drift can RAISE circuit fidelity vs digital -- shrunken
+            # conductances load the bitlines less, so the solve runs in a
+            # more linear regime (a real effect, not a bench artifact).
+            "ideal_no_worse": (
+                sigma_pts[0]["acc_logits"] >= sigma_pts[-1]["acc_logits"]
+                - 0.02),
+            "finite": all(np.isfinite(list(p.values())).all()
+                          for p in sigma_pts + age_pts),
+        })
+    return curves
+
+
+def write_json(curves, label: str, quick: bool, seed: int) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"task_{label}.json")
+    doc = {"schema": 1,
+           "label": label,
+           "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+           "jax_backend": jax.default_backend(),
+           "quick": quick,
+           "seed": seed,
+           "arch": f"{ARCH}-reduced-{LAYERS}l",
+           "metric": "token_agreement = greedy-token match vs digital "
+                     "serve; acc_logits = 1/(1+NRMSE) of the decode logit "
+                     "trajectory; per-site noise-aware calibration at "
+                     "every sweep point; states threaded through ONE "
+                     "compiled serve per backend (ServeSession)",
+           "curves": curves}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return path
+
+
+def main(quick: bool = False, seed: int = 0, label: str | None = None):
+    curves = run(quick=quick, seed=seed)
+    for c in curves:
+        for axis in ("sigma", "age"):
+            for lvl, p in zip(c[axis]["levels"], c[axis]["points"]):
+                print(f"task_{c['backend']}_{axis},{lvl:g},"
+                      f"{p['token_agreement']:.4f},{p['acc_logits']:.4f}")
+        for k in ("compiled_once", "ideal_no_worse", "finite"):
+            print(f"task_{c['backend']}_{k},{int(c[k])},bool")
+    path = write_json(curves, label or ("quick" if quick else "full"),
+                      quick, seed)
+    print(f"task_json,{os.path.abspath(path)},written")
+    bad = [f"{c['backend']}:{k}" for c in curves
+           for k in ("compiled_once", "ideal_no_worse", "finite")
+           if not c[k]]
+    if bad:
+        raise SystemExit(f"task-level invariants violated: {bad}")
+    return curves
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: tiny emulator, 2-level sweeps")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--label", default=None)
+    args = ap.parse_args()
+    main(quick=args.quick, seed=args.seed, label=args.label)

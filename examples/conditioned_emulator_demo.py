@@ -96,8 +96,11 @@ def main(quick: bool = False):
     assert managed.conditioned, "scheduler should ride the conditioned net"
     assert not any(r["retrained"] for r in recs_c), \
         "conditioned walk must record zero retrains"
-    assert managed.ex._sc_fns["mlp"][2]._cache_size() == 1, \
-        "whole walk (corners + ages) must reuse one compiled forward"
+    # matmul batch + cold/warm calibration batches on the ONE unified
+    # forward; corners and ages never add executables
+    assert managed.ex._fns["mlp"][2]._cache_size() == 3, \
+        "whole walk (corners + ages) must reuse one compiled forward "\
+        "per input shape"
     print("  zero retrains + compile-once verified")
 
     os.makedirs(RESULTS, exist_ok=True)

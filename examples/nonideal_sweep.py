@@ -31,11 +31,11 @@ def main():
     print("\ncorner-by-corner (one fixed device draw each):")
     for name in ("ideal", "prog_mild", "prog_heavy", "stuck_1pct",
                  "quantized_16", "drift_1day", "stressed"):
-        ex.set_scenario(get_scenario(name), key=jax.random.PRNGKey(42))
+        ex.deploy(scenario=get_scenario(name), key=jax.random.PRNGKey(42))
         y = np.asarray(ex.matmul(x, w, "demo"))
         corr = np.corrcoef(y.ravel(), y_digital.ravel())[0, 1]
         print(f"  {name:14s} corr vs digital = {corr:+.4f}")
-    ex.set_scenario(None)
+    ex.deploy(scenario=None)
 
     # custom corner: JSON round-trippable, registry-addressable
     mine = register_scenario(Scenario(name="my_fab", prog_sigma=0.06,

@@ -7,4 +7,7 @@
   conv4xbar  -- the emulator network (Table 2), conv + fused paths
   emulator   -- dataset generation + regression training + acceptance
   analog     -- AnalogMatmul executor wired into repro.models via dense()
+  deployment -- DeploymentState pytree + immutable Deployment spec: the
+                one traced argument of the executor's unified forward
+                (docs/api.md)
 """

@@ -15,53 +15,47 @@ logical units. The backward pass is the straight-through digital gradient
 
 Serving fast path (docs/performance.md): the conductance plan for a weight
 tag (tiling, padding, block interleave) is cached and reused across calls;
-both voltage rails are evaluated in ONE blockified pass — the emulator
+both voltage rails are evaluated in ONE blockified pass -- the emulator
 backend reconstructs them from a single magnitude-drive CELU against the
 precomputed zero-voltage block response (``apply_blocklast``), other
-backends stack the rails on the batch axis — and the per-block conductance
+backends stack the rails on the batch axis -- and the per-block conductance
 features are consumed directly (block-indexed Pallas operand on TPU)
-instead of a batch-broadcast feature tensor.  The straight-through
-``custom_vjp`` and per-tag ``jit`` are constructed once, so ``matmul``
-compiles once per shape.
+instead of a batch-broadcast feature tensor.
 
-Non-idealities (docs/nonideal.md): ``set_scenario`` activates a
-``repro.nonideal.Scenario`` (programming variation, read noise, stuck
-cells, drift, quantized levels, line resistance; scalar or
-(NB, NO)-per-tile).  Perturbations apply at the conductance-plan level;
-on the serving fast path the perturbed conductances, read sigma, read
-key, fault-remap permutation and emulator params are traced arguments of
-a separate per-tag scenario forward, so switching scenarios never
-invalidates the compile caches, and the ideal scenario is bit-identical
-to the plain path.  ``calibrate`` is noise-aware (fits against the
-active scenario).
+Deployment model (docs/api.md): everything that distinguishes a deployed
+device from the ideal hardware -- perturbed conductances, read sigma and
+key, the fault-remap output permutation, hot-swappable emulator params,
+the scenario feature encoding a conditioned net consumes, and the
+volts->logical calibration affine -- is bundled into ONE registered
+pytree, ``core.deployment.DeploymentState``, threaded as ONE traced
+argument through ONE jit cache per weight tag (``_unified_for``).
+Swapping corners, ages, remap permutations, read cycles, calibrations or
+retrained params therefore reuses a single compiled executable per
+(tag, shape), and ``DeploymentState.ideal()`` reproduces the plain path
+bit-identically (every non-ideal leaf sits at its exact-identity value).
 
-Lifetime (docs/lifetime.md): ``fault_remap`` permutes output groups away
-from stuck-off cells (inverse gather folded into the plan's assemble),
-and ``set_emulator_params`` hot-swaps retrained emulator params -- both
-ride the scenario forward's traced arguments, so an entire
-drift-timeline walk (``repro.nonideal.lifetime``) compiles once per
-(tag, shape).
-
-Conditioning (docs/emulator.md): a *scenario-conditioned* emulator
-(peripheral width > 2, ``nonideal.data.train_conditioned_emulator``)
-consumes ``scenario_features(scenario)`` alongside the cell features, so
-ONE net covers the whole corner manifold with zero per-corner
-retraining.  The feature vector is a traced argument of the scenario
-forward (corner/age changes never recompile), enters the blocklast fast
-path as an fc0 bias shift that is exactly zero at the ideal corner, and
-the plain path folds the ideal (all-zero) encoding into the cached
-weights -- so an unconditioned and a conditioned net share every code
-path and the ideal conditioned forward is bit-identical to the plain
-one.
+Deployments are built with the immutable, fluent builder
+``AnalogExecutor.deploy(scenario=..., age=..., remap=..., params=...,
+key=...)`` -- the former mutable setter family (``set_scenario``,
+``set_emulator_params``, assigning ``fault_remap``) survives as thin
+deprecation shims for one release.  Non-ideality semantics
+(docs/nonideal.md), fault-aware remapping and lifetime scheduling
+(docs/lifetime.md) and the scenario-conditioned emulator
+(docs/emulator.md) are unchanged; they now ride the unified forward.
 
 Install into a model with ``use_dense_hook(executor.hook)`` -- every
-``dense()`` in repro.models routes through here.
+``dense()`` in repro.models routes through here.  A ``ServeSession``
+(``repro.launch.serve``) threads per-call-site ``DeploymentState``s
+through its compiled serving steps, so task-level sweeps (accuracy vs
+sigma / age on actual token prediction) swap device state with zero
+recompiles.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
+import warnings
 import zlib
-from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -74,11 +68,14 @@ from repro.core import conv4xbar
 from repro.core.analytic import analytic_block_response
 from repro.core.circuit import CircuitParams, block_response
 from repro.core.crossbar import ConductancePlan, build_conductance_plan
+from repro.core.deployment import Deployment, DeploymentState
 from repro.core.emulator import normalize_features
 from repro.nonideal.perturb import (apply_read_noise, perturb_plan,
                                     remap_plan, scenario_circuit_params)
 from repro.nonideal.scenario import (N_SCENARIO_FEATURES, Scenario,
                                      scenario_features)
+
+_UNSET = object()
 
 
 def _is_tracer(x) -> bool:
@@ -86,143 +83,250 @@ def _is_tracer(x) -> bool:
 
 
 # --------------------------------------------------------------------------- #
-# Straight-through analog matmul, hoisted to module level so the custom_vjp
-# (and the per-tag jit wrapping it) is built once, not per forward call.
+# THE unified straight-through analog matmul.  One traced DeploymentState
+# carries every deployed-device quantity (conductances, read sigma/key,
+# remap permutation, emulator params, scenario features, calibration
+# affine), so one executable per (tag, shape) serves the entire corner x
+# age x remap x params manifold.  Hoisted to module level so the
+# custom_vjp (and the per-tag jit wrapping it) is built once.
 # --------------------------------------------------------------------------- #
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _st_matmul(ex: "AnalogExecutor", tag: str, x2, w, a, b):
-    yv, xs = ex.raw_matmul(x2, w, tag)
-    return (a * yv + b) * xs
+def _st_matmul_u(ex: "AnalogExecutor", tag: str, x2, w, st: DeploymentState):
+    plan = ex._plan_for(w, tag).with_g(st.gf, ex.acfg).with_perm(st.out_perm)
+    yv, xs = ex.raw_matmul(x2, w, tag, plan=plan, read_key=st.read_key,
+                           read_sigma=st.read_sigma,
+                           eparams=st.eparams if st.eparams else None,
+                           sfeat=st.sfeat)
+    return (st.cal_a * yv + st.cal_b) * xs
 
 
-def _st_fwd(ex, tag, x2, w, a, b):
-    return _st_matmul(ex, tag, x2, w, a, b), (x2, w)
+def _st_u_fwd(ex, tag, x2, w, st):
+    return _st_matmul_u(ex, tag, x2, w, st), (x2, w, st)
 
 
-def _st_bwd(ex, tag, res, ct):
-    x2, w = res                        # straight-through digital grads
-    return ct @ w.T, x2.T @ ct, jnp.zeros((), ct.dtype), jnp.zeros((), ct.dtype)
+def _zero_tangent(v):
+    """Symbolic-zero cotangent for a state leaf (float0 for int leaves:
+    the read key and the remap permutation are not differentiable)."""
+    if jnp.issubdtype(jnp.result_type(v), jnp.floating):
+        return jnp.zeros_like(v)
+    return np.zeros(jnp.shape(v), jax.dtypes.float0)
 
 
-_st_matmul.defvjp(_st_fwd, _st_bwd)
+def _st_u_bwd(ex, tag, res, ct):
+    x2, w, st = res                    # straight-through digital grads;
+    # nothing in the deployment state is a trained quantity (cotangent
+    # dtypes must match the primals: w may be served in bf16)
+    return ((ct @ w.T).astype(x2.dtype), (x2.T @ ct).astype(w.dtype),
+            jax.tree.map(_zero_tangent, st))
 
 
-# --------------------------------------------------------------------------- #
-# Scenario-path straight-through matmul.  The device-state perturbed
-# conductances (gf), read-noise sigma, read key, fault-remap output gather
-# (operm) and emulator params (eparams; {} for non-emulator backends) enter
-# as TRACED arguments, so sweeping scenario parameters, redrawing devices /
-# read cycles, swapping remap permutations, or hot-swapping retrained
-# emulator params all reuse one compiled executable per (tag, shape) -- the
-# non-ideality twin of the calibration-affine-as-traced-scalars trick above.
-# --------------------------------------------------------------------------- #
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _st_matmul_sc(ex: "AnalogExecutor", tag: str, x2, w, a, b, gf, rsig, rkey,
-                  operm, eparams, sfeat):
-    plan = ex._plan_for(w, tag).with_g(gf, ex.acfg).with_perm(operm)
-    yv, xs = ex.raw_matmul(x2, w, tag, plan=plan, read_key=rkey,
-                           read_sigma=rsig,
-                           eparams=eparams if eparams else None,
-                           sfeat=sfeat)
-    return (a * yv + b) * xs
+_st_matmul_u.defvjp(_st_u_fwd, _st_u_bwd)
 
 
-def _st_sc_fwd(ex, tag, x2, w, a, b, gf, rsig, rkey, operm, eparams, sfeat):
-    return (_st_matmul_sc(ex, tag, x2, w, a, b, gf, rsig, rkey, operm,
-                          eparams, sfeat),
-            (x2, w, gf, rsig, rkey, operm, eparams, sfeat))
+class _StateBinding:
+    """Per-forward-pass resolution of dense() call sites to
+    ``DeploymentState``s.
+
+    Model tags repeat across layers (every block calls ``dense(...,
+    "mlp.up")``), so a *site key* disambiguates by trace-order ordinal:
+    the i-th call with tag T gets ``"T#i"``.  Trace order is
+    deterministic, so site keys are stable across prefill / decode /
+    processes.  In record mode the binding collects ``site_key ->
+    weight`` (under ``jax.eval_shape``: zero FLOPs) for a ``ServeSession``
+    to materialize states against; in serve mode it routes each site
+    through the unified forward with that site's (typically traced)
+    state."""
+
+    def __init__(self, states: Optional[Dict[str, DeploymentState]] = None,
+                 record: Optional[Dict[str, jax.Array]] = None):
+        self.states = states
+        self.record = record
+        self._ordinals: Dict[str, int] = {}
+
+    def site_key(self, tag: str) -> str:
+        i = self._ordinals.get(tag, 0)
+        self._ordinals[tag] = i + 1
+        return f"{tag}#{i}"
+
+    def intercept(self, ex: "AnalogExecutor", x, w, tag: str):
+        sk = self.site_key(tag)
+        if self.record is not None:
+            self.record[sk] = w
+            return None                # digital fallback while recording
+        st = self.states.get(sk) if self.states is not None else None
+        if st is None:
+            # a silent digital fallback here would break the round-trip
+            # contract without a trace -- fail loudly instead
+            raise KeyError(
+                f"no DeploymentState bound for call site {sk!r} (bound: "
+                f"{sorted(self.states or ())}); a saved deployment must "
+                "be served with the model / layer configuration it was "
+                "saved from")
+        return ex.matmul(x, w, sk, state=st)
 
 
-def _st_sc_bwd(ex, tag, res, ct):
-    x2, w, gf, rsig, rkey, operm, eparams, sfeat = res
-    # straight-through digital grads; the device draw, permutation and
-    # (frozen, serving-time) emulator params are not trained quantities
-    z = jnp.zeros((), ct.dtype)
-    return (ct @ w.T, x2.T @ ct, z, z, jnp.zeros_like(gf),
-            jnp.zeros_like(rsig),
-            np.zeros(rkey.shape, jax.dtypes.float0),
-            np.zeros(operm.shape, jax.dtypes.float0),
-            jax.tree.map(jnp.zeros_like, eparams),
-            jnp.zeros_like(sfeat))
-
-
-_st_matmul_sc.defvjp(_st_sc_fwd, _st_sc_bwd)
-
-
-@dataclass(eq=False)
 class AnalogExecutor:
     """Stateful serving executor for analog matmuls (see module docstring).
 
     Owns, per weight ``tag``: the cached conductance plan (``_plan_for``),
-    the compiled plain forward (``_jit_for``), the compiled scenario
-    forward (``_jit_sc_for``), the device-state perturbation cache
-    (``_scenario_plan``) and the per-layer calibration affine.  Scenario
-    state is set with ``set_scenario``; retrained emulator params are
-    hot-swapped with ``set_emulator_params``; ``fault_remap`` turns on
-    stuck-fault-aware column remapping for scenarios with stuck-off cells
-    (docs/lifetime.md).
+    ONE compiled unified forward (``_unified_for``) taking a single traced
+    ``DeploymentState``, and the materialized-device-state cache
+    (``_state_cache``).  The active ``Deployment`` (an immutable spec:
+    scenario, fleet key, remap policy, hot-swapped params) is built with
+    the fluent ``deploy(...)`` builder; per-tag states derive from it
+    lazily via ``state_for``.  The legacy mutable setters delegate to
+    ``deploy`` and emit ``DeprecationWarning``.
     """
-    acfg: AnalogConfig
-    geom: BlockGeometry = CASE_A
-    cp: CircuitParams = field(default_factory=CircuitParams)
-    emulator_params: Optional[dict] = None
-    calibration: Dict[str, tuple] = field(default_factory=dict)
-    fused_emulator: bool = True        # apply_fused vs apply on the slow path
-    fast_path: bool = True             # cached-plan blockified serving path
-    fast_chunk: int = 4                # batch rows per cache-sized chunk
-    use_pallas: Optional[bool] = None  # None = auto (TPU only)
-    scenario: Optional[Scenario] = None          # device non-ideality corner
-    scenario_key: Optional[jax.Array] = None     # device-draw base key
-    fault_remap: bool = False          # stuck-fault-aware column remapping
 
-    def __post_init__(self):
+    def __init__(self, acfg: AnalogConfig, geom: BlockGeometry = CASE_A,
+                 cp: Optional[CircuitParams] = None,
+                 emulator_params: Optional[dict] = None,
+                 calibration: Optional[Dict[str, tuple]] = None,
+                 fused_emulator: bool = True, fast_path: bool = True,
+                 fast_chunk: int = 4, use_pallas: Optional[bool] = None,
+                 scenario: Optional[Scenario] = None,
+                 scenario_key: Optional[jax.Array] = None,
+                 fault_remap: bool = False):
+        self.acfg = acfg
+        self.geom = geom
+        self.cp = cp if cp is not None else CircuitParams()
+        self._base_params = emulator_params
+        self.calibration: Dict[str, tuple] = (
+            calibration if calibration is not None else {})
+        self.fused_emulator = fused_emulator  # apply_fused vs apply (slow path)
+        self.fast_path = fast_path            # cached-plan blockified path
+        self.fast_chunk = fast_chunk          # batch rows per cache chunk
+        self.use_pallas = use_pallas          # None = auto (TPU only)
+
         self._plans: Dict[str, Tuple[jax.Array, ConductancePlan]] = {}
-        self._jit_fns: Dict[str, Tuple[jax.Array, Callable]] = {}
+        # ONE jit-cache family: tag -> (w, r_line_scale, fn(x2, state))
+        self._fns: Dict[str, Tuple[jax.Array, float, Callable]] = {}
         self._g0_cache: Dict[str, Tuple[ConductancePlan, dict]] = {}
         self._aux = None
         self._aux_src = None
-        # scenario state: perturbed-conductance cache + per-tag scenario
-        # forwards (kept separate from _jit_fns so toggling a scenario on
-        # and off never invalidates either compile cache)
-        self._pert_cache: Dict[str, tuple] = {}
-        self._sc_fns: Dict[str, tuple] = {}
-        self._cal_fns: Dict[str, tuple] = {}
+        # tag -> (plan, deployment, base_state, perturbed_plan)
+        self._state_cache: Dict[str, tuple] = {}
+        self._binding: Optional[_StateBinding] = None
         self._read_calls = 0
+        self._last_calib_n = 0
         # scenario-feature cache (one encode per Scenario object) and the
-        # zero vector fed to the scenario forward when conditioning is
-        # inactive -- one stable (N_SCENARIO_FEATURES,) aval either way
+        # zero vector the ideal state carries -- one stable
+        # (N_SCENARIO_FEATURES,) aval either way
         self._sfeat_ent: Optional[tuple] = None
         self._zero_sfeat = jnp.zeros((N_SCENARIO_FEATURES,), jnp.float32)
-        if self.scenario_key is None:
-            self.scenario_key = jax.random.PRNGKey(0)
-        if self.scenario is None and self.acfg.scenario:
+
+        if scenario is None and self.acfg.scenario:
             from repro.nonideal import get_scenario
-            self.scenario = get_scenario(self.acfg.scenario)
+            scenario = get_scenario(self.acfg.scenario)
+        self._deployment = Deployment(
+            scenario=scenario,
+            key=(scenario_key if scenario_key is not None
+                 else jax.random.PRNGKey(0)),
+            remap=fault_remap)
 
     # ------------------------------------------------------------------ #
-    # Non-ideality scenario state (repro.nonideal)
+    # The immutable deployment (repro.core.deployment)
+    # ------------------------------------------------------------------ #
+    @property
+    def deployment(self) -> Deployment:
+        """The active immutable deployment spec."""
+        return self._deployment
+
+    @property
+    def scenario(self) -> Optional[Scenario]:
+        """The active deployment's device corner (None = ideal)."""
+        return self._deployment.scenario
+
+    @property
+    def scenario_key(self) -> jax.Array:
+        """The active deployment's fleet fabrication key."""
+        return self._deployment.key
+
+    @property
+    def fault_remap(self) -> bool:
+        """Stuck-fault-aware remapping policy of the active deployment."""
+        return self._deployment.remap
+
+    @fault_remap.setter
+    def fault_remap(self, value: bool):
+        warnings.warn(
+            "assigning AnalogExecutor.fault_remap is deprecated; use "
+            "AnalogExecutor.deploy(remap=...)", DeprecationWarning,
+            stacklevel=2)
+        self.deploy(remap=bool(value))
+
+    @property
+    def emulator_params(self) -> Optional[dict]:
+        """The serving emulator params: the deployment's hot-swapped
+        override when set, else the params bound at construction."""
+        return (self._deployment.params if self._deployment.params is not None
+                else self._base_params)
+
+    def deploy(self, *, scenario=_UNSET, age: Optional[float] = None,
+               remap=_UNSET, params=_UNSET, key: Optional[jax.Array] = None,
+               states=_UNSET) -> Deployment:
+        """Activate (and return) a new immutable deployment.
+
+        Fluent partial update: only the given fields change, everything
+        else carries over from the active deployment.  ``scenario=None``
+        clears the corner (ideal hardware); ``age`` rewrites the
+        scenario's ``drift_t`` (seconds since programming; the fleet ages,
+        it is not refabricated); ``remap`` sets the stuck-fault-aware
+        remapping policy; ``params`` hot-swaps retrained emulator params;
+        ``key`` refabricates the fleet (a fixed key across deploys models
+        the SAME devices under different conditions); ``states`` installs
+        preloaded per-tag states (``core.deployment.load_deployment``).
+
+        Invalidates only the materialized device-state cache and the
+        read-cycle counter.  Nothing compiled is touched: every leaf of a
+        ``DeploymentState`` is a traced argument of the unified forward,
+        so a corner -> age -> remap -> params swap sequence reuses one
+        executable per (tag, shape).
+        """
+        dep = self._deployment
+        sc = dep.scenario if scenario is _UNSET else scenario
+        if age is not None:
+            if sc is None:
+                raise ValueError("deploy(age=...) needs a scenario to age")
+            from repro.nonideal.lifetime import scenario_at_age
+            sc = scenario_at_age(sc, age)
+        new = Deployment(
+            scenario=sc,
+            key=dep.key if key is None else key,
+            remap=dep.remap if remap is _UNSET else bool(remap),
+            params=dep.params if params is _UNSET else params,
+            states=dep.states if states is _UNSET else states)
+        self._deployment = new
+        self._state_cache.clear()
+        self._sfeat_ent = None
+        self._read_calls = 0
+        return new
+
+    # ------------------------------------------------------------------ #
+    # Deprecated mutable-setter shims (one release; docs/api.md)
     # ------------------------------------------------------------------ #
     def set_scenario(self, scenario: Optional[Scenario],
                      key: Optional[jax.Array] = None) -> "AnalogExecutor":
-        """Activate (or clear, with None) a device non-ideality scenario.
-
-        Clears the perturbed-conductance cache and resets the read-cycle
-        counter, but does NOT touch any compiled forward: scenario
-        parameters, fault draws, read keys and remap permutations are
-        traced arguments of the scenario path, so switching scenarios
-        reuses the executable.  Keeping ``key`` fixed across calls models
-        the SAME fabricated fleet under different conditions (aging a
-        fleet = same key, growing ``drift_t``); a new ``key`` fabricates a
-        new fleet.  Per-tile scenario batches (``tile_scenarios``) and
-        scalar scenarios are both accepted."""
-        self.scenario = scenario
-        if key is not None:
-            self.scenario_key = key
-        self._pert_cache.clear()
-        self._sfeat_ent = None
-        self._read_calls = 0
+        """Deprecated: use ``deploy(scenario=..., key=...)``."""
+        warnings.warn(
+            "AnalogExecutor.set_scenario is deprecated; use "
+            "AnalogExecutor.deploy(scenario=..., key=...)",
+            DeprecationWarning, stacklevel=2)
+        self.deploy(scenario=scenario, key=key)
         return self
 
+    def set_emulator_params(self, params: dict) -> "AnalogExecutor":
+        """Deprecated: use ``deploy(params=...)``."""
+        warnings.warn(
+            "AnalogExecutor.set_emulator_params is deprecated; use "
+            "AnalogExecutor.deploy(params=...)",
+            DeprecationWarning, stacklevel=2)
+        self.deploy(params=params)
+        return self
+
+    # ------------------------------------------------------------------ #
+    # Device-state materialization
+    # ------------------------------------------------------------------ #
     @property
     def emulator_conditioned(self) -> bool:
         """True when the bound emulator params are scenario-conditioned
@@ -236,7 +340,7 @@ class AnalogExecutor:
     def _scenario_features(self) -> jax.Array:
         """Feature encoding of the active scenario, cached per Scenario
         object (the encode is a handful of scalar reductions, but matmul
-        is the serving hot path).  Forced eager: the executor's scenario
+        is the serving hot path).  Forced eager: the deployment's scenario
         leaves are concrete state, and under an ENCLOSING jit (serve loop)
         the encode must come out concrete so the cache never holds a
         leaked tracer."""
@@ -249,18 +353,6 @@ class AnalogExecutor:
         self._sfeat_ent = (sc, v)
         return v
 
-    def set_emulator_params(self, params: dict) -> "AnalogExecutor":
-        """Hot-swap trained emulator params (drift-scheduled retraining).
-
-        The scenario forward takes the params as TRACED arguments, so the
-        swap reuses its compiled executable -- recalibrate + retrain
-        across a drift timeline compiles exactly once per (tag, shape).
-        The plain (no-scenario) forward bakes params in as constants for
-        speed, so it is dropped here and lazily rebuilt on next use."""
-        self.emulator_params = params
-        self._jit_fns.clear()
-        return self
-
     def _tag_key(self, tag: str) -> jax.Array:
         """Per-tag device-draw key; crc32 keeps it stable across processes
         (hash() is salted per interpreter run)."""
@@ -268,36 +360,114 @@ class AnalogExecutor:
                                   zlib.crc32(tag.encode()) & 0x7FFFFFFF)
 
     def _next_read_key(self) -> jax.Array:
-        """Fresh key per read cycle; the sequence restarts at set_scenario
+        """Fresh key per read cycle; the sequence restarts at deploy()
         so a serve run with a fixed --seed is reproducible end to end."""
         k = jax.random.fold_in(
             jax.random.fold_in(self.scenario_key, 0x5245AD), self._read_calls)
         self._read_calls += 1
         return k
 
-    def _scenario_plan(self, tag: str, w: jax.Array) -> ConductancePlan:
-        """Device-state perturbed (and, with ``fault_remap``, stuck-fault
-        remapped) plan, computed once per (tag, plan, scenario) and reused
-        -- as a stable object, so downstream identity-keyed caches
-        (_pre_for) hit across eager calls, and as the source of the traced
-        conductance / permutation buffers for the compiled scenario
-        forward.  ``out_perm`` is always set on the result (identity when
-        remapping is off or the scenario has no stuck-off faults) so the
-        scenario forward sees one stable argument signature."""
+    def _base_state(self, tag: str, w: jax.Array) -> DeploymentState:
+        """The deployment's device state for ``(tag, w)``: the scenario's
+        perturbation (and, under ``remap``, the stuck-fault-aware
+        permutation) materialized once per (tag, plan, deployment) and
+        cached -- with unit affine and a placeholder read key
+        (``state_for`` stamps the serving-time ones)."""
+        dep = self._deployment
         plan = self._plan_for(w, tag)
-        ent = self._pert_cache.get(tag)
-        if ent is not None and ent[0] is plan and ent[1] is self.scenario \
-                and ent[2] == self.fault_remap:
-            return ent[3]
+        ent = self._state_cache.get(tag) if tag else None
+        if ent is not None and ent[0] is plan and ent[1] is dep:
+            return ent[2]
+        sc = dep.scenario
         with jax.ensure_compile_time_eval():
-            key = self._tag_key(tag)
-            base, operm = plan, jnp.arange(plan.N, dtype=jnp.int32)
-            if self.fault_remap and self.scenario.has_stuck_off:
-                base, operm = remap_plan(plan, self.acfg, self.scenario, key)
-            pplan = perturb_plan(base, self.acfg, self.scenario,
-                                 key).with_perm(operm)
-        self._pert_cache[tag] = (plan, self.scenario, self.fault_remap, pplan)
-        return pplan
+            ep = (self.emulator_params
+                  if self.acfg.backend == "emulator"
+                  and self.emulator_params is not None else {})
+            if sc is None or sc.is_ideal:
+                pplan = plan.with_perm(jnp.arange(plan.N, dtype=jnp.int32))
+                rsig = jnp.zeros((plan.NB, plan.NO), jnp.float32)
+                sfeat = self._zero_sfeat
+            else:
+                key = self._tag_key(tag)
+                base, operm = plan, jnp.arange(plan.N, dtype=jnp.int32)
+                if dep.remap and sc.has_stuck_off:
+                    base, operm = remap_plan(plan, self.acfg, sc, key)
+                pplan = perturb_plan(base, self.acfg, sc,
+                                     key).with_perm(operm)
+                # read sigma always enters tile-shaped so scalar and
+                # per-tile scenarios share ONE compiled forward per tag
+                rsig = jnp.broadcast_to(
+                    jnp.asarray(sc.read_sigma, jnp.float32),
+                    (plan.NB, plan.NO))
+                sfeat = (self._scenario_features()
+                         if self.acfg.backend == "emulator"
+                         and self.emulator_conditioned else self._zero_sfeat)
+            st = DeploymentState(
+                # f32 regardless of the weights' dtype: one stable aval
+                # for the ideal AND every perturbed corner
+                gf=pplan.g_feat.astype(jnp.float32), read_sigma=rsig,
+                read_key=jax.random.PRNGKey(0), out_perm=pplan.out_perm,
+                eparams=ep, sfeat=sfeat,
+                cal_a=jnp.asarray(1.0, jnp.float32),
+                cal_b=jnp.asarray(0.0, jnp.float32))
+        if tag:
+            self._state_cache[tag] = (plan, dep, st, pplan)
+        return st
+
+    def state_for(self, tag: str, w: jax.Array) -> DeploymentState:
+        """The ready-to-serve ``DeploymentState`` for ``(tag, w)``: the
+        cached device state stamped with the current calibration affine
+        and, when the corner draws read noise, a fresh read-cycle key.
+        Preloaded states (``deploy(states=...)``) are served verbatim --
+        they carry their saved affine and read key."""
+        dep = self._deployment
+        if dep.states is not None and tag in dep.states:
+            return dep.states[tag]
+        st = self._base_state(tag, w)
+        a, b = self.calibration.get(tag, (1.0, 0.0))
+        st = st.with_calibration(a, b)
+        sc = dep.scenario
+        if sc is not None and sc.has_read_noise:
+            st = st.with_read_key(self._next_read_key())
+        return st
+
+    def _inline_state(self, tag: str, w: jax.Array, a, b) -> DeploymentState:
+        """State for the in-trace path (enclosing jit / grad / anonymous
+        tag).  With a bound weight the cached state is reused (its
+        concrete leaves bake into the enclosing executable, exactly as
+        the pre-unification trace-time path did); under traced weights
+        (hardware-aware training) the state derives in-trace."""
+        dep = self._deployment
+        if dep.states is not None and tag in dep.states:
+            return dep.states[tag]
+        if tag and not _is_tracer(w):
+            return self.state_for(tag, w)
+        plan = self._plan_for(w, tag)
+        ep = (self.emulator_params
+              if self.acfg.backend == "emulator"
+              and self.emulator_params is not None else {})
+        st = DeploymentState.ideal(plan, eparams=ep, calibration=(a, b))
+        sc = dep.scenario
+        if sc is not None and not sc.is_ideal:
+            pplan = perturb_plan(plan, self.acfg, sc, self._tag_key(tag))
+            kw = dict(gf=pplan.g_feat,
+                      read_sigma=jnp.broadcast_to(
+                          jnp.asarray(sc.read_sigma, jnp.float32),
+                          (plan.NB, plan.NO)))
+            if sc.has_read_noise:
+                kw["read_key"] = self._next_read_key()
+            if self.acfg.backend == "emulator" and self.emulator_conditioned:
+                kw["sfeat"] = self._scenario_features()
+            st = st.replace(**kw)
+        return st
+
+    def _scenario_plan(self, tag: str, w: jax.Array) -> ConductancePlan:
+        """Device-state perturbed (and, with ``remap``, stuck-fault
+        remapped) conductance plan -- the plan-shaped view of
+        ``_base_state``, stable per (tag, plan, deployment) so
+        identity-keyed caches (``_pre_for``) hit across eager calls."""
+        self._base_state(tag, w)
+        return self._state_cache[tag][3]
 
     def _cp_effective(self) -> CircuitParams:
         """CircuitParams with the scenario's line-resistance scaling (static:
@@ -330,8 +500,8 @@ class AnalogExecutor:
     def _blocklast_aux(self, eparams: Optional[dict] = None) -> dict:
         """Stage-collapsed emulator weights (conv4xbar.blocklast_weights),
         cached per params binding.  ``eparams`` overrides the executor's
-        own params (the scenario forward passes hot-swappable traced
-        params through here)."""
+        own params (the unified forward passes the deployment state's
+        traced params through here)."""
         params = self.emulator_params if eparams is None else eparams
         assert params is not None, \
             "emulator backend needs trained params (core.emulator)"
@@ -458,19 +628,18 @@ class AnalogExecutor:
         via the shared-magnitude delta factorization (apply_blocklast), all
         other backends stack the rails on the batch axis.
 
-        `plan` overrides the cached conductance plan (repro.nonideal passes
-        device-perturbed, possibly fault-remapped plans); with `plan=None`
-        and an active scenario the device-state perturbation (and, with
-        `fault_remap`, the remap) is applied here, inside the trace.
+        `plan` overrides the cached conductance plan (the unified forward
+        passes the deployment state's device-perturbed, possibly
+        fault-remapped plan); with `plan=None` and an active scenario the
+        device-state perturbation is applied here, inside the trace.
         `read_key`/`read_sigma` add one cycle-to-cycle read-noise draw on
-        top of whatever plan is in effect (`read_sigma` may be per-tile).
-        `eparams` overrides the executor's emulator params -- the scenario
-        forward passes hot-swapped retrained params through here as traced
-        arguments.  `sfeat` is the scenario-feature vector a conditioned
-        emulator consumes (traced in the scenario forward); with
-        `sfeat=None` and an active scenario it is derived here, so the
-        in-trace path conditions too, and with no scenario the net sees
-        the ideal (all-zero) corner encoding."""
+        top of whatever plan is in effect (`read_sigma` may be per-tile;
+        sigma 0 is an exact bitwise identity).  `eparams` overrides the
+        executor's emulator params (the deployment state's hot-swapped
+        params arrive here as traced arguments).  `sfeat` is the
+        scenario-feature vector a conditioned emulator consumes (all-zero
+        = the ideal corner's encoding); with `sfeat=None` and an active
+        scenario it is derived here, so the in-trace path conditions too."""
         if plan is None:
             plan = self._plan_for(w, tag)
             sc = self.scenario
@@ -517,144 +686,134 @@ class AnalogExecutor:
         return y[:B] - y[B:], x_scale
 
     def calibrate(self, key, w: jax.Array, tag: str, n: int = 256,
-                  noise_draws: int = 4):
+                  noise_draws: int = 4, warm_start: bool = False):
         """Fit the per-layer affine volts->logical map against digital.
 
         Noise-aware: with an active scenario the fit runs against the same
-        perturbed device the serving path sees, and the block response is
-        averaged over `noise_draws` cycle-to-cycle read draws so the affine
-        targets the expected (not one-shot) transfer."""
-        xc = jax.random.normal(key, (n, w.shape[0])) * 0.5
+        device state the serving path sees (the unified forward at unit
+        affine), and the response is averaged over `noise_draws`
+        cycle-to-cycle read draws so the affine targets the expected (not
+        one-shot) transfer.  The fit reuses the tag's ONE compiled
+        forward -- each read draw is just a new ``read_key`` leaf.
+
+        ``warm_start=True`` transfers the previous affine instead of
+        refitting from scratch (docs/lifetime.md "calibration transfer"):
+        drift between checkpoints is mostly a scale shift, so the refit
+        runs on HALF the probe budget with the previous ``(a, b)`` as a
+        ridge prior.  Falls back to a cold full-budget fit when no
+        previous affine exists.  The probe count actually used is
+        recorded in ``_last_calib_n`` (asserted in tests)."""
+        prev = self.calibration.get(tag) if warm_start else None
+        n_eff = max(8, n // 2) if prev is not None else n
+        xc = jax.random.normal(key, (n_eff, w.shape[0])) * 0.5
         sc = self.scenario
-        if sc is not None and not sc.is_ideal:
-            draws = max(1, noise_draws) if sc.has_read_noise else 1
-            keys = jax.random.split(
-                jax.random.fold_in(self.scenario_key, 0xCA11B), draws)
-            pplan = self._scenario_plan(tag, w)
-            ep = (self.emulator_params
-                  if self.acfg.backend == "emulator" else {})
-            rsig = jnp.broadcast_to(
-                jnp.asarray(sc.read_sigma, jnp.float32),
-                (pplan.NB, pplan.NO))
-            sf = (self._scenario_features() if self.acfg.backend == "emulator"
-                  and self.emulator_conditioned else self._zero_sfeat)
-            yvs, xss = self._jit_cal_for(tag, w)(
-                xc, pplan.g_feat, rsig, keys, pplan.out_perm, ep, sf)
-            yv, xs = yvs.mean(axis=0), xss[0]
-        else:
-            yv, xs = jax.jit(lambda xx: self.raw_matmul(xx, w, tag))(xc)
-        yd = (xc @ w) / xs
-        yv_flat = yv.reshape(-1)
+        st = self._base_state(tag, w)        # unit affine by construction
+        draws = (max(1, noise_draws)
+                 if sc is not None and sc.has_read_noise else 1)
+        keys = jax.random.split(
+            jax.random.fold_in(self.scenario_key, 0xCA11B), draws)
+        fn = self._unified_for(tag, w)
+        ys = jnp.stack([fn(xc, st.with_read_key(k))
+                        for k in keys]).mean(axis=0)
+        xs = jnp.maximum(jnp.max(jnp.abs(xc.astype(jnp.float32))), 1e-9)
+        yv_flat = (ys / xs).reshape(-1)
+        yd_flat = ((xc @ w) / xs).reshape(-1)
         A = jnp.stack([yv_flat, jnp.ones_like(yv_flat)], axis=1)
-        sol, *_ = jnp.linalg.lstsq(A, yd.reshape(-1))
+        rhs = yd_flat
+        if prev is not None:
+            # ridge prior toward the previous checkpoint's affine: one
+            # synthetic row per parameter, each weighted at ~5% of the
+            # data's leverage on THAT parameter (sum yv^2 for the scale,
+            # the row count for the offset) so the probes still dominate
+            la = jnp.sqrt(0.05 * jnp.sum(yv_flat * yv_flat) + 1e-12)
+            lb = jnp.sqrt(0.05 * yv_flat.shape[0])
+            A = jnp.concatenate(
+                [A, jnp.asarray([[1.0, 0.0], [0.0, 1.0]], A.dtype)
+                 * jnp.asarray([[la], [lb]], A.dtype)], axis=0)
+            rhs = jnp.concatenate(
+                [rhs, jnp.asarray([la * prev[0], lb * prev[1]], rhs.dtype)],
+                axis=0)
+        sol, *_ = jnp.linalg.lstsq(A, rhs)
         self.calibration[tag] = (float(sol[0]), float(sol[1]))
+        self._last_calib_n = n_eff
         return self.calibration[tag]
 
-    def _jit_for(self, tag: str, w: jax.Array) -> Callable:
-        """Per-(tag, weight-binding) jitted forward.  `w` is closed over as a
-        concrete constant, so the cached conductance plan is computed at
-        trace time (once) and baked into the executable."""
-        ent = self._jit_fns.get(tag)
-        if ent is not None and ent[0] is w:
-            return ent[1]
-        wf = w.astype(jnp.float32)
-        fn = jax.jit(lambda x2, a, b: _st_matmul(self, tag, x2, wf, a, b))
-        self._jit_fns[tag] = (w, fn)
-        return fn
+    # ------------------------------------------------------------------ #
+    # THE per-tag compiled forward (the single surviving jit-cache family)
+    # ------------------------------------------------------------------ #
+    def _unified_for(self, tag: str, w: jax.Array) -> Callable:
+        """Per-(tag, weight-binding) unified forward ``fn(x2, state)``.
 
-    def _jit_cal_for(self, tag: str, w: jax.Array) -> Callable:
-        """Per-(tag, weight-binding) calibration forward: the noise-draw
-        vmapped raw matmul against a scenario device, with conductances,
-        read sigma / keys, remap permutation and emulator params as
-        traced arguments.  Drift-timeline recalibration
-        (``nonideal.lifetime``) therefore compiles the fit's forward
-        exactly once per (tag, sample-count) instead of once per
-        checkpoint."""
-        ent = self._cal_fns.get(tag)
+        `w` is closed over as a concrete constant, so the cached
+        conductance plan is computed at trace time; EVERYTHING deployed --
+        conductances, read sigma/key, remap permutation, emulator params,
+        scenario features, calibration affine -- arrives inside the one
+        traced ``DeploymentState``, so corner / age / remap / read-cycle /
+        recalibration / retrained-params swaps all reuse one executable
+        per (tag, shape).  Only a line-resistance change rebuilds it
+        (CircuitParams is a hashed static of the circuit backend).
+
+        The read-noise draw and the output gather run even at sigma == 0 /
+        identity permutations (exact identities there): a g_feat-sized
+        threefry sample and an (N,)-gather are tens of microseconds
+        against a millisecond-scale matmul, and keeping them unconditional
+        preserves exactly ONE executable per tag."""
+        ent = self._fns.get(tag)
         rls = self.scenario.r_line_scale if self.scenario else 1.0
         if ent is not None and ent[0] is w and ent[1] == rls:
             return ent[2]
-        wf = w.astype(jnp.float32)
-
-        def one(xc, gf, rsig, kk, operm, ep, sf):
-            plan = self._plan_for(wf, tag).with_g(gf, self.acfg) \
-                .with_perm(operm)
-            return self.raw_matmul(xc, wf, tag, plan=plan, read_key=kk,
-                                   read_sigma=rsig,
-                                   eparams=ep if ep else None, sfeat=sf)
-
-        fn = jax.jit(lambda xc, gf, rsig, keys, operm, ep, sf: jax.vmap(
-            lambda kk: one(xc, gf, rsig, kk, operm, ep, sf))(keys))
-        self._cal_fns[tag] = (w, rls, fn)
+        # close over the ORIGINAL weight binding: the plan's conductances
+        # are replaced by the state's gf leaf anyway, and an f32 alias
+        # would make the per-tag plan cache ping-pong between identities
+        # for bf16-served weights
+        fn = jax.jit(lambda x2, st: _st_matmul_u(self, tag, x2, w, st))
+        self._fns[tag] = (w, rls, fn)
         return fn
 
-    def _jit_sc_for(self, tag: str, w: jax.Array) -> Callable:
-        """Per-(tag, weight-binding) scenario forward.  Perturbed
-        conductances, read sigma, read key, remap permutation and emulator
-        params are traced arguments, so changing scenarios, read cycles,
-        remappings, or hot-swapped retrained params reuses the executable;
-        only a line-resistance change rebuilds it (CircuitParams is
-        static).
-
-        The read-noise draw and the output gather run even for read_sigma
-        == 0 / identity permutations (exact identities there): a
-        g_feat-sized threefry sample and an (N,)-gather are tens of
-        microseconds against a millisecond-scale matmul, and keeping them
-        unconditional preserves exactly ONE executable per tag."""
-        ent = self._sc_fns.get(tag)
-        rls = self.scenario.r_line_scale if self.scenario else 1.0
-        if ent is not None and ent[0] is w and ent[1] == rls:
-            return ent[2]
-        wf = w.astype(jnp.float32)
-        fn = jax.jit(lambda x2, a, b, gf, rsig, rkey, operm, ep, sf:
-                     _st_matmul_sc(self, tag, x2, wf, a, b, gf, rsig, rkey,
-                                   operm, ep, sf))
-        self._sc_fns[tag] = (w, rls, fn)
-        return fn
-
-    def matmul(self, x: jax.Array, w: jax.Array, tag: str = "") -> jax.Array:
+    def matmul(self, x: jax.Array, w: jax.Array, tag: str = "",
+               state: Optional[DeploymentState] = None) -> jax.Array:
         """Calibrated analog matmul with straight-through digital gradient.
 
         Compiles once per (tag, shape): the custom_vjp is module-level and
-        the calibration affine enters as traced scalars, so recalibration
-        does not retrigger compilation.  An active non-ideality scenario
-        dispatches to the scenario forward (same compile-once property,
-        see _jit_sc_for); the ideal scenario is routed to the plain fast
-        path and is bit-identical to it."""
-        a, b = self.calibration.get(tag, (1.0, 0.0))
+        the whole deployment -- device perturbation, remap, read cycle,
+        emulator params, scenario features AND the calibration affine --
+        enters as ONE traced ``DeploymentState``, so recalibration,
+        scenario swaps, aging, remapping and retraining never retrigger
+        compilation.  ``state`` overrides the active deployment's
+        materialized state (``ServeSession`` threads per-call-site states
+        through its compiled serving steps this way); by default the state
+        derives from ``deploy(...)``'s spec, and the ideal deployment is
+        bit-identical to the plain serving fast path."""
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-        af = jnp.asarray(a, jnp.float32)
-        bf = jnp.asarray(b, jnp.float32)
-        sc = self.scenario
         if _is_tracer(x2) or _is_tracer(w) or not tag:
-            y = _st_matmul(self, tag, x2, w.astype(jnp.float32), af, bf)
-        elif sc is not None and not sc.is_ideal:
-            pplan = self._scenario_plan(tag, w)
-            ep = (self.emulator_params
-                  if self.acfg.backend == "emulator" else {})
-            # read sigma always enters tile-shaped so scalar and per-tile
-            # scenarios share ONE compiled forward per tag; the scenario
-            # features likewise always enter as one (N_SCENARIO_FEATURES,)
-            # traced vector (zeros when conditioning is inactive)
-            rsig = jnp.broadcast_to(
-                jnp.asarray(sc.read_sigma, jnp.float32),
-                (pplan.NB, pplan.NO))
-            sf = (self._scenario_features()
-                  if self.acfg.backend == "emulator"
-                  and self.emulator_conditioned else self._zero_sfeat)
-            y = self._jit_sc_for(tag, w)(
-                x2, af, bf, pplan.g_feat, rsig,
-                self._next_read_key(), pplan.out_perm, ep, sf)
+            if state is None:
+                a, b = self.calibration.get(tag, (1.0, 0.0))
+                state = self._inline_state(tag, w, a, b)
+            y = _st_matmul_u(self, tag, x2, w, state)
         else:
-            y = self._jit_for(tag, w)(x2, af, bf)
+            st = state if state is not None else self.state_for(tag, w)
+            y = self._unified_for(tag, w)(x2, st)
         return y.reshape(*lead, w.shape[1]).astype(x.dtype)
 
     # ------------------------------------------------------------------ #
+    @contextlib.contextmanager
+    def bound_states(self, binding: _StateBinding):
+        """Route dense() call sites through ``binding`` for the duration
+        (``ServeSession``'s per-step state threading)."""
+        prev = self._binding
+        self._binding = binding
+        try:
+            yield binding
+        finally:
+            self._binding = prev
+
     def hook(self, x: jax.Array, w: jax.Array, tag: str):
         """dense()-hook: route configured projections to the analog path."""
         if self.acfg.backend == "digital":
             return None
         if not any(tag.startswith(l) for l in self.acfg.layers):
             return None
+        if self._binding is not None:
+            return self._binding.intercept(self, x, w, tag)
         return self.matmul(x, w, tag)

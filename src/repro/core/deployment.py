@@ -1,0 +1,250 @@
+"""DeploymentState: everything one analog matmul needs, as ONE pytree.
+
+Four PRs of growth left the executor threading eleven positional slots
+through its traced forwards (conductances, read sigma/key, remap
+permutation, emulator params, scenario features, calibration affine) --
+every new scenario axis cost a new positional argument and an edit to
+three parallel jit-cache families.  This module collapses that sprawl
+into a single registered pytree:
+
+  * ``DeploymentState`` -- the per-tag bundle of *traced* leaves the
+    unified forward consumes.  One dataclass, one traced argument, one
+    jit cache per weight tag (``AnalogExecutor._unified_for``).  Adding a
+    scenario axis is now a one-field change.
+  * ``Deployment`` -- the immutable executor-level *spec* (scenario,
+    fleet key, remap policy, hot-swapped params) that
+    ``AnalogExecutor.deploy`` builds and from which per-tag states are
+    materialized lazily.  Replaces the mutable ``set_scenario`` /
+    ``set_emulator_params`` / ``fault_remap`` setter family (now thin
+    deprecation shims).
+  * ``save_deployment`` / ``load_deployment`` -- npz round trip, so an
+    aged / remapped / recalibrated deployment is reproducible across
+    processes (``serve --state-save/--state-load``).
+
+Contract (tested in tests/test_deployment_state.py):
+  * ``DeploymentState.ideal(plan)`` leaves reproduce the plain serving
+    fast path bit-identically (identity read noise, identity gather,
+    all-zero scenario features, unit affine);
+  * every leaf is traced by the unified forward, so swapping corners,
+    ages, remaps, read cycles, calibrations or retrained params reuses
+    ONE compiled executable per (tag, shape);
+  * the pytree round-trips through flatten/unflatten and npz untouched.
+
+See docs/api.md for the one-traced-arg contract and the fluent builder.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# NOTE: no module-level repro.* imports -- this module sits below both
+# repro.core.analog and repro.nonideal in the import graph; anything from
+# those layers is imported lazily inside functions.
+
+_STATE_FIELDS: Tuple[str, ...] = (
+    "gf", "read_sigma", "read_key", "out_perm", "eparams", "sfeat",
+    "cal_a", "cal_b",
+)
+
+
+@dataclass(frozen=True)
+class DeploymentState:
+    """Per-tag deployed-device state: the ONE traced argument of the
+    executor's unified forward.
+
+    Leaves (all jax arrays; ``eparams`` is a dict subtree, ``{}`` for
+    non-emulator backends):
+
+      gf         -- (NB, NO, D, H, W) perturbed raw conductances
+                    (device draw + drift + faults applied; remapped
+                    group layout when ``out_perm`` is non-identity)
+      read_sigma -- (NB, NO) per-tile cycle-to-cycle read-noise sigma
+                    (zeros = exact identity)
+      read_key   -- PRNG key for this read cycle's noise draw
+      out_perm   -- (N,) int32 logical->physical output gather
+                    (identity = exact identity)
+      eparams    -- emulator params (hot-swappable; traced)
+      sfeat      -- (N_SCENARIO_FEATURES,) scenario feature encoding a
+                    conditioned emulator consumes (all-zero at ideal)
+      cal_a/cal_b -- the per-layer volts->logical calibration affine
+
+    Instances are immutable; derive variants with ``replace`` /
+    ``with_read_key`` / ``with_calibration``.  The ideal constructor is
+    bit-identical to the plain path by construction: every non-ideal leaf
+    sits at its exact-identity value.
+    """
+    gf: jax.Array
+    read_sigma: jax.Array
+    read_key: jax.Array
+    out_perm: jax.Array
+    eparams: Dict[str, jax.Array]
+    sfeat: jax.Array
+    cal_a: jax.Array
+    cal_b: jax.Array
+
+    @classmethod
+    def ideal(cls, plan, eparams: Optional[dict] = None,
+              calibration: Tuple[float, float] = (1.0, 0.0),
+              n_features: Optional[int] = None) -> "DeploymentState":
+        """The exact-identity state for a conductance plan: unperturbed
+        conductances, zero read sigma, identity permutation, all-zero
+        scenario features, the given affine.  Feeding this to the unified
+        forward reproduces the plain serving fast path bit-for-bit."""
+        if n_features is None:
+            from repro.nonideal.scenario import N_SCENARIO_FEATURES
+            n_features = N_SCENARIO_FEATURES
+        # gf is pinned to float32 regardless of the weights' dtype (a
+        # bf16-served model would otherwise flip the state's aval between
+        # the ideal and any perturbed corner and retrace its consumers)
+        return cls(
+            gf=plan.g_feat.astype(jnp.float32),
+            read_sigma=jnp.zeros((plan.NB, plan.NO), jnp.float32),
+            read_key=jax.random.PRNGKey(0),
+            out_perm=jnp.arange(plan.N, dtype=jnp.int32),
+            eparams=dict(eparams) if eparams else {},
+            sfeat=jnp.zeros((n_features,), jnp.float32),
+            cal_a=jnp.asarray(calibration[0], jnp.float32),
+            cal_b=jnp.asarray(calibration[1], jnp.float32))
+
+    def replace(self, **kw) -> "DeploymentState":
+        """Immutable field update (the fluent derivation primitive)."""
+        return dataclasses.replace(self, **kw)
+
+    def with_read_key(self, key: jax.Array) -> "DeploymentState":
+        """Same device, next read cycle."""
+        return dataclasses.replace(self, read_key=key)
+
+    def with_calibration(self, a, b) -> "DeploymentState":
+        """Same device, refitted volts->logical affine."""
+        return dataclasses.replace(self, cal_a=jnp.asarray(a, jnp.float32),
+                                   cal_b=jnp.asarray(b, jnp.float32))
+
+
+jax.tree_util.register_pytree_node(
+    DeploymentState,
+    lambda s: (tuple(getattr(s, f) for f in _STATE_FIELDS), None),
+    lambda aux, children: DeploymentState(*children))
+
+
+@dataclass(frozen=True, eq=False)
+class Deployment:
+    """Immutable executor-level deployment spec (what ``ex.deploy`` builds).
+
+    Per-tag ``DeploymentState``s are materialized lazily from this spec
+    (``AnalogExecutor.state_for``) and cached against its identity, so a
+    new deployment -- a new corner, age, remap policy or hot-swapped
+    params -- invalidates exactly the derived device state and nothing
+    compiled.
+
+      scenario -- device non-ideality corner (None = ideal hardware)
+      key      -- fleet fabrication key (same key = same devices)
+      remap    -- stuck-fault-aware column remapping policy
+      params   -- emulator param override (hot-swap; None = executor's)
+      states   -- preloaded per-tag states (``load_deployment``), served
+                  verbatim instead of being re-derived
+    """
+    scenario: Optional[object] = None          # nonideal.Scenario
+    key: Optional[jax.Array] = None
+    remap: bool = False
+    params: Optional[dict] = None
+    states: Optional[Dict[str, DeploymentState]] = None
+
+    def replace(self, **kw) -> "Deployment":
+        """Fluent derivation: a new spec differing in the given fields."""
+        return dataclasses.replace(self, **kw)
+
+    def spec_json(self) -> str:
+        """Canonical JSON of the reproducible part of the spec (scenario,
+        fleet key, remap policy).  ``params``/``states`` are binary
+        payloads and travel through npz (``save_deployment``)."""
+        from repro.nonideal.scenario import scenario_to_json
+        return json.dumps({
+            "scenario": (None if self.scenario is None
+                         else json.loads(scenario_to_json(self.scenario))),
+            "key": (None if self.key is None
+                    else np.asarray(self.key).tolist()),
+            "remap": bool(self.remap),
+        }, sort_keys=True)
+
+    @classmethod
+    def from_spec_json(cls, doc: str) -> "Deployment":
+        """Inverse of ``spec_json`` (scenario/key/remap only)."""
+        from repro.nonideal.scenario import scenario_from_json
+        d = json.loads(doc)
+        sc = d.get("scenario")
+        key = d.get("key")
+        return cls(
+            scenario=(None if sc is None
+                      else scenario_from_json(json.dumps(sc))),
+            key=(None if key is None
+                 else jnp.asarray(np.asarray(key, np.uint32))),
+            remap=bool(d.get("remap", False)))
+
+
+# --------------------------------------------------------------------------- #
+# npz (de)serialization: a deployment reproducible across processes
+# --------------------------------------------------------------------------- #
+_SPEC_KEY = "__deployment_spec"
+_EP_PREFIX = "__eparams::"
+
+
+def save_deployment(path: str, states: Dict[str, DeploymentState],
+                    deployment: Optional[Deployment] = None) -> str:
+    """Serialize per-tag states (+ the spec) to one npz.
+
+    Emulator params are stored once (states materialized from one
+    executor share them); every other leaf is stored per tag under
+    ``<tag>::<field>``.  ``load_deployment`` restores bit-identical
+    states, so an aged / remapped / recalibrated fleet can be served by
+    another process without re-deriving the device draw."""
+    arrs: Dict[str, np.ndarray] = {}
+    eparams: Dict[str, jax.Array] = {}
+    for tag, st in states.items():
+        for f in _STATE_FIELDS:
+            if f == "eparams":
+                if st.eparams:
+                    if eparams and st.eparams is not eparams:
+                        # the format stores ONE shared param set; states
+                        # materialized from one executor share it by
+                        # construction -- refuse to silently collapse
+                        # heterogeneous per-tag params
+                        raise ValueError(
+                            "save_deployment: per-tag states carry "
+                            "different eparams dicts; the npz format "
+                            "stores one shared emulator param set")
+                    eparams = st.eparams
+                continue
+            arrs[f"{tag}::{f}"] = np.asarray(getattr(st, f))
+    for k, v in eparams.items():
+        arrs[_EP_PREFIX + k] = np.asarray(v)
+    spec = (deployment or Deployment()).spec_json()
+    np.savez(path, **{_SPEC_KEY: np.array(spec)}, **arrs)
+    return path
+
+
+def load_deployment(path: str
+                    ) -> Tuple[Dict[str, DeploymentState], Deployment]:
+    """Inverse of ``save_deployment``: ``(states, deployment)`` with the
+    loaded states attached to the returned spec (``deployment.states``)."""
+    data = np.load(path, allow_pickle=True)
+    eparams = {k[len(_EP_PREFIX):]: jnp.asarray(data[k])
+               for k in data.files if k.startswith(_EP_PREFIX)}
+    tags = sorted({k.split("::", 1)[0] for k in data.files
+                   if "::" in k and not k.startswith("__")})
+    states: Dict[str, DeploymentState] = {}
+    for tag in tags:
+        kw = {}
+        for f in _STATE_FIELDS:
+            if f == "eparams":
+                continue
+            v = jnp.asarray(data[f"{tag}::{f}"])
+            kw[f] = v
+        states[tag] = DeploymentState(eparams=dict(eparams), **kw)
+    dep = Deployment.from_spec_json(str(data[_SPEC_KEY]))
+    return states, dep.replace(states=states)

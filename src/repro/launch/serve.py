@@ -1,17 +1,294 @@
-"""Serving launcher: batched prefill + decode loop with a KV cache.
+"""Serving: batched prefill + decode with a KV cache, as a CLI and as a
+programmatic ``ServeSession``.
+
+CLI (the original launcher, now a thin wrapper over ``ServeSession``):
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
       --batch 4 --prompt-len 32 --gen 16
+
+``ServeSession`` is the task-level API the ROADMAP's "task-level
+robustness" item asks for: it builds the model once, discovers every
+analog dense() call site, and threads one ``DeploymentState`` per site
+through its compiled prefill/decode steps as TRACED arguments.  A
+``ScenarioSweep``-style loop can therefore swap the whole fleet's device
+state between ``generate()`` calls -- corners, ages, remaps, retrained
+params, recalibrations -- and the serving steps never recompile
+(``decode_traces`` stays 1; asserted by ``benchmarks/bench_task.py``,
+which turns this into accuracy-vs-sigma / accuracy-vs-age curves on
+actual token prediction).
+
+State threading needs every analog layer Python-unrolled (the model's
+``lax.scan`` over layer periods hands dense() traced weight slices with
+no per-layer call site to key a state against), i.e. ``num_layers <
+len(pattern)`` -- use ``reduced_layers`` (CLI ``--layers``).  For
+scanned models the session falls back to the legacy in-trace hook: the
+active deployment bakes into the compiled steps at trace time, exactly
+as the pre-session launcher behaved -- ``generate()`` rebuilds the
+steps when the deployment changed, so swaps still take effect, they
+just pay a retrace -- and ``--state-save/--state-load`` are
+unavailable.
+
+Call sites are keyed ``"<tag>#<ordinal>"`` (model tags repeat across
+layers; trace order is deterministic), and a deployment is serializable:
+``--state-save`` writes the served per-site states + spec to npz
+(``core.deployment.save_deployment``) and ``--state-load`` restores them
+verbatim in another process -- same fleet, same age, same remap, same
+read-noise draw, bit-identical tokens.
 """
 import argparse
+import contextlib
 import os
 import time
+from typing import Dict, Optional
+
+
+class ServeSession:
+    """A reusable serving session over one model + one analog executor.
+
+    Builds params, prompt and compiled steps once; ``generate()`` runs
+    prefill + greedy/temperature decode and returns tokens, per-step
+    logits and timings.  With an ``executor``, the analog layers' device
+    states enter the compiled steps as traced arguments (see module
+    docstring); ``generate()`` re-materializes them from the executor's
+    ACTIVE deployment each call, so the usage for a sweep is::
+
+        sess = ServeSession("gemma3-1b", executor=ex, ...)
+        for sigma in sigmas:
+            ex.deploy(scenario=Scenario(name="s", prog_sigma=sigma), key=k)
+            sess.calibrate(n=16)
+            out = sess.generate()          # zero recompiles across sigmas
+
+    With ``executor=None`` the session serves the plain digital model
+    (the reference for task-level accuracy).
+    """
+
+    def __init__(self, arch: str, *, reduced: bool = True,
+                 reduced_layers: Optional[int] = None, batch: int = 4,
+                 prompt_len: int = 32, gen: int = 16,
+                 temperature: float = 0.0, seed: int = 0, executor=None):
+        import jax
+        import jax.numpy as jnp
+        from repro.configs import get_config, reduced as reduce_cfg
+        from repro.configs.base import ParallelConfig
+        from repro.runtime import steps as S
+        self._jax, self._jnp = jax, jnp
+
+        cfg = get_config(arch)
+        if reduced:
+            cfg = reduce_cfg(cfg, layers=reduced_layers)
+        self.cfg = cfg
+        self.B, self.P, self.G = batch, prompt_len, gen
+        self.temperature = temperature
+        self.seed = seed
+        self.ex = executor
+        pcfg = ParallelConfig(attn_block_kv=min(1024, prompt_len),
+                              xent_chunk=128,
+                              scan_chunk=min(256, prompt_len))
+
+        # explicit key threading: every stochastic path (param init,
+        # prompt, sampling) gets its own derived key
+        root = jax.random.PRNGKey(seed)
+        k_init, k_prompt, k_img, k_enc, self._key = jax.random.split(root, 5)
+        params = S.init_train_state(k_init, cfg)["params"]
+        self.params = jax.tree.map(lambda v: v.astype(jnp.bfloat16), params)
+        prompt = jax.random.randint(k_prompt, (batch, prompt_len), 0,
+                                    cfg.vocab_size)
+        self.batch = {"tokens": prompt}
+        if cfg.frontend == "vision":
+            self.batch["image_embeds"] = jax.random.normal(
+                k_img, (batch, cfg.frontend_tokens, cfg.d_model),
+                jnp.bfloat16)
+        if cfg.encoder_layers:
+            self.batch["enc_frames"] = jax.random.normal(
+                k_enc, (batch, prompt_len, cfg.d_model), jnp.bfloat16)
+
+        self._prefill_step = S.make_prefill_step(cfg, pcfg)
+        self._decode_step = S.make_decode_step(cfg, pcfg)
+        # per-site state threading needs unrolled layers (see module doc)
+        self.threading = executor is not None and cfg.num_periods == 0
+        self._sites: Optional[Dict[str, object]] = None
+        self._steps_built = False
+        self._legacy_dep = None        # deployment baked into legacy steps
+        self._last_states: Optional[dict] = None
+        self.prefill_traces = 0
+        self.decode_traces = 0
+
+    # ------------------------------------------------------------------ #
+    # Analog call-site discovery + device-state materialization
+    # ------------------------------------------------------------------ #
+    def sites(self) -> Dict[str, object]:
+        """``site_key -> weight`` for every analog dense() call site,
+        discovered once with a zero-FLOP ``jax.eval_shape`` pass (the
+        model's weights are concrete; only activations are abstract)."""
+        if self.ex is None:
+            return {}
+        if not self.threading:
+            raise RuntimeError(
+                "per-site deployment-state threading needs every analog "
+                "layer unrolled (num_layers < len(pattern)); rebuild the "
+                f"session with reduced_layers < {len(self.cfg.pattern)} "
+                "(CLI: --layers)")
+        if self._sites is None:
+            from repro.core.analog import _StateBinding
+            from repro.models.common import use_dense_hook
+            rec: Dict[str, object] = {}
+            with use_dense_hook(self.ex.hook), \
+                    self.ex.bound_states(_StateBinding(record=rec)):
+                self._jax.eval_shape(
+                    lambda b: self._prefill_step(self.params, b), self.batch)
+            self._sites = rec
+        return self._sites
+
+    def states(self) -> Dict[str, object]:
+        """One ready-to-serve ``DeploymentState`` per call site,
+        materialized from the executor's ACTIVE deployment."""
+        return {sk: self.ex.state_for(sk, w)
+                for sk, w in self.sites().items()}
+
+    def calibrate(self, key=None, n: int = 16,
+                  warm_start: bool = False) -> None:
+        """Fit every call site's volts->logical affine against digital
+        under the executor's active deployment (noise-aware; reuses each
+        site's ONE compiled forward across sweep points)."""
+        jax = self._jax
+        if key is None:
+            key = jax.random.PRNGKey(self.seed + 1)
+        for i, (sk, w) in enumerate(sorted(self.sites().items())):
+            self.ex.calibrate(jax.random.fold_in(key, i), w, sk, n=n,
+                              warm_start=warm_start)
+
+    def save_deployment(self, path: str) -> str:
+        """Serialize the last-served (or current) per-site states + the
+        deployment spec to npz (``serve --state-save``)."""
+        from repro.core.deployment import save_deployment
+        states = self._last_states if self._last_states else self.states()
+        return save_deployment(path, states, self.ex.deployment)
+
+    # ------------------------------------------------------------------ #
+    # Compiled serving steps (device states as traced arguments)
+    # ------------------------------------------------------------------ #
+    def _bound(self, states):
+        if self.ex is None:
+            return contextlib.nullcontext()
+        from repro.models.common import use_dense_hook
+        stack = contextlib.ExitStack()
+        stack.enter_context(use_dense_hook(self.ex.hook))
+        if self.threading:
+            from repro.core.analog import _StateBinding
+            stack.enter_context(
+                self.ex.bound_states(_StateBinding(states=states)))
+        return stack
+
+    def _build_steps(self):
+        jax = self._jax
+
+        def run_prefill(b, states):
+            self.prefill_traces += 1           # trace-time side effect
+            with self._bound(states):
+                return self._prefill_step(self.params, b)
+
+        def run_decode(tok, cache, pos, states):
+            self.decode_traces += 1
+            with self._bound(states):
+                return self._decode_step(self.params, tok, cache, pos)
+
+        self._prefill = jax.jit(run_prefill)
+        self._decode = jax.jit(run_decode, donate_argnums=(1,))
+        self._steps_built = True
+
+    def generate(self, states: Optional[dict] = None) -> dict:
+        """One prefill + greedy/temperature decode pass.
+
+        ``states`` overrides the per-site device states (e.g. loaded from
+        ``--state-load``); by default they re-materialize from the
+        executor's active deployment.  Returns ``{"tokens": (B, G) int
+        array, "logits": (G, B, V) float array, "prefill_s", "decode_s"}``.
+        Repeated calls with swapped deployments reuse the same compiled
+        steps (``prefill_traces`` / ``decode_traces`` stay 1)."""
+        jax, jnp = self._jax, self._jnp
+        import numpy as np
+        from repro.models import model as M
+        if self.ex is not None and not self.threading:
+            # legacy (scanned-model) mode: the ACTIVE deployment bakes
+            # into the steps at trace time, so a deploy() swap between
+            # generate() calls must rebuild the jitted steps (fresh jit
+            # objects -> retrace); threading mode is the zero-recompile
+            # path
+            if self._steps_built and self._legacy_dep \
+                    is not self.ex.deployment:
+                self._steps_built = False
+            self._legacy_dep = self.ex.deployment
+        if not self._steps_built:
+            self._build_steps()
+        if states is not None and not self.threading:
+            self.sites()                       # raises with guidance
+        if states is None:
+            states = self.states() if self.threading else {}
+        self._last_states = states
+        B, P, G = self.B, self.P, self.G
+        total = P + G
+
+        t0 = time.time()
+        logits, pcache = self._prefill(self.batch, states)
+        logits.block_until_ready()
+        t_prefill = time.time() - t0
+
+        # build a generation cache sized for P+G, splice the prefill cache
+        cs = M.model_cache_schema(
+            self.cfg, B, total,
+            cross_len=(P if self.cfg.encoder_layers else 0))
+        cache = M.zeros_cache(cs)
+
+        def splice(z, c):
+            c = c.astype(z.dtype)
+            if z.shape == c.shape:
+                return c
+            if z.ndim == c.ndim and z.shape[2:] == c.shape[2:] and \
+                    z.shape[0] == c.shape[0]:
+                return jax.lax.dynamic_update_slice(
+                    z, c, (0,) * c.ndim)       # prompt occupies [0, P)
+            if z.ndim == c.ndim and z.shape[3:] == c.shape[3:] and \
+                    z.shape[:2] == c.shape[:2]:
+                return jax.lax.dynamic_update_slice(z, c, (0,) * c.ndim)
+            return z
+        cache = jax.tree.map(splice, cache, pcache)
+
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        # keep logits on device inside the timed loop (a host transfer
+        # per step would serialize the dispatch pipeline); convert once
+        # at the end
+        out_tokens, out_logits = [tok], [logits]
+        t0 = time.time()
+        for i in range(G - 1):
+            logits, cache = self._decode(tok, cache,
+                                         jnp.asarray(P + i, jnp.int32),
+                                         states)
+            if self.temperature > 0:
+                self._key, sub = jax.random.split(self._key)
+                tok = jax.random.categorical(
+                    sub, logits / self.temperature,
+                    axis=-1)[:, None].astype(jnp.int32)
+            else:
+                tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            out_tokens.append(tok)
+            out_logits.append(logits)
+        jax.block_until_ready(tok)
+        t_decode = time.time() - t0
+        return {"tokens": np.asarray(jnp.concatenate(out_tokens, axis=1)),
+                "logits": np.stack([np.asarray(l, np.float32)
+                                    for l in out_logits]),
+                "prefill_s": t_prefill, "decode_s": t_decode}
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--layers", type=int, default=None,
+                    help="reduced layer count override; below the arch's "
+                         "pattern length the layers unroll, enabling "
+                         "per-site deployment-state threading "
+                         "(--state-save/--state-load)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
@@ -32,8 +309,8 @@ def main():
                          "repro.nonideal registry (e.g. prog_mild, stressed); "
                          "requires a non-digital --analog-backend")
     ap.add_argument("--age", type=float, default=None,
-                    help="seconds since the fleet was programmed: overrides "
-                         "the scenario's drift_t (serve an aged fleet; see "
+                    help="seconds since the fleet was programmed: ages the "
+                         "scenario's drift_t (serve an aged fleet; see "
                          "docs/lifetime.md)")
     ap.add_argument("--fault-remap", action="store_true",
                     help="stuck-fault-aware column remapping: permute output "
@@ -44,6 +321,14 @@ def main():
                          "conditioned Conv4Xbar (peripheral width > 2): one "
                          "net serves every --scenario/--age corner with zero "
                          "retraining (docs/emulator.md)")
+    ap.add_argument("--state-save", default=None, metavar="NPZ",
+                    help="after serving, write the deployment (per-site "
+                         "DeploymentStates + spec) to this npz so another "
+                         "process can reproduce it with --state-load")
+    ap.add_argument("--state-load", default=None, metavar="NPZ",
+                    help="serve a deployment saved with --state-save: the "
+                         "per-site device states (fleet draw, age, remap, "
+                         "read keys, calibration) are restored verbatim")
     args = ap.parse_args()
     if args.scenario and args.analog_backend == "digital":
         ap.error("--scenario requires a non-digital --analog-backend")
@@ -51,6 +336,10 @@ def main():
         ap.error("--fault-remap / --age require --scenario")
     if args.conditioned_emulator and args.analog_backend != "emulator":
         ap.error("--conditioned-emulator requires --analog-backend=emulator")
+    if (args.state_save or args.state_load) \
+            and args.analog_backend == "digital":
+        ap.error("--state-save/--state-load require a non-digital "
+                 "--analog-backend")
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -59,45 +348,16 @@ def main():
 
     import jax
     import jax.numpy as jnp
-    from repro.configs import get_config, reduced
-    from repro.configs.base import ParallelConfig
-    from repro.models import model as M
-    from repro.runtime import steps as S
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduced(cfg)
-    B, P, G = args.batch, args.prompt_len, args.gen
-    total = P + G
-    pcfg = ParallelConfig(attn_block_kv=min(1024, P), xent_chunk=128,
-                          scan_chunk=min(256, P))
-
-    # explicit key threading: every stochastic path (param init, prompt,
-    # sampling temperature, scenario device draws) gets its own derived key
-    root = jax.random.PRNGKey(args.seed)
-    k_init, k_prompt, k_img, k_enc, key = jax.random.split(root, 5)
-    params = S.init_train_state(k_init, cfg)["params"]
-    params = jax.tree.map(lambda x: x.astype(jnp.bfloat16), params)
-    prompt = jax.random.randint(k_prompt, (B, P), 0, cfg.vocab_size)
-
-    batch = {"tokens": prompt}
-    if cfg.frontend == "vision":
-        batch["image_embeds"] = jax.random.normal(
-            k_img, (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
-    if cfg.encoder_layers:
-        batch["enc_frames"] = jax.random.normal(
-            k_enc, (B, P, cfg.d_model), jnp.bfloat16)
 
     # optional: serve the MLP projections on emulated analog hardware (the
     # SEMULATOR serving path; uses the cached-conductance-plan fast path)
-    import contextlib
-    hook_ctx = contextlib.nullcontext()
+    ex = None
+    loaded_states = None
     if args.analog_backend != "digital":
         import numpy as np
         from repro.configs.base import AnalogConfig
         from repro.configs.rram_ps32 import CASE_A
         from repro.core.analog import AnalogExecutor
-        from repro.models.common import use_dense_hook
         eparams = None
         if args.analog_backend == "emulator":
             assert args.emulator_params, \
@@ -107,9 +367,8 @@ def main():
                        if not k.startswith("__")}
         ex = AnalogExecutor(
             acfg=AnalogConfig(enabled=True, backend=args.analog_backend,
-                              layers=("mlp",), scenario=args.scenario),
-            geom=CASE_A, emulator_params=eparams,
-            fault_remap=args.fault_remap)
+                              layers=("mlp",)),
+            geom=CASE_A, emulator_params=eparams)
         if args.conditioned_emulator:
             from repro.nonideal import (N_SCENARIO_FEATURES,
                                         SCENARIO_FEATURE_NAMES)
@@ -120,76 +379,41 @@ def main():
                 "nonideal.data.train_conditioned_emulator)"
             print(f"conditioned emulator: {N_SCENARIO_FEATURES} scenario "
                   f"features ({', '.join(SCENARIO_FEATURE_NAMES[:4])}, ...)")
-        if ex.scenario is not None:
-            if args.age is not None:
-                from repro.nonideal import scenario_at_age
-                ex.scenario = scenario_at_age(ex.scenario, args.age)
-            key, k_dev = jax.random.split(key)
-            ex.set_scenario(ex.scenario, key=k_dev)
+        if args.state_load:
+            from repro.core.deployment import load_deployment
+            loaded_states, dep = load_deployment(args.state_load)
+            ex.deploy(scenario=dep.scenario, key=dep.key, remap=dep.remap,
+                      states=dep.states)
+            print(f"deployment restored: {len(loaded_states)} call sites "
+                  f"from {args.state_load}")
+        elif args.scenario:
+            from repro.nonideal import get_scenario
+            k_dev = jax.random.fold_in(jax.random.PRNGKey(args.seed), 0xDEF)
+            ex.deploy(scenario=get_scenario(args.scenario), age=args.age,
+                      remap=args.fault_remap, key=k_dev)
             print(f"analog scenario: {ex.scenario}")
-        hook_ctx = use_dense_hook(ex.hook)
 
-    # params are frozen for the whole serve loop, so close them over the
-    # jitted steps instead of passing them as traced args: the analog fast
-    # path then sees concrete weights at trace time and its conductance-plan
-    # / precompute caches bake in as constants (instead of re-tiling inside
-    # the compiled graph on every decode step)
-    prefill_step = S.make_prefill_step(cfg, pcfg)
-    decode_step = S.make_decode_step(cfg, pcfg)
-    prefill = jax.jit(lambda b: prefill_step(params, b))
-    decode = jax.jit(lambda tok, cache, pos: decode_step(params, tok, cache, pos),
-                     donate_argnums=(1,))
+    sess = ServeSession(args.arch, reduced=args.reduced,
+                        reduced_layers=args.layers, batch=args.batch,
+                        prompt_len=args.prompt_len, gen=args.gen,
+                        temperature=args.temperature, seed=args.seed,
+                        executor=ex)
+    if (args.state_save or args.state_load) and not sess.threading:
+        ap.error("--state-save/--state-load need unrolled analog layers: "
+                 f"pass --layers N with N < {len(sess.cfg.pattern)} "
+                 "(the arch's layer-pattern length)")
+    out = sess.generate(states=loaded_states)
 
-    # keep the hook active for the whole serve loop (tracing happens at the
-    # first prefill/decode call)
-    stack = contextlib.ExitStack()
-    stack.enter_context(hook_ctx)
-
-    t0 = time.time()
-    logits, pcache = prefill(batch)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-
-    # build a generation cache sized for P+G and splice the prefill cache in
-    cs = M.model_cache_schema(cfg, B, total,
-                              cross_len=(P if cfg.encoder_layers else 0))
-    cache = M.zeros_cache(cs)
-
-    def splice(z, c):
-        c = c.astype(z.dtype)
-        if z.shape == c.shape:
-            return c
-        if z.ndim == c.ndim and z.shape[2:] == c.shape[2:] and \
-                z.shape[0] == c.shape[0]:
-            return jax.lax.dynamic_update_slice(
-                z, c, (0,) * c.ndim)           # prompt occupies [0, P)
-        if z.ndim == c.ndim and z.shape[3:] == c.shape[3:] and \
-                z.shape[:2] == c.shape[:2]:
-            return jax.lax.dynamic_update_slice(z, c, (0,) * c.ndim)
-        return z
-    cache = jax.tree.map(splice, cache, pcache)
-
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    out_tokens = [tok]
-    t0 = time.time()
-    for i in range(G - 1):
-        logits, cache = decode(tok, cache, jnp.asarray(P + i, jnp.int32))
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(
-                sub, logits / args.temperature, axis=-1)[:, None].astype(jnp.int32)
-        else:
-            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-
-    toks = jnp.concatenate(out_tokens, axis=1)
-    print(f"prefill {B}x{P}: {t_prefill*1e3:.1f} ms "
-          f"({B*P/t_prefill:.0f} tok/s)")
-    print(f"decode  {G-1} steps: {t_decode*1e3:.1f} ms "
-          f"({B*(G-1)/max(t_decode,1e-9):.0f} tok/s)")
-    print("sample tokens[0]:", toks[0, :12].tolist())
+    B, P, G = args.batch, args.prompt_len, args.gen
+    print(f"prefill {B}x{P}: {out['prefill_s']*1e3:.1f} ms "
+          f"({B*P/out['prefill_s']:.0f} tok/s)")
+    print(f"decode  {G-1} steps: {out['decode_s']*1e3:.1f} ms "
+          f"({B*(G-1)/max(out['decode_s'],1e-9):.0f} tok/s)")
+    print("sample tokens[0]:", out["tokens"][0, :12].tolist())
+    if args.state_save:
+        path = sess.save_deployment(args.state_save)
+        print(f"deployment saved: {len(sess._last_states)} call sites "
+              f"-> {path}")
 
 
 if __name__ == "__main__":

@@ -13,7 +13,7 @@ applies the three mitigations the rest of the subsystem provides:
   * **recalibrate** -- noise-aware affine refit against the aged device
                     (``AnalogExecutor.calibrate``)
   * **retrain**  -- noise-aware emulator retraining on the aged corner,
-                    hot-swapped with ``AnalogExecutor.set_emulator_params``
+                    hot-swapped with ``AnalogExecutor.deploy(params=...)``
 
 A fourth option supersedes the third: a *scenario-conditioned* emulator
 (``nonideal.data.train_conditioned_emulator``, docs/emulator.md) reads
@@ -26,18 +26,26 @@ retraining between checkpoints (``prefer_conditioned``) -- the
 per-checkpoint fine-tune path stays available as the fallback and the
 accuracy baseline.
 
-All three ride the executor's per-tag *scenario forward*, whose perturbed
-conductances, calibration affine, remap permutation and emulator params
-are traced arguments -- so an entire lifetime walk (ages x remaps x
-recalibrations x retrains) compiles exactly ONCE per (tag, shape).
-``benchmarks/bench_lifetime.py`` productionizes this into
+All three ride the executor's per-tag *unified forward*
+(``core.deployment.DeploymentState``): perturbed conductances,
+calibration affine, remap permutation and emulator params are leaves of
+the ONE traced deployment-state argument -- so an entire lifetime walk
+(ages x remaps x recalibrations x retrains) compiles exactly ONCE per
+(tag, shape).  ``benchmarks/bench_lifetime.py`` productionizes this into
 accuracy-vs-age curves with and without mitigation; docs/lifetime.md is
 the narrative version.
 
+Calibration transfer: after the deployment-time cold fit, every
+checkpoint's affine refit warm-starts from the previous checkpoint's
+affine (drift is mostly a scale shift), cutting the probe budget in half
+(``AnalogExecutor.calibrate(warm_start=True)``; the per-checkpoint
+``calib_n`` is recorded in the scheduler history and asserted in tests).
+
 The fleet identity lives in the executor's ``scenario_key``: the
-scheduler ages the scenario (rewrites ``drift_t``) under a FIXED key, so
-every checkpoint sees the same fabricated devices -- the same sigma draw,
-the same stuck cells -- just older.
+scheduler ages the scenario (rewrites ``drift_t``) under a FIXED key --
+``deploy(scenario=aged)`` keeps the key, so every checkpoint sees the
+same fabricated devices (the same sigma draw, the same stuck cells),
+just older.
 """
 from __future__ import annotations
 
@@ -199,7 +207,7 @@ def make_conditioned_field_calibrator(key: jax.Array,
             aged = scenario_at_age(scenario, ta)
             # serving-exact aged plan: same fabrication key, same remap
             # discipline the executor will use at this age
-            ex.set_scenario(aged, key=ex.scenario_key)
+            ex.deploy(scenario=aged, key=ex.scenario_key)
             plan = ex._scenario_plan(tag, w)
             X, periph2, y = _probe_blocks(ex, plan,
                                           jax.random.fold_in(key, i),
@@ -211,7 +219,8 @@ def make_conditioned_field_calibrator(key: jax.Array,
                  jnp.broadcast_to(sf[None], (X.shape[0], sf.shape[0]))],
                 axis=-1))
             ys.append(y)
-        ex.set_scenario(scenario_at_age(scenario, 0.0), key=ex.scenario_key)
+        ex.deploy(scenario=scenario_at_age(scenario, 0.0),
+                  key=ex.scenario_key)
         data = (jnp.concatenate(xs), jnp.concatenate(ps),
                 jnp.concatenate(ys))
         return finetune_emulator(key, ex.emulator_params, ex.geom, ex.acfg,
@@ -238,7 +247,7 @@ class LifetimeScheduler:
                    fleet's own serving distribution;
                    ``make_noise_aware_retrainer`` on the corner's
                    distribution); returned params are hot-swapped via
-                   ``set_emulator_params``.
+                   ``deploy(params=...)``.
       prefer_conditioned: when the executor serves a *scenario-conditioned*
                    emulator (``AnalogExecutor.emulator_conditioned``), run
                    the retrain callback at DEPLOYMENT only (one-time field
@@ -254,11 +263,13 @@ class LifetimeScheduler:
       calib_n:     calibration sample count (keep small for the circuit
                    backend; every sample is a block solve).
 
-    ``deploy`` programs the fleet at t = 0 and calibrates; ``step`` ages
-    it to one checkpoint; ``run`` does the whole walk and returns one
-    record per checkpoint.  None of it touches the executor's compiled
-    forwards: every intervention enters the scenario forward as a traced
-    argument (asserted by tests and bench_lifetime).
+    ``deploy`` programs the fleet at t = 0 and calibrates (cold, full
+    probe budget); ``step`` ages it to one checkpoint and warm-starts the
+    affine refit from the previous checkpoint's fit (half budget,
+    recorded as ``calib_n`` in the history); ``run`` does the whole walk
+    and returns one record per checkpoint.  None of it touches the
+    executor's compiled forwards: every intervention is a leaf of the
+    traced ``DeploymentState`` (asserted by tests and bench_lifetime).
     """
     ex: "object"                       # AnalogExecutor (kept untyped: no cycle)
     scenario: Scenario
@@ -292,41 +303,53 @@ class LifetimeScheduler:
         params = self.retrain(scenario, t, self.ex, w, tag)
         if params is None:
             return False
-        self.ex.set_emulator_params(params)
+        self.ex.deploy(params=params)
         return True
 
     def _calibrate(self, w, tag: str, step: int):
+        """Refit the affine; checkpoints past deployment warm-start from
+        the previous fit on half the probe budget (calibration
+        transfer)."""
         k = jax.random.fold_in(jax.random.fold_in(self.key, 0xCA1), step)
-        return self.ex.calibrate(k, w, tag, n=self.calib_n)
+        out = self.ex.calibrate(k, w, tag, n=self.calib_n,
+                                warm_start=(step > 0))
+        self._calib_used = self.ex._last_calib_n
+        return out
 
     def deploy(self, w, tag: str) -> Scenario:
         """Program the fleet (t = 0) and fit the initial calibration.
 
         Both the mitigated and the unmitigated lifetime start here: a
-        freshly deployed fleet is always calibrated once.  A configured
-        ``retrain`` callback also runs at deployment -- field calibration
-        of the emulator against the fresh hardware, before drift sets in
-        -- unless a conditioned net supersedes it (``prefer_conditioned``)."""
-        self.ex.fault_remap = self.remap
+        freshly deployed fleet is always calibrated once (cold, full
+        probe budget).  A configured ``retrain`` callback also runs at
+        deployment -- field calibration of the emulator against the fresh
+        hardware, before drift sets in -- unless a conditioned net
+        supersedes it (``prefer_conditioned``)."""
         sc0 = scenario_at_age(self.scenario, 0.0)
-        self.ex.set_scenario(sc0, key=self.key)
+        self.ex.deploy(scenario=sc0, key=self.key, remap=self.remap)
         retrained = self._retrain(sc0, 0.0, w, tag)
+        self._calib_used = 0
         self._calibrate(w, tag, 0)
         self.history = [{"label": "t0", "t": 0.0, "retrained": retrained,
-                         "conditioned": self.conditioned}]
+                         "conditioned": self.conditioned,
+                         "calib_n": self._calib_used}]
         return sc0
 
     def step(self, w, tag: str, label: str, t: float) -> Scenario:
         """Age the fleet to ``t`` seconds and apply the configured
         mitigations (retrain -> hot-swap -> recalibrate, in that order:
-        the affine must be fitted against the params that will serve)."""
+        the affine must be fitted against the params that will serve).
+        ``deploy(scenario=aged)`` keeps the fleet key and remap policy:
+        same devices, older."""
         aged = scenario_at_age(self.scenario, t)
-        self.ex.set_scenario(aged, key=self.key)   # same fleet, older
+        self.ex.deploy(scenario=aged, key=self.key)    # same fleet, older
         retrained = self._retrain(aged, t, w, tag)
+        self._calib_used = 0
         if self.recalibrate:
             self._calibrate(w, tag, len(self.history))
         self.history.append({"label": label, "t": t, "retrained": retrained,
-                             "conditioned": self.conditioned})
+                             "conditioned": self.conditioned,
+                             "calib_n": self._calib_used})
         return aged
 
     def run(self, w, tag: str, x) -> List[dict]:

@@ -19,8 +19,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.deployment import DeploymentState
 from repro.nonideal.perturb import perturb_plan
-from repro.nonideal.scenario import Scenario, scenario_features
+from repro.nonideal.scenario import (N_SCENARIO_FEATURES, Scenario,
+                                     scenario_features)
 
 
 class ScenarioSweep:
@@ -50,6 +52,7 @@ class ScenarioSweep:
         return self._fn._cache_size() if self._fn is not None else 0
 
     def _build(self):
+        from repro.core.analog import _st_matmul_u
         ex, w, tag = self.ex, self.w, self.tag
 
         def fwd(x2, scen: Scenario, keys, a, b):
@@ -59,14 +62,24 @@ class ScenarioSweep:
             # a function of the traced scenario leaves, so it rides the
             # same single executable as the corner sweep itself
             sf = (scenario_features(scen)
-                  if getattr(ex, "emulator_conditioned", False) else None)
+                  if getattr(ex, "emulator_conditioned", False)
+                  else jnp.zeros((N_SCENARIO_FEATURES,), jnp.float32))
+            ep = (ex.emulator_params
+                  if ex.acfg.backend == "emulator"
+                  and ex.emulator_params is not None else {})
+            rsig = jnp.broadcast_to(
+                jnp.asarray(scen.read_sigma, jnp.float32),
+                (plan.NB, plan.NO))
+            operm = jnp.arange(plan.N, dtype=jnp.int32)
 
             def one(k):
                 kd, kr = jax.random.split(k)
                 p = perturb_plan(plan, ex.acfg, scen, kd)
-                yv, xs = ex.raw_matmul(x2, w, tag, plan=p, read_key=kr,
-                                       read_sigma=scen.read_sigma, sfeat=sf)
-                return (a * yv + b) * xs
+                st = DeploymentState(gf=p.g_feat, read_sigma=rsig,
+                                     read_key=kr, out_perm=operm,
+                                     eparams=ep, sfeat=sf,
+                                     cal_a=a, cal_b=b)
+                return _st_matmul_u(ex, tag, x2, w, st)
 
             return jax.vmap(one)(keys)
 
@@ -82,8 +95,8 @@ class ScenarioSweep:
                 "ScenarioSweep sweeps traced scenario fields only; "
                 "r_line_scale is static (it rewrites CircuitParams, so each "
                 "level would recompile and the circuit backend's closure "
-                "would not see it) -- use AnalogExecutor.set_scenario for "
-                "line-resistance corners")
+                "would not see it) -- use AnalogExecutor.deploy("
+                "scenario=...) for line-resistance corners")
         if self._fn is None:
             self._build()
         if key is None:

@@ -149,11 +149,12 @@ def test_matmul_compile_cache_reused_across_calibration():
     x, w = _data(CASE_A, 64, 4, 8)
     ex = AnalogExecutor(acfg=AnalogConfig(backend="analytic"), geom=CASE_A)
     ex.matmul(x, w, "t")
-    assert ex._jit_fns["t"][0] is w
-    fn1 = ex._jit_fns["t"][1]
+    assert ex._fns["t"][0] is w
+    fn1 = ex._fns["t"][2]
     ex.calibration["t"] = (2.0, 0.1)           # recalibrate
     y = ex.matmul(x, w, "t")
-    assert ex._jit_fns["t"][1] is fn1          # same compiled fn
+    assert ex._fns["t"][2] is fn1              # same compiled fn
+    assert fn1._cache_size() == 1              # affine is a state leaf
     assert np.all(np.isfinite(np.asarray(y)))
 
 

@@ -16,6 +16,7 @@ from repro.configs.rram_ps32 import CASE_A, EmulatorTrainConfig
 from repro.core import conv4xbar
 from repro.core.analog import AnalogExecutor
 from repro.core.circuit import CircuitParams
+from repro.core.deployment import DeploymentState
 from repro.models.common import init_params
 from repro.nonideal import (BUILTIN_SCENARIOS, N_SCENARIO_FEATURES,
                             SCENARIO_FEATURE_NAMES, LifetimeScheduler,
@@ -169,16 +170,13 @@ def test_conditioned_ideal_bit_identical_to_plain():
     ex0 = _executor()
     y0 = np.asarray(ex0.matmul(x, w, "t"))
     ex1 = _executor(ex0.emulator_params)
-    ex1.set_scenario(Scenario(name="ideal"), key=jax.random.PRNGKey(9))
+    ex1.deploy(scenario=Scenario(name="ideal"), key=jax.random.PRNGKey(9))
     np.testing.assert_array_equal(np.asarray(ex1.matmul(x, w, "t")), y0)
-    # scenario forward fed the ideal (all-zero) feature block explicitly
+    # unified forward fed the ideal state (all-zero feature block) explicitly
     plan = ex1._plan_for(w, "t")
     x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-    y_sc = ex1._jit_sc_for("t", w)(
-        x2, jnp.float32(1.0), jnp.float32(0.0), plan.g_feat,
-        jnp.float32(0.0), jax.random.PRNGKey(0),
-        jnp.arange(plan.N, dtype=jnp.int32), ex1.emulator_params,
-        ex1._zero_sfeat)
+    y_sc = ex1._unified_for("t", w)(
+        x2, DeploymentState.ideal(plan, eparams=ex1.emulator_params))
     np.testing.assert_array_equal(np.asarray(y_sc), y0)
 
 
@@ -194,20 +192,20 @@ def test_corner_and_age_swaps_zero_recompiles():
                scenario_at_age(get_scenario("stressed"), 2.592e6),
                get_scenario("prog_heavy"),
                get_scenario("drift_1day")):
-        ex.set_scenario(sc, key=jax.random.PRNGKey(1))
+        ex.deploy(scenario=sc, key=jax.random.PRNGKey(1))
         outs.append(np.asarray(ex.matmul(x, w, "t")))
-    fn = ex._sc_fns["t"][2]
+    fn = ex._fns["t"][2]
     assert fn._cache_size() == 1
     # ages actually change the served numbers (the net sees drift_age)
     assert not np.allclose(outs[1], outs[2])
     # per-tile batch rides the same executable too
     plan = ex._plan_for(w, "t")
-    ex.set_scenario(tile_scenarios(plan.NB, plan.NO, prog_sigma=0.06,
-                                   drift_nu=0.05, drift_t=8.64e4,
-                                   name="tiled"),
-                    key=jax.random.PRNGKey(2))
+    ex.deploy(scenario=tile_scenarios(plan.NB, plan.NO, prog_sigma=0.06,
+                                      drift_nu=0.05, drift_t=8.64e4,
+                                      name="tiled"),
+              key=jax.random.PRNGKey(2))
     ex.matmul(x, w, "t")
-    assert ex._sc_fns["t"][2] is fn and fn._cache_size() == 1
+    assert ex._fns["t"][2] is fn and fn._cache_size() == 1
 
 
 def test_conditioned_sweep_compiles_once():
@@ -276,5 +274,6 @@ def test_conditioned_field_calibrator_deploy_only_and_hot_swaps():
     recs = sched.run(w, "t", x)
     assert [r["retrained"] for r in sched.history] == [True, False]
     assert ex.emulator_params is not p0            # deploy swap happened
-    assert ex._sc_fns["t"][2]._cache_size() == 1   # still compile-once
+    # matmul + cold-calib + warm-calib shapes on the ONE unified forward
+    assert ex._fns["t"][2]._cache_size() == 3
     assert all(np.all(np.isfinite(np.asarray(r["y"]))) for r in recs)

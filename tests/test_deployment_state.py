@@ -1,0 +1,232 @@
+"""Tests for the unified DeploymentState redesign (docs/api.md):
+
+  * ``DeploymentState.ideal()`` through the unified forward is
+    bit-identical to the plain serving path (``raw_matmul``);
+  * a corner -> age -> remap -> params swap sequence reuses exactly ONE
+    compiled executable per (tag, shape) -- every deployed quantity is a
+    leaf of the one traced state;
+  * the state round-trips through pytree flatten/unflatten and npz, and
+    the deployment spec through JSON;
+  * the legacy mutable setters are thin ``DeprecationWarning`` shims that
+    delegate exactly to the fluent ``deploy`` builder.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import CASE_A
+from repro.core import conv4xbar
+from repro.core.analog import AnalogExecutor
+from repro.core.deployment import (Deployment, DeploymentState,
+                                   load_deployment, save_deployment)
+from repro.models.common import init_params
+from repro.nonideal import (N_SCENARIO_FEATURES, Scenario, get_scenario,
+                            scenario_at_age)
+
+ACFG = AnalogConfig()
+
+
+def _executor(backend="analytic", **kw):
+    if backend == "emulator":
+        kw.setdefault("emulator_params", init_params(
+            jax.random.PRNGKey(7), conv4xbar.conv4xbar_schema(CASE_A,
+                                                              n_periph=2)))
+        kw.setdefault("use_pallas", False)
+    return AnalogExecutor(acfg=AnalogConfig(backend=backend), geom=CASE_A,
+                          **kw)
+
+
+def _data(K=70, N=8, B=4, seed=0):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (K, N)) * 0.3
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, K)) * 0.5
+    return x, w
+
+
+# --------------------------------------------------------------------------- #
+# ideal() bit-identity with the plain path
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", ["analytic", "emulator"])
+def test_ideal_state_bit_identical_to_plain_path(backend):
+    """The unified forward fed DeploymentState.ideal() must reproduce the
+    plain (pre-deployment-era) forward bit-for-bit: every non-ideal leaf
+    sits at its exact-identity value."""
+    import functools
+
+    x, w = _data()
+    ex = _executor(backend)
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+
+    # the pre-refactor plain forward, verbatim: per-tag jit closing over
+    # w, affine as traced scalars, raw_matmul behind the same
+    # custom_vjp boundary the old _st_matmul had (the boundary shapes
+    # XLA's fusion, so it is part of "bit-identical")
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+    def _st_plain(ex_, tag, q, ww, a, b):
+        yv, xs = ex_.raw_matmul(q, ww, tag)
+        return (a * yv + b) * xs
+
+    _st_plain.defvjp(
+        lambda ex_, tag, q, ww, a, b: (_st_plain(ex_, tag, q, ww, a, b),
+                                       None),
+        lambda ex_, tag, res, ct: (ct, ct, ct, ct))
+
+    fn_plain = jax.jit(lambda q, a, b: _st_plain(ex, "t", q, wf, a, b))
+    y_plain = np.asarray(fn_plain(x2, jnp.float32(2.0), jnp.float32(0.1)))
+    plan = ex._plan_for(w, "t")
+    ep = ex.emulator_params if backend == "emulator" else {}
+    st = DeploymentState.ideal(plan, eparams=ep, calibration=(2.0, 0.1))
+    y_state = ex._unified_for("t", w)(x2, st)
+    np.testing.assert_array_equal(np.asarray(y_state), y_plain)
+    # and matmul's default (ideal deployment + calibration dict) agrees
+    ex.calibration["t"] = (2.0, 0.1)
+    np.testing.assert_array_equal(
+        np.asarray(ex.matmul(x, w, "t")).reshape(-1, w.shape[1]), y_plain)
+
+
+# --------------------------------------------------------------------------- #
+# zero-recompile swaps under ONE cache
+# --------------------------------------------------------------------------- #
+def test_corner_age_remap_params_swaps_compile_once():
+    """The acceptance sequence: corner -> age -> remap -> params, one
+    executable."""
+    x, w = _data()
+    ex = _executor("emulator")
+    outs = [np.asarray(ex.matmul(x, w, "t"))]             # ideal
+    fn = ex._fns["t"][2]
+    ex.deploy(scenario=get_scenario("stressed"), key=jax.random.PRNGKey(1))
+    outs.append(np.asarray(ex.matmul(x, w, "t")))         # corner
+    ex.deploy(age=2.592e6)
+    outs.append(np.asarray(ex.matmul(x, w, "t")))         # age
+    ex.deploy(remap=True)
+    outs.append(np.asarray(ex.matmul(x, w, "t")))         # remap
+    new_p = init_params(jax.random.PRNGKey(8),
+                        conv4xbar.conv4xbar_schema(CASE_A, n_periph=2))
+    ex.deploy(params=new_p)
+    outs.append(np.asarray(ex.matmul(x, w, "t")))         # hot-swap
+    assert ex._fns["t"][2] is fn
+    assert fn._cache_size() == 1                          # compiled ONCE
+    for a, b in zip(outs, outs[1:]):
+        assert not np.array_equal(a, b)                   # swaps took effect
+
+
+def test_deploy_builder_is_fluent_and_partial():
+    ex = _executor()
+    sc = Scenario(name="fl", prog_sigma=0.05, drift_nu=0.05,
+                  p_stuck_off=0.03)
+    k = jax.random.PRNGKey(4)
+    dep = ex.deploy(scenario=sc, key=k, remap=True)
+    assert isinstance(dep, Deployment) and ex.deployment is dep
+    assert ex.scenario is sc and ex.fault_remap
+    # partial update: aging keeps the key and the remap policy
+    dep2 = ex.deploy(age=3.6e3)
+    assert dep2.remap and dep2.key is k
+    assert float(np.asarray(ex.scenario.drift_t)) == 3.6e3
+    assert ex.scenario.prog_sigma == 0.05
+    # deployments are immutable specs
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        dep2.remap = False
+    with pytest.raises(ValueError):
+        _executor().deploy(age=3.6e3)        # no scenario to age
+    # clearing the corner is explicit
+    assert ex.deploy(scenario=None).scenario is None
+
+
+# --------------------------------------------------------------------------- #
+# pytree / JSON / npz round trips
+# --------------------------------------------------------------------------- #
+def test_state_pytree_roundtrip():
+    x, w = _data()
+    ex = _executor("emulator")
+    ex.deploy(scenario=get_scenario("stressed"), key=jax.random.PRNGKey(2),
+              remap=True)
+    st = ex.state_for("t", w)
+    leaves, treedef = jax.tree_util.tree_flatten(st)
+    st2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(st2, DeploymentState)
+    for a, b in zip(jax.tree_util.tree_leaves(st),
+                    jax.tree_util.tree_leaves(st2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # every deployed quantity is a LEAF (traced), nothing static
+    assert len(leaves) == 7 + len(st.eparams)
+    # fluent immutable updates
+    st3 = st.with_calibration(2.0, -0.5).with_read_key(jax.random.PRNGKey(9))
+    assert float(st3.cal_a) == 2.0 and st.cal_a is not st3.cal_a
+    assert np.array_equal(np.asarray(st.gf), np.asarray(st3.gf))
+
+
+def test_deployment_spec_json_roundtrip():
+    sc = get_scenario("stressed")
+    dep = Deployment(scenario=sc, key=jax.random.PRNGKey(11), remap=True)
+    back = Deployment.from_spec_json(dep.spec_json())
+    assert back.remap
+    np.testing.assert_array_equal(np.asarray(back.key), np.asarray(dep.key))
+    l1, t1 = jax.tree_util.tree_flatten(back.scenario)
+    l2, t2 = jax.tree_util.tree_flatten(sc)
+    assert t1 == t2 and l1 == l2
+    # ideal spec round-trips too
+    empty = Deployment.from_spec_json(Deployment().spec_json())
+    assert empty.scenario is None and not empty.remap
+
+
+def test_deployment_npz_roundtrip(tmp_path):
+    """An aged + remapped + calibrated deployment serialized to npz and
+    restored in a fresh executor serves bit-identical outputs."""
+    x, w = _data()
+    ex = _executor("emulator")
+    ex.deploy(scenario=scenario_at_age(get_scenario("stressed"), 8.64e4),
+              key=jax.random.PRNGKey(5), remap=True)
+    ex.calibrate(jax.random.PRNGKey(6), w, "t", n=16)
+    states = {"t": ex.state_for("t", w)}
+    y_ref = np.asarray(ex._unified_for("t", w)(
+        x.reshape(-1, x.shape[-1]).astype(jnp.float32), states["t"]))
+    path = str(tmp_path / "dep.npz")
+    save_deployment(path, states, ex.deployment)
+    loaded, dep = load_deployment(path)
+    assert set(loaded) == {"t"}
+    for f in ("gf", "read_sigma", "read_key", "out_perm", "sfeat",
+              "cal_a", "cal_b"):
+        np.testing.assert_array_equal(np.asarray(getattr(loaded["t"], f)),
+                                      np.asarray(getattr(states["t"], f)))
+    assert set(loaded["t"].eparams) == set(ex.emulator_params)
+    assert dep.remap and dep.states is loaded
+    # a FRESH executor serving the loaded states reproduces the outputs
+    ex2 = _executor("emulator", emulator_params=ex.emulator_params)
+    ex2.deploy(scenario=dep.scenario, key=dep.key, remap=dep.remap,
+               states=loaded)
+    np.testing.assert_array_equal(
+        np.asarray(ex2.matmul(x, w, "t")).reshape(-1, w.shape[1]), y_ref)
+
+
+# --------------------------------------------------------------------------- #
+# Deprecation shims
+# --------------------------------------------------------------------------- #
+def test_setter_shims_warn_and_delegate_exactly():
+    x, w = _data()
+    sc = Scenario(name="shim", prog_sigma=0.08, p_stuck_off=0.03)
+    k = jax.random.PRNGKey(3)
+    new_api = _executor()
+    new_api.deploy(scenario=sc, key=k, remap=True)
+    y_new = np.asarray(new_api.matmul(x, w, "t"))
+
+    old_api = _executor()
+    with pytest.warns(DeprecationWarning, match="set_scenario is deprecated"):
+        ret = old_api.set_scenario(sc, key=k)
+    assert ret is old_api                      # old chaining still works
+    with pytest.warns(DeprecationWarning, match="fault_remap is deprecated"):
+        old_api.fault_remap = True
+    np.testing.assert_array_equal(np.asarray(old_api.matmul(x, w, "t")),
+                                  y_new)
+
+    em = _executor("emulator")
+    new_p = init_params(jax.random.PRNGKey(8),
+                        conv4xbar.conv4xbar_schema(CASE_A, n_periph=2))
+    with pytest.warns(DeprecationWarning,
+                      match="set_emulator_params is deprecated"):
+        em.set_emulator_params(new_p)
+    assert em.emulator_params is new_p

@@ -12,6 +12,7 @@ import pytest
 from repro.configs.base import AnalogConfig
 from repro.configs.rram_ps32 import CASE_A
 from repro.core import conv4xbar
+from repro.core.deployment import DeploymentState
 from repro.core.analog import AnalogExecutor
 from repro.core.crossbar import fault_aware_group_perm
 from repro.models.common import init_params
@@ -181,23 +182,23 @@ def test_remap_keeps_top_decile_weights_off_stuck_cells():
                        f"stuck-off cells (was {before})"
 
 
-def test_remap_toggle_invalidates_perturbation_cache():
-    """Flipping fault_remap between calls must not serve the stale
-    (un)remapped plan from the perturbation cache."""
+def test_remap_toggle_invalidates_state_cache():
+    """Deploying a different remap policy must not serve the stale
+    (un)remapped device state from the materialization cache."""
     x, w = _data()
     ex = _executor()
-    ex.set_scenario(Scenario(name="f", p_stuck_off=0.05),
-                    key=jax.random.PRNGKey(1))
+    ex.deploy(scenario=Scenario(name="f", p_stuck_off=0.05),
+              key=jax.random.PRNGKey(1))
     y_off = np.asarray(ex.matmul(x, w, "t"))
-    p_off = ex._pert_cache["t"][3]
-    ex.fault_remap = True
+    st_off = ex._state_cache["t"][2]
+    ex.deploy(remap=True)
     y_on = np.asarray(ex.matmul(x, w, "t"))
-    p_on = ex._pert_cache["t"][3]
-    assert p_on is not p_off
-    assert not np.array_equal(np.asarray(p_on.out_perm),
-                              np.asarray(p_off.out_perm))
+    st_on = ex._state_cache["t"][2]
+    assert st_on is not st_off
+    assert not np.array_equal(np.asarray(st_on.out_perm),
+                              np.asarray(st_off.out_perm))
     assert not np.allclose(y_on, y_off)
-    ex.fault_remap = False
+    ex.deploy(remap=False)
     np.testing.assert_array_equal(np.asarray(ex.matmul(x, w, "t")), y_off)
 
 
@@ -213,26 +214,26 @@ def test_tiled_negative_drift_nu_is_not_ideal():
 def test_executor_remap_compile_cache_stable():
     x, w = _data()
     ex = _executor("emulator", fault_remap=True)
-    ex.set_scenario(Scenario(name="a", p_stuck_off=0.04, prog_sigma=0.05),
-                    key=jax.random.PRNGKey(1))
+    ex.deploy(scenario=Scenario(name="a", p_stuck_off=0.04, prog_sigma=0.05),
+              key=jax.random.PRNGKey(1))
     ya = np.asarray(ex.matmul(x, w, "t"))
-    fn = ex._sc_fns["t"][2]
+    fn = ex._fns["t"][2]
     # different fleet -> different fault mask -> different permutation
-    ex.set_scenario(Scenario(name="a", p_stuck_off=0.04, prog_sigma=0.05),
-                    key=jax.random.PRNGKey(2))
+    ex.deploy(scenario=Scenario(name="a", p_stuck_off=0.04, prog_sigma=0.05),
+              key=jax.random.PRNGKey(2))
     yb = np.asarray(ex.matmul(x, w, "t"))
     # heavier faults, per-tile batch
     plan = ex._plan_for(w, "t")
-    ex.set_scenario(tile_scenarios(plan.NB, plan.NO, p_stuck_off=0.08,
-                                   prog_sigma=0.05, name="tiled"),
-                    key=jax.random.PRNGKey(3))
+    ex.deploy(scenario=tile_scenarios(plan.NB, plan.NO, p_stuck_off=0.08,
+                                      prog_sigma=0.05, name="tiled"),
+              key=jax.random.PRNGKey(3))
     yc = np.asarray(ex.matmul(x, w, "t"))
-    assert ex._sc_fns["t"][2] is fn
-    assert fn._cache_size() == 1           # permutations are traced args
+    assert ex._fns["t"][2] is fn
+    assert fn._cache_size() == 1           # permutations are state leaves
     assert not np.allclose(ya, yb) and not np.allclose(yb, yc)
     # determinism: same fleet key reproduces the same remap + outputs
-    ex.set_scenario(Scenario(name="a", p_stuck_off=0.04, prog_sigma=0.05),
-                    key=jax.random.PRNGKey(1))
+    ex.deploy(scenario=Scenario(name="a", p_stuck_off=0.04, prog_sigma=0.05),
+              key=jax.random.PRNGKey(1))
     np.testing.assert_array_equal(np.asarray(ex.matmul(x, w, "t")), ya)
 
 
@@ -242,16 +243,13 @@ def test_ideal_scenario_with_remap_enabled_bit_identical_to_plain():
     y0 = np.asarray(ex0.matmul(x, w, "t"))
     ex1 = _executor("emulator", emulator_params=ex0.emulator_params,
                     fault_remap=True)
-    ex1.set_scenario(Scenario(name="ideal"), key=jax.random.PRNGKey(9))
+    ex1.deploy(scenario=Scenario(name="ideal"), key=jax.random.PRNGKey(9))
     np.testing.assert_array_equal(np.asarray(ex1.matmul(x, w, "t")), y0)
-    # and the scenario forward itself, fed identity args, is bit-identical
+    # and the unified forward itself, fed the ideal state, is bit-identical
     plan = ex1._plan_for(w, "t")
     x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-    y_sc = ex1._jit_sc_for("t", w)(
-        x2, jnp.float32(1.0), jnp.float32(0.0), plan.g_feat,
-        jnp.float32(0.0), jax.random.PRNGKey(0),
-        jnp.arange(plan.N, dtype=jnp.int32), ex1.emulator_params,
-        ex1._zero_sfeat)
+    y_sc = ex1._unified_for("t", w)(
+        x2, DeploymentState.ideal(plan, eparams=ex1.emulator_params))
     np.testing.assert_array_equal(np.asarray(y_sc), y0)
 
 
@@ -261,18 +259,19 @@ def test_ideal_scenario_with_remap_enabled_bit_identical_to_plain():
 def test_hot_swap_keeps_scenario_cache_and_rebinds_plain_path():
     x, w = _data()
     ex = _executor("emulator")
-    ex.set_scenario(Scenario(name="s", prog_sigma=0.05),
-                    key=jax.random.PRNGKey(3))
+    ex.deploy(scenario=Scenario(name="s", prog_sigma=0.05),
+              key=jax.random.PRNGKey(3))
     y1 = np.asarray(ex.matmul(x, w, "t"))
-    fn = ex._sc_fns["t"][2]
+    fn = ex._fns["t"][2]
     new_p = init_params(jax.random.PRNGKey(8),
                         conv4xbar.conv4xbar_schema(CASE_A, n_periph=2))
-    ex.set_emulator_params(new_p)
+    ex.deploy(params=new_p)
     y2 = np.asarray(ex.matmul(x, w, "t"))
-    assert ex._sc_fns["t"][2] is fn and fn._cache_size() == 1
+    assert ex._fns["t"][2] is fn and fn._cache_size() == 1
     assert not np.allclose(y1, y2)         # the swap actually took effect
-    # plain path must not serve stale baked-in constants after the swap
-    ex.set_scenario(None)
+    # the ideal deployment must serve the swapped params too (params are
+    # state leaves, never baked-in constants)
+    ex.deploy(scenario=None)
     y3 = np.asarray(ex.matmul(x, w, "t"))
     fresh = _executor("emulator", emulator_params=new_p)
     np.testing.assert_array_equal(y3, np.asarray(fresh.matmul(x, w, "t")))
@@ -316,11 +315,15 @@ def test_scheduler_mitigation_dominates_unmitigated():
     # unmitigated decays monotonically; mitigation dominates at every age
     assert all(a >= b - 1e-9 for a, b in zip(accs_u, accs_u[1:]))
     assert all(m > u for u, m in zip(accs_u[1:], accs_m[1:]))
-    # one compiled scenario forward per walk, and recalibration at every
-    # checkpoint reuses ONE compiled calibration forward too
-    assert un.ex._sc_fns["t"][2]._cache_size() == 1
-    assert mi.ex._sc_fns["t"][2]._cache_size() == 1
-    assert mi.ex._cal_fns["t"][2]._cache_size() == 1
+    # ONE unified forward per tag; executables count only distinct input
+    # shapes (matmul batch / cold-calibration probes / warm half-budget
+    # probes) -- ages, remaps and recalibrations are all state leaves
+    assert un.ex._fns["t"][2]._cache_size() == 2   # matmul + cold calib
+    assert mi.ex._fns["t"][2]._cache_size() == 3   # ... + warm calib
+    # calibration transfer: checkpoints past deployment warm-start from
+    # the previous affine on HALF the probe budget (ROADMAP item)
+    assert [r["calib_n"] for r in mi.history] == [32, 16, 16, 16]
+    assert [r["calib_n"] for r in un.history] == [32, 0, 0, 0]
 
 
 def test_scheduler_field_retrain_hot_swaps_compile_once():
@@ -337,6 +340,45 @@ def test_scheduler_field_retrain_hot_swaps_compile_once():
     recs = sched.run(w, "t", x)
     assert [r["retrained"] for r in recs] == [True, True, True]
     assert ex.emulator_params is not p0        # swapped
-    assert ex._sc_fns["t"][2]._cache_size() == 1
+    # matmul + cold calib + warm calib shapes; retrains/remaps are leaves
+    assert ex._fns["t"][2]._cache_size() == 3
     for r in recs:
         assert np.all(np.isfinite(np.asarray(r["y"])))
+
+
+# --------------------------------------------------------------------------- #
+# Remap-aware calibration transfer (warm start)
+# --------------------------------------------------------------------------- #
+def test_calibration_transfer_warm_start_halves_probe_budget():
+    """After an age/remap swap the affine refit warm-starts from the
+    previous checkpoint's affine (drift is mostly a scale shift) and must
+    converge in <= half the probe budget of a cold refit."""
+    x, w = _data(K=64, N=8, B=4)
+    fleet = Scenario(name="aging", prog_sigma=0.05, p_stuck_off=0.04,
+                     drift_nu=0.05)
+    kf, kc = jax.random.PRNGKey(3), jax.random.PRNGKey(9)
+
+    def aged_executor():
+        ex = _executor()
+        ex.deploy(scenario=scenario_at_age(fleet, 0.0), key=kf, remap=True)
+        ex.calibrate(kc, w, "t", n=64)        # deployment-time cold fit
+        ex.deploy(scenario=scenario_at_age(fleet, 2.592e6))  # same fleet, old
+        return ex
+
+    cold = aged_executor()                    # pre-transfer behavior
+    a_cold, b_cold = cold.calibrate(jax.random.fold_in(kc, 1), w, "t", n=64)
+    assert cold._last_calib_n == 64
+    warm = aged_executor()
+    a_warm, b_warm = warm.calibrate(jax.random.fold_in(kc, 1), w, "t", n=64,
+                                    warm_start=True)
+    assert warm._last_calib_n == 32           # <= half the probe budget
+    yd = np.asarray(x @ w)
+    e_cold = np.linalg.norm(np.asarray(cold.matmul(x, w, "t")) - yd)
+    e_warm = np.linalg.norm(np.asarray(warm.matmul(x, w, "t")) - yd)
+    assert e_warm <= 1.05 * e_cold + 1e-9     # converged at half budget
+    assert abs(a_warm - a_cold) < 0.1 * max(1.0, abs(a_cold))
+    # without a previous affine the warm request falls back to a cold fit
+    fresh = _executor()
+    fresh.deploy(scenario=scenario_at_age(fleet, 2.592e6), key=kf, remap=True)
+    fresh.calibrate(kc, w, "t", n=64, warm_start=True)
+    assert fresh._last_calib_n == 64

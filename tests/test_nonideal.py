@@ -143,8 +143,8 @@ def test_drift_shrinks_differential_weight():
     ex = _executor()
     norms = []
     for t in (0.0, 1e2, 1e4, 1e6):
-        ex.set_scenario(Scenario(name="d", drift_nu=0.1, drift_t=t),
-                        key=jax.random.PRNGKey(0))
+        ex.deploy(scenario=Scenario(name="d", drift_nu=0.1, drift_t=t),
+                  key=jax.random.PRNGKey(0))
         y, _ = ex.raw_matmul(x, w, "t")
         norms.append(float(jnp.linalg.norm(y)))
     assert all(norms[i + 1] <= norms[i] + 1e-9 for i in range(len(norms) - 1))
@@ -155,7 +155,8 @@ def test_r_line_scale_degrades_circuit_output():
     x, w = _data(K=64, N=2, B=2)
     ex = _executor("circuit")
     y0, _ = ex.raw_matmul(x, w, "t")
-    ex.set_scenario(get_scenario("ir_degraded"), key=jax.random.PRNGKey(0))
+    ex.deploy(scenario=get_scenario("ir_degraded"),
+              key=jax.random.PRNGKey(0))
     y1, _ = ex.raw_matmul(x, w, "t")
     assert scenario_circuit_params(ex.cp, ex.scenario).r_bl == ex.cp.r_bl * 4.0
     assert not np.allclose(np.asarray(y0), np.asarray(y1))
@@ -169,7 +170,7 @@ def test_ideal_scenario_bit_identical_to_fast_path():
     ex0 = _executor("emulator")
     y0 = ex0.matmul(x, w, "t")
     ex1 = _executor("emulator", emulator_params=ex0.emulator_params)
-    ex1.set_scenario(get_scenario("ideal"), key=jax.random.PRNGKey(9))
+    ex1.deploy(scenario=get_scenario("ideal"), key=jax.random.PRNGKey(9))
     y1 = ex1.matmul(x, w, "t")
     assert np.array_equal(np.asarray(y0), np.asarray(y1))
 
@@ -178,24 +179,23 @@ def test_scenario_changes_do_not_invalidate_compile_caches():
     x, w = _data()
     ex = _executor("emulator")
     y_plain = ex.matmul(x, w, "t")
-    fn_plain = ex._jit_fns["t"][1]
-    ex.set_scenario(Scenario(name="a", prog_sigma=0.05),
-                    key=jax.random.PRNGKey(3))
+    fn = ex._fns["t"][2]
+    assert fn._cache_size() == 1
+    ex.deploy(scenario=Scenario(name="a", prog_sigma=0.05),
+              key=jax.random.PRNGKey(3))
     ya = ex.matmul(x, w, "t")
-    fn_sc = ex._sc_fns["t"][2]
-    ex.set_scenario(Scenario(name="b", prog_sigma=0.15, p_stuck_off=0.02,
-                             read_sigma=0.05, n_levels=8,
-                             drift_nu=0.02, drift_t=1e3),
-                    key=jax.random.PRNGKey(4))
+    ex.deploy(scenario=Scenario(name="b", prog_sigma=0.15, p_stuck_off=0.02,
+                                read_sigma=0.05, n_levels=8,
+                                drift_nu=0.02, drift_t=1e3),
+              key=jax.random.PRNGKey(4))
     yb = ex.matmul(x, w, "t")
-    # same compiled scenario forward, exactly one trace across scenarios
-    assert ex._sc_fns["t"][2] is fn_sc
-    assert fn_sc._cache_size() == 1
-    # the plain forward is untouched, and clearing the scenario reuses it
-    assert ex._jit_fns["t"][1] is fn_plain
-    ex.set_scenario(None)
+    # ONE unified forward, exactly one executable across ideal AND every
+    # corner: the whole deployment is a single traced DeploymentState
+    assert ex._fns["t"][2] is fn
+    assert fn._cache_size() == 1
+    ex.deploy(scenario=None)
     y_back = ex.matmul(x, w, "t")
-    assert ex._jit_fns["t"][1] is fn_plain
+    assert ex._fns["t"][2] is fn and fn._cache_size() == 1
     np.testing.assert_array_equal(np.asarray(y_back), np.asarray(y_plain))
     assert not np.allclose(np.asarray(ya), np.asarray(yb))
 
@@ -203,12 +203,15 @@ def test_scenario_changes_do_not_invalidate_compile_caches():
 def test_device_draw_deterministic_and_keyed():
     x, w = _data()
     sc = Scenario(name="det", prog_sigma=0.1)
-    ya = _executor().set_scenario(sc, key=jax.random.PRNGKey(5)).matmul(
-        x, w, "t")
-    yb = _executor().set_scenario(sc, key=jax.random.PRNGKey(5)).matmul(
-        x, w, "t")
-    yc = _executor().set_scenario(sc, key=jax.random.PRNGKey(6)).matmul(
-        x, w, "t")
+
+    def draw(key):
+        ex = _executor()
+        ex.deploy(scenario=sc, key=key)
+        return ex.matmul(x, w, "t")
+
+    ya = draw(jax.random.PRNGKey(5))
+    yb = draw(jax.random.PRNGKey(5))
+    yc = draw(jax.random.PRNGKey(6))
     np.testing.assert_array_equal(np.asarray(ya), np.asarray(yb))
     assert not np.allclose(np.asarray(ya), np.asarray(yc))
 
@@ -217,11 +220,11 @@ def test_read_noise_cycle_to_cycle_and_reproducible():
     x, w = _data()
     ex = _executor()
     sc = Scenario(name="rn", read_sigma=0.1)
-    ex.set_scenario(sc, key=jax.random.PRNGKey(5))
+    ex.deploy(scenario=sc, key=jax.random.PRNGKey(5))
     y1 = np.asarray(ex.matmul(x, w, "t"))
     y2 = np.asarray(ex.matmul(x, w, "t"))
     assert not np.array_equal(y1, y2)                  # fresh draw per read
-    ex.set_scenario(sc, key=jax.random.PRNGKey(5))     # restart the sequence
+    ex.deploy(scenario=sc, key=jax.random.PRNGKey(5))  # restart the sequence
     np.testing.assert_array_equal(np.asarray(ex.matmul(x, w, "t")), y1)
     np.testing.assert_array_equal(np.asarray(ex.matmul(x, w, "t")), y2)
 
@@ -229,8 +232,9 @@ def test_read_noise_cycle_to_cycle_and_reproducible():
 def test_noise_aware_calibration_runs_against_scenario():
     x, w = _data(K=64, N=4, B=8)
     ex = _executor()
-    ex.set_scenario(Scenario(name="cal", prog_sigma=0.1, read_sigma=0.05),
-                    key=jax.random.PRNGKey(8))
+    ex.deploy(scenario=Scenario(name="cal", prog_sigma=0.1,
+                               read_sigma=0.05),
+              key=jax.random.PRNGKey(8))
     a, b = ex.calibrate(jax.random.PRNGKey(1), w, "t")
     assert np.isfinite(a) and np.isfinite(b)
     y = ex.matmul(x, w, "t")

@@ -45,6 +45,9 @@ def _pallas_backend() -> str:
 
 def run(batch: int = 2048, seed: int = 0, tcfg=QUICK, iters: int = 3,
         with_circuit: bool = True):
+    # benchmark runs sweep block sizes (kernels.autotune); the resolved
+    # configs land in the run row (schema 2)
+    os.environ.setdefault("REPRO_AUTOTUNE", "1")
     geom, acfg, cp = CASE_A, AnalogConfig(), CircuitParams()
     res = get_emulator(geom.name, tcfg, seed)
     key = jax.random.PRNGKey(seed)
@@ -117,14 +120,29 @@ def run(batch: int = 2048, seed: int = 0, tcfg=QUICK, iters: int = 3,
     fn = jax.jit(lambda a: ex_cd.matmul(a, w, "bench"))
     dt, _ = timed(fn, xin, iters=iters)
     sys_rows["emulator_conditioned"] = dt * 1e6
+    # the unified serving dispatcher, jitted: ONE fused pallas_call per
+    # matmul on TPU (both rails + both GEMM stages + scenario epilogue);
+    # on non-TPU hosts the dispatcher's identical-math XLA schedule runs
+    # instead (interpret-mode kernel timings would benchmark the
+    # interpreter, not the kernel), so there the row tracks the jitted
+    # fast path and the gate is a no-regression check on the dispatcher.
+    ex_pl = AnalogExecutor(
+        acfg=dataclasses.replace(acfg, backend="emulator"), geom=geom,
+        cp=cp, emulator_params=res.params)
+    fn = jax.jit(lambda a: ex_pl.matmul(a, w, "bench"))
+    dt, _ = timed(fn, xin, iters=iters)
+    sys_rows["emulator_pallas_unified"] = dt * 1e6
     dt, _ = timed(jax.jit(lambda a: a @ w), xin, iters=iters)
     sys_rows["digital"] = dt * 1e6
     return rows, sys_rows
 
 
 def write_json(rows, sys_rows, label: str, path: str = BENCH_JSON):
-    """Append this run to the perf-trajectory file (schema v1)."""
-    doc = {"schema": 1, "unit_block": "us_per_block",
+    """Append this run to the perf-trajectory file (schema v2: each run
+    row also records the autotuner's resolved block sizes and cache-hit
+    status under ``kernels``; see docs/performance.md)."""
+    from repro.kernels import autotune
+    doc = {"schema": 2, "unit_block": "us_per_block",
            "unit_matmul": "us_per_matmul_512x32_b16", "runs": []}
     if os.path.exists(path):
         try:
@@ -138,9 +156,11 @@ def write_json(rows, sys_rows, label: str, path: str = BENCH_JSON):
         "label": label,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "jax_backend": jax.default_backend(),
+        "cpus": os.cpu_count(),
         "pallas": _pallas_backend(),
         "block_us": {k: round(v, 3) for k, v in rows.items()},
         "matmul_us": {k: round(v, 1) for k, v in sys_rows.items()},
+        "kernels": autotune.report(),
     })
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
@@ -159,12 +179,17 @@ def main(csv=True, quick: bool = False, label: str | None = None):
     # unified -- the jit-baked plain row and the traced scenario row
     ref = max(sys_rows["emulator"], sys_rows["emulator_nonideal"])
     unified_ok = sys_rows["emulator_unified"] <= 1.05 * ref
+    # fused-kernel gate: the jitted unified dispatcher must never regress
+    # past the eager unified forward it accelerates
+    pallas_ok = (sys_rows["emulator_pallas_unified"]
+                 <= 1.0 * sys_rows["emulator_unified"])
     if csv:
         for k, v in rows.items():
             print(f"speed_block_{k},{v:.2f},us_per_block")
         for k, v in sys_rows.items():
             print(f"speed_matmul_{k},{v:.1f},us_per_matmul_512x32_b16")
         print(f"speed_unified_within_5pct,{int(unified_ok)},bool")
+        print(f"speed_pallas_unified_no_regress,{int(pallas_ok)},bool")
         if "circuit" in rows:
             speedup = rows["circuit"] / rows["emulator_fused"]
             print(f"speed_emulator_speedup,{speedup:.1f},circuit/emulator_fused"
@@ -177,6 +202,11 @@ def main(csv=True, quick: bool = False, label: str | None = None):
             f"unified-cache overhead gate violated: emulator_unified "
             f"{sys_rows['emulator_unified']:.1f} us > 1.05 x "
             f"max(emulator, emulator_nonideal) = {1.05 * ref:.1f} us")
+    if not pallas_ok:
+        raise SystemExit(
+            f"fused-kernel gate violated: emulator_pallas_unified "
+            f"{sys_rows['emulator_pallas_unified']:.1f} us > 1.0 x "
+            f"emulator_unified = {sys_rows['emulator_unified']:.1f} us")
     return rows, sys_rows
 
 

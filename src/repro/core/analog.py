@@ -17,10 +17,13 @@ Serving fast path (docs/performance.md): the conductance plan for a weight
 tag (tiling, padding, block interleave) is cached and reused across calls;
 both voltage rails are evaluated in ONE blockified pass -- the emulator
 backend reconstructs them from a single magnitude-drive CELU against the
-precomputed zero-voltage block response (``apply_blocklast``), other
-backends stack the rails on the batch axis -- and the per-block conductance
-features are consumed directly (block-indexed Pallas operand on TPU)
-instead of a batch-broadcast feature tensor.
+precomputed zero-voltage block response, other backends stack the rails on
+the batch axis.  The emulator evaluation goes through ONE dispatcher
+(``kernels.emulator_block.emulator_block_unified``): a single fused Pallas
+kernel on TPU (both rails, both GEMM stages, scenario epilogue -- one
+compiled launch for every device corner) or the identical chunked XLA
+schedule (``apply_blocklast``) elsewhere, with block sizes resolved by
+``kernels.autotune``.
 
 Deployment model (docs/api.md): everything that distinguishes a deployed
 device from the ideal hardware -- perturbed conductances, read sigma and
@@ -183,7 +186,8 @@ class AnalogExecutor:
                  emulator_params: Optional[dict] = None,
                  calibration: Optional[Dict[str, tuple]] = None,
                  fused_emulator: bool = True, fast_path: bool = True,
-                 fast_chunk: int = 4, use_pallas: Optional[bool] = None,
+                 fast_chunk: Optional[int] = None,
+                 use_pallas: Optional[bool] = None,
                  scenario: Optional[Scenario] = None,
                  scenario_key: Optional[jax.Array] = None,
                  fault_remap: bool = False):
@@ -195,7 +199,7 @@ class AnalogExecutor:
             calibration if calibration is not None else {})
         self.fused_emulator = fused_emulator  # apply_fused vs apply (slow path)
         self.fast_path = fast_path            # cached-plan blockified path
-        self.fast_chunk = fast_chunk          # batch rows per cache chunk
+        self.fast_chunk = fast_chunk          # None = autotuned/heuristic
         self.use_pallas = use_pallas          # None = auto (TPU only)
 
         self._plans: Dict[str, Tuple[jax.Array, ConductancePlan]] = {}
@@ -574,30 +578,15 @@ class AnalogExecutor:
                     axis=-1)
         return self._backend_fn(eparams)(x, periph)
 
-    def _pallas_enabled(self) -> bool:
-        if self.use_pallas is not None:
-            return self.use_pallas
-        return jax.default_backend() == "tpu"
-
     def _eval_blocks(self, plan: ConductancePlan, vb01: jax.Array,
                      eparams: Optional[dict] = None,
                      sfeat: Optional[jax.Array] = None) -> jax.Array:
-        """vb01: (M, NB, D, H) wordline drive in [0, 1] -> (M*NB*NO, no)."""
-        if self.acfg.backend == "emulator" and self.fast_path \
-                and self._pallas_enabled():
-            params = self.emulator_params if eparams is None else eparams
-            # the grid kernel bakes the constant peripheral block (which is
-            # the ideal all-zero scenario encoding for a conditioned net);
-            # explicit non-ideal features fall through to the block-tensor
-            # path, which threads them through the peripheral vector
-            if sfeat is None or conv4xbar.n_periph_of(params,
-                                                      self.geom) <= 2:
-                from repro.kernels.emulator_block import emulator_block_grid
-                M = vb01.shape[0]
-                g = plan.g_norm.reshape((plan.n_blocks,)
-                                        + plan.g_norm.shape[2:])
-                y = emulator_block_grid(params, vb01, g, self.geom)
-                return y.reshape(M * plan.n_blocks, -1)
+        """vb01: (M, NB, D, H) wordline drive in [0, 1] -> (M*NB*NO, no).
+
+        Only the slow paths route here (``fast_path=False`` or non-emulator
+        backends); with the fast path on, the emulator backend goes through
+        ``emulator_block_unified`` in ``raw_matmul`` -- on every device,
+        Pallas or not."""
         x = plan.build_x(vb01 * self.acfg.v_read)
         return self.block_outputs(x.astype(jnp.float32), eparams, sfeat)
 
@@ -625,8 +614,9 @@ class AnalogExecutor:
 
         Both rails run as ONE blockified batch against the cached
         conductance plan for `tag`: the emulator fast path evaluates them
-        via the shared-magnitude delta factorization (apply_blocklast), all
-        other backends stack the rails on the batch axis.
+        via the shared-magnitude delta factorization (the unified
+        kernel/dispatcher ``emulator_block_unified``), all other backends
+        stack the rails on the batch axis.
 
         `plan` overrides the cached conductance plan (the unified forward
         passes the deployment state's device-perturbed, possibly
@@ -662,8 +652,8 @@ class AnalogExecutor:
         B = x2d.shape[0]
         x2d = x2d.astype(jnp.float32)
         x_scale = jnp.maximum(jnp.max(jnp.abs(x2d)), 1e-9)
-        if self.acfg.backend == "emulator" and self.fast_path \
-                and not self._pallas_enabled():
+        if self.acfg.backend == "emulator" and self.fast_path:
+            from repro.kernels.emulator_block import emulator_block_unified
             aux = self._blocklast_aux(eparams)
             pre = self._pre_for(plan, tag, aux)
             shift = None
@@ -673,9 +663,9 @@ class AnalogExecutor:
                 shift = sfeat @ aux["f0_scen"]
             u = plan.tile_v(self._drive01(jnp.abs(x2d) / x_scale), 1.0)
             pos = plan.tile_v((x2d > 0).astype(jnp.float32), 1.0)
-            y2 = conv4xbar.apply_blocklast(aux, pre, u, pos,
-                                           chunk=self.fast_chunk,
-                                           fc0_shift=shift)
+            y2 = emulator_block_unified(aux, pre, u, pos, shift=shift,
+                                        use_pallas=self.use_pallas,
+                                        chunk=self.fast_chunk)
             return plan.assemble(y2[0]) - plan.assemble(y2[1]), x_scale
         rails = jnp.concatenate([jnp.clip(x2d, 0.0, None),
                                  jnp.clip(-x2d, 0.0, None)], axis=0)

@@ -181,12 +181,14 @@ def blocklast_weights(params, geom: BlockGeometry,
         wk = w.transpose(2, 1, 0).reshape(k * st.c_in, st.c_out)
         hstages.append((wk, params[f"conv{i}_b"], k))
     aux["hstages"] = tuple(hstages)
-    # stage 1 split by row-window position kk: (C0, k1*O1) so the dual-rail
-    # mask (constant across channels) can be applied to the GEMM output
+    # stage 1 split by row-window position kk: (k1, C0, O1) so the dual-rail
+    # mask (constant across channels) can be applied to each position's
+    # GEMM output -- one (C0, O1) contraction per kk instead of a k1^2
+    # cross-position GEMM whose off-diagonal blocks were discarded
     w1, _, k1 = hstages[0]
     c0 = stages[0].c_out
     o1 = w1.shape[1]
-    aux["w1_kk"] = w1.reshape(k1, c0, o1).transpose(1, 0, 2).reshape(c0, k1 * o1)
+    aux["w1k"] = w1.reshape(k1, c0, o1)
     iw = len(stages) - 1
     st = stages[iw]
     kw = st.kernel[2]
@@ -234,40 +236,86 @@ def stage0_conductance(aux: dict, g_norm: jax.Array) -> jax.Array:
 def blocklast_precompute(aux: dict, g_norm: jax.Array) -> dict:
     """Batch-independent per-plan tensors for apply_blocklast.
 
-    g0:    stage-0 pre-activation conductance contribution
-    celu0: the zero-voltage stage-0 response celu(g0)
-    y0:    its stage-1 projection celu(g0) @ W1 + b1 (pre-activation)
+    g0k:    stage-0 pre-activation conductance contribution, split by
+            row-window position: (k1, NB, NO, D, W, G, C0) so the hot
+            loop's per-kk slices are contiguous views
+    celu0k: the zero-voltage stage-0 response celu(g0), same split
+    y0:     its stage-1 projection celu(g0) @ W1 + b1 (pre-activation),
+            (NB*NO*D*W*G, O1)
     """
     g0 = stage0_conductance(aux, g_norm)              # (NB, NO, D, W, H, C0)
     celu0 = jax.nn.celu(g0)
-    w1, b1, _ = aux["hstages"][0]
+    w1, b1, k1 = aux["hstages"][0]
     y0 = celu0.reshape(-1, w1.shape[0]) @ w1 + b1     # (NB*NO*D*W*G, O1)
-    return {"g0": g0, "celu0": celu0, "y0": y0}
+    nb, no, d, w, h, c0 = g0.shape
+    shp = (nb, no, d, w, h // k1, k1, c0)             # H -> (G, kk)
+    g0k = jnp.moveaxis(g0.reshape(shp), 5, 0)
+    celu0k = jnp.moveaxis(celu0.reshape(shp), 5, 0)
+    return {"g0k": g0k, "celu0k": celu0k, "y0": y0}
 
 
 def _tail_stages(aux: dict, h: jax.Array, n: int, shp,
-                 fc0_shift: jax.Array | None = None) -> jax.Array:
+                 fc0_shift: jax.Array | None = None,
+                 dot=None) -> jax.Array:
     """Conv stages 2.. + FC head on channels-last rows.  h: 2-D (rows, C)
     laid out as shp=(n, D, W, G) x channels; -> (n, O).  ``fc0_shift`` is
     an optional per-call bias shift on fc0's pre-activation (the
-    conditioned emulator's scenario-feature contribution)."""
+    conditioned emulator's scenario-feature contribution).  ``dot``
+    overrides the contraction (the unified Pallas kernel passes its
+    MXU/bf16 dot so this exact code runs inside the kernel body)."""
+    if dot is None:
+        dot = jnp.matmul
     for wk, b, k in aux["hstages"][1:]:
         # one flat GEMM over (k*C) -- batched matmuls over small trailing
         # matrices are pathologically slow on CPU backends
-        h = jax.nn.celu(h.reshape(-1, wk.shape[0]) @ wk + b)
+        h = jax.nn.celu(dot(h.reshape(-1, wk.shape[0]), wk) + b)
         shp = shp[:3] + (shp[3] // k,)
     wk, b, kw = aux["wstage"]
     h = h.reshape(shp + (-1,)).transpose(0, 1, 3, 2, 4)   # (n, D, H, W, C)
-    h = jax.nn.celu(h.reshape(-1, wk.shape[0]) @ wk + b)
+    h = jax.nn.celu(dot(h.reshape(-1, wk.shape[0]), wk) + b)
     h = h.reshape(n, -1)                              # (d, h, w, c) flatten
     fcs = aux["fcs"]
     for i, (fw, fb) in enumerate(fcs):
-        h = h @ fw + fb
+        h = dot(h, fw) + fb
         if i == 0 and fc0_shift is not None:
             h = h + fc0_shift
         if i < len(fcs) - 1:
             h = jax.nn.celu(h)
     return h
+
+
+def dual_rail_stage1(g0k, celu0k, y0, w0v, w1k, u, pos, dot=None):
+    """Stage 0+1 of the single-pass dual-rail factorization.
+
+    u, pos: (..., G, k1) magnitude drive / positive-rail mask, with the
+    leading axes shaped to broadcast against ``g0k[kk]``/``celu0k[kk]``
+    (callers insert singleton NO/W axes).  y0: (R, O1) zero-voltage
+    stage-1 projection, tiled over the batch rows.  Returns the two
+    rails' stage-1 pre-activations ``(y0 + t_pos, y0 + t_full - t_pos)``
+    stacked: (2, batch, R, O1).
+
+    Shared verbatim by ``apply_blocklast`` (CPU/XLA path) and the unified
+    Pallas kernel body, so the two paths are bit-identical by
+    construction: per window position kk, delta_kk = celu(v0 + g0) -
+    celu(g0) is contracted over channels only (one (C0, O1) GEMM) and the
+    rail mask lands on the GEMM *output* -- half the FLOPs of the old
+    cross-position (C0, k1*O1) contraction, and no diagonal gather."""
+    if dot is None:
+        dot = jnp.matmul
+    k1, C0, O1 = w1k.shape
+    R = y0.shape[0]
+    t_full = t_pos = None
+    for kk in range(k1):
+        v0 = u[..., kk, None] * w0v                   # broadcasts vs g0k[kk]
+        delta = jax.nn.celu(v0 + g0k[kk]) - celu0k[kk]
+        t = dot(delta.reshape(-1, C0), w1k[kk])
+        t = t.reshape(-1, R, O1)                      # (batch, R, O1)
+        m = jnp.broadcast_to(pos[..., kk, None], delta.shape[:-1] + (1,))
+        m = m.reshape(-1, R, 1)
+        t_full = t if t_full is None else t_full + t
+        tp = t * m
+        t_pos = tp if t_pos is None else t_pos + tp
+    return jnp.stack([y0[None] + t_pos, y0[None] + t_full - t_pos])
 
 
 def apply_blocklast(aux: dict, pre: dict, u01: jax.Array, pos01: jax.Array,
@@ -287,13 +335,9 @@ def apply_blocklast(aux: dict, pre: dict, u01: jax.Array, pos01: jax.Array,
     pre-activation is reconstructed as y0 + mask-selected delta terms, which
     is exact because delta rows with v = 0 vanish identically."""
     M, NB, D, H = u01.shape
-    g0, celu0, y0 = pre["g0"], pre["celu0"], pre["y0"]
-    NO, W = g0.shape[1], g0.shape[3]
-    w1, b1, k1 = aux["hstages"][0]
-    C0 = aux["w0v"].shape[0]
-    O1 = w1.shape[1]
-    G = H // k1
-    R = NB * NO * D * W * G
+    g0k, celu0k, y0 = pre["g0k"], pre["celu0k"], pre["y0"]
+    k1 = g0k.shape[0]
+    NO, W, G = g0k.shape[2], g0k.shape[4], g0k.shape[5]
 
     mc = min(chunk, M)
     padM = (-M) % mc
@@ -301,30 +345,23 @@ def apply_blocklast(aux: dict, pre: dict, u01: jax.Array, pos01: jax.Array,
         u01 = jnp.pad(u01, ((0, padM),) + ((0, 0),) * 3)
         pos01 = jnp.pad(pos01, ((0, padM),) + ((0, 0),) * 3)
     Mp = M + padM
-    v0 = u01[..., None] * aux["w0v"]                  # (Mp, NB, D, H, C0)
+    # wordline index split into (row group G, window position k1), with
+    # singleton NO/W axes so the per-kk drive broadcasts against g0k
+    ug = u01.reshape(Mp, NB, 1, D, 1, G, k1)
+    pg = pos01.reshape(Mp, NB, 1, D, 1, G, k1)
 
     def one(args):
-        v0c, mk = args                                # (mc,NB,D,H,C0) (mc,NB,D,H)
-        delta = jax.nn.celu(v0c[:, :, None, :, None, :, :] + g0[None]) \
-            - celu0[None]                             # (mc,NB,NO,D,W,H,C0)
-        t2 = delta.reshape(-1, C0) @ aux["w1_kk"]     # rows (.., G, kk) x (kk', O1)
-        t2 = t2.reshape(mc, R, k1, k1, O1)
-        tdiag = jnp.stack([t2[..., kk, kk, :] for kk in range(k1)], axis=-2)
-        mkb = jnp.broadcast_to(
-            mk.reshape(mc, 1, NB, 1, D, 1, G, k1),
-            (mc, 1, NB, NO, D, W, G, k1)).reshape(mc, R, k1)
-        t_full = tdiag.sum(-2)                        # both rails' delta sum
-        t_pos = (tdiag * mkb[..., None]).sum(-2)      # positive-rail part
-        h = jax.nn.celu(jnp.stack([y0[None] + t_pos,
-                                   y0[None] + t_full - t_pos]))
-        n2 = 2 * mc * NB * NO
+        uc, mk = args                                 # (mc,NB,1,D,1,G,k1) x2
+        h = jax.nn.celu(dual_rail_stage1(g0k, celu0k, y0, aux["w0v"],
+                                         aux["w1k"], uc, mk))
+        n2 = 2 * mc * NB * NO                         # h: (2, mc, R, O1)
         h = _tail_stages(aux, h.reshape(n2, -1), n2, (n2, D, W, G),
                          fc0_shift=fc0_shift)
         return h.reshape(2, mc * NB * NO, -1)
 
-    vb = v0.reshape(Mp // mc, mc, NB, D, H, C0)
-    mb = pos01.reshape(Mp // mc, mc, NB, D, H)
-    out = jax.lax.map(one, (vb, mb))                  # (nc, 2, mc*NBLK, O)
+    ub = ug.reshape((Mp // mc, mc) + ug.shape[1:])
+    mb = pg.reshape((Mp // mc, mc) + pg.shape[1:])
+    out = jax.lax.map(one, (ub, mb))                  # (nc, 2, mc*NBLK, O)
     out = out.transpose(1, 0, 2, 3).reshape(2, Mp * NB * NO, -1)
     return out[:, :M * NB * NO]
 

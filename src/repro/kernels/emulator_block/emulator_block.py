@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.conv4xbar import ConvStage, conv_out_sizes
+from repro.core.conv4xbar import (ConvStage, _tail_stages, conv_out_sizes,
+                                  dual_rail_stage1)
 
 
 def _stage_apply(h, w, b, st: ConvStage):
@@ -181,10 +182,17 @@ def emulator_block_grid_pallas(params: dict, v01: jax.Array,
 def emulator_block_pallas(params: dict, x: jax.Array, periph: jax.Array,
                           stages: List[ConvStage], *, block_n: int = 256,
                           interpret: bool = False) -> jax.Array:
-    """x: (N, C, D, H, W) normalized features; periph: (N, P) -> (N, O)."""
+    """x: (N, C, D, H, W) normalized features; periph: (N, P) -> (N, O).
+
+    Non-divisible batches are padded to the block size and sliced back
+    (zero rows are valid block inputs), like the grid variant pads M."""
     N = x.shape[0]
     bn = min(block_n, N)
-    assert N % bn == 0
+    padN = (-N) % bn
+    if padN:
+        x = jnp.pad(x, ((0, padN),) + ((0, 0),) * (x.ndim - 1))
+        periph = jnp.pad(periph, ((0, padN), (0, 0)))
+    Np = N + padN
     n_fc = len([k for k in params if k.startswith("fc") and k.endswith("_w")])
     n_out = params[f"fc{n_fc-1}_w"].shape[1]
 
@@ -198,12 +206,161 @@ def emulator_block_pallas(params: dict, x: jax.Array, periph: jax.Array,
     operands += w_ops
     in_specs += w_specs
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_kernel, stages=stages, n_fc=n_fc,
                           out_dtype=x.dtype),
-        grid=(N // bn,),
+        grid=(Np // bn,),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bn, n_out), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((N, n_out), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((Np, n_out), x.dtype),
         interpret=interpret,
     )(*operands)
+    return out[:N] if padN else out
+
+
+# --------------------------------------------------------------------------- #
+# THE unified serving kernel: one pallas_call for every device corner
+# --------------------------------------------------------------------------- #
+def _unified_kernel(*refs, tail_ks: Tuple[int, ...], kw: int, n_fc: int,
+                    out_dtype, compute_dtype):
+    """Grid step (batch tile i, crossbar block j): BOTH rails of the
+    dual-rail delta factorization and BOTH GEMM stages (stage-1 window
+    contraction + tail conv/FC stack), evaluated in VMEM.
+
+    The kernel body calls the same ``dual_rail_stage1``/``_tail_stages``
+    code the CPU fast path (``conv4xbar.apply_blocklast``) runs, so the
+    two paths are bit-identical by construction.  The scenario epilogue
+    is the precomputed fc0 shift ``sfeat @ f0_scen`` -- a grid-constant
+    operand, exactly zero at the ideal corner's all-zero encoding -- so
+    ONE compiled kernel serves ideal, conditioned and non-ideal corners
+    (perturbed conductances arrive through the block-indexed g0/celu0/y0
+    precompute operands).  ``compute_dtype=bfloat16`` runs every GEMM
+    with bf16 operands and f32 accumulation (MXU-native); f32 keeps the
+    parity-exact contraction."""
+    (u_ref, pos_ref, g0_ref, c0_ref, y0_ref, sh_ref, w0v_ref,
+     w1k_ref) = refs[:8]
+    idx = 8
+    tail = []
+    for k in tail_ks:
+        tail.append((refs[idx][...].astype(jnp.float32),
+                     refs[idx + 1][...].astype(jnp.float32), k))
+        idx += 2
+    wstage = (refs[idx][...].astype(jnp.float32),
+              refs[idx + 1][...].astype(jnp.float32), kw)
+    idx += 2
+    fcs = []
+    for _ in range(n_fc):
+        fcs.append((refs[idx][...].astype(jnp.float32),
+                    refs[idx + 1][...].astype(jnp.float32)))
+        idx += 2
+    o_ref = refs[idx]
+
+    u = u_ref[...].astype(jnp.float32)                # (bm, 1, D, G, k1)
+    pos = pos_ref[...].astype(jnp.float32)
+    bm, _, D, G, k1 = u.shape
+    g0k = g0_ref[...].astype(jnp.float32)[0]          # (k1, D, W, G, C0)
+    celu0k = c0_ref[...].astype(jnp.float32)[0]
+    W = g0k.shape[2]
+    y0 = y0_ref[...].astype(jnp.float32)[0]           # (D*W*G, O1)
+    shift = sh_ref[...].astype(jnp.float32)
+    w0v = w0v_ref[...].astype(jnp.float32)
+    w1k = w1k_ref[...].astype(jnp.float32)
+
+    if compute_dtype == jnp.float32:
+        dot = None                # jnp.matmul -- identical to the CPU path
+    else:
+        def dot(a, b):
+            return jnp.dot(a.astype(compute_dtype), b.astype(compute_dtype),
+                           preferred_element_type=jnp.float32)
+
+    # singleton W axis so the per-kk drive broadcasts against g0k[kk]
+    ub = u.reshape(bm, D, 1, G, k1)
+    pb = pos.reshape(bm, D, 1, G, k1)
+    h = jax.nn.celu(dual_rail_stage1(g0k, celu0k, y0, w0v, w1k, ub, pb,
+                                     dot=dot))        # (2, bm, D*W*G, O1)
+    n2 = 2 * bm
+    aux_k = {"hstages": ((None, None, k1),) + tuple(tail),
+             "wstage": wstage, "fcs": tuple(fcs)}
+    h = _tail_stages(aux_k, h.reshape(n2, -1), n2, (n2, D, W, G),
+                     fc0_shift=shift, dot=dot)
+    o_ref[...] = h.reshape(2, bm, 1, -1).astype(out_dtype)
+
+
+def _const_spec(arr):
+    return pl.BlockSpec(arr.shape, lambda *_, nd=arr.ndim: (0,) * nd)
+
+
+def emulator_block_unified_pallas(aux: dict, pre: dict, u01: jax.Array,
+                                  pos01: jax.Array, *,
+                                  shift: jax.Array | None = None,
+                                  block_m: int = 128,
+                                  interpret: bool = False,
+                                  compute_dtype=jnp.float32) -> jax.Array:
+    """One kernel launch per matmul, every corner on the TPU path.
+
+    aux/pre: ``conv4xbar.blocklast_weights`` / ``blocklast_precompute``
+    tensors (the precompute carries the deployed -- possibly perturbed --
+    conductance state); u01/pos01: (M, NB, D, H) magnitude drive and
+    positive-rail mask; shift: optional (fc0_out,) scenario epilogue
+    ``sfeat @ aux["f0_scen"]`` (None = ideal, folds to an exact zero add).
+    Returns (2, M*NB*NO, O) rail block outputs, row-compatible with
+    ``apply_blocklast``."""
+    M, NB, D, H = u01.shape
+    g0k = pre["g0k"]                                  # (k1,NB,NO,D,W,G,C0)
+    k1, _, NO, _, W, G, C0 = g0k.shape
+    NBLK = NB * NO
+    w1k = aux["w1k"]
+    O1 = w1k.shape[2]
+    fcs = aux["fcs"]
+    n_fc = len(fcs)
+    n_out = fcs[-1][0].shape[1]
+    if shift is None:
+        shift = jnp.zeros((fcs[0][0].shape[1],), jnp.float32)
+
+    bm = min(block_m, M)
+    padM = (-M) % bm
+    ug = u01.reshape(M, NB, D, G, k1)
+    pg = pos01.reshape(M, NB, D, G, k1)
+    if padM:
+        ug = jnp.pad(ug, ((0, padM),) + ((0, 0),) * 4)
+        pg = jnp.pad(pg, ((0, padM),) + ((0, 0),) * 4)
+    Mp = M + padM
+    g0b = g0k.transpose(1, 2, 0, 3, 4, 5, 6).reshape(NBLK, k1, D, W, G, C0)
+    c0b = pre["celu0k"].transpose(1, 2, 0, 3, 4, 5, 6).reshape(
+        NBLK, k1, D, W, G, C0)
+    y0b = pre["y0"].reshape(NBLK, D * W * G, O1)
+
+    tail = aux["hstages"][1:]
+    wst_w, wst_b, kw = aux["wstage"]
+    operands = [ug, pg, g0b, c0b, y0b, shift, aux["w0v"], w1k]
+    in_specs = [
+        pl.BlockSpec((bm, 1, D, G, k1), lambda i, j: (i, j // NO, 0, 0, 0)),
+        pl.BlockSpec((bm, 1, D, G, k1), lambda i, j: (i, j // NO, 0, 0, 0)),
+        pl.BlockSpec((1, k1, D, W, G, C0),
+                     lambda i, j: (j, 0, 0, 0, 0, 0)),
+        pl.BlockSpec((1, k1, D, W, G, C0),
+                     lambda i, j: (j, 0, 0, 0, 0, 0)),
+        pl.BlockSpec((1, D * W * G, O1), lambda i, j: (j, 0, 0)),
+        _const_spec(shift), _const_spec(aux["w0v"]), _const_spec(w1k),
+    ]
+    for wk, b, _ in tail:
+        operands += [wk, b]
+        in_specs += [_const_spec(wk), _const_spec(b)]
+    operands += [wst_w, wst_b]
+    in_specs += [_const_spec(wst_w), _const_spec(wst_b)]
+    for fw, fb in fcs:
+        operands += [fw, fb]
+        in_specs += [_const_spec(fw), _const_spec(fb)]
+
+    out = pl.pallas_call(
+        functools.partial(_unified_kernel,
+                          tail_ks=tuple(k for _, _, k in tail), kw=kw,
+                          n_fc=n_fc, out_dtype=jnp.float32,
+                          compute_dtype=compute_dtype),
+        grid=(Mp // bm, NBLK),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((2, bm, 1, n_out), lambda i, j: (0, i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, Mp, NBLK, n_out), jnp.float32),
+        interpret=interpret,
+    )(*operands)
+    return out[:, :M].reshape(2, M * NBLK, n_out)

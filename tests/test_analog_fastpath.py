@@ -71,8 +71,8 @@ def test_fastpath_matches_reference_analytic(geom, K, N, B):
 
 @pytest.mark.parametrize("geom", [CASE_A, CASE_B], ids=lambda g: g.name)
 def test_fastpath_pallas_grid_matches_reference(geom):
-    """The 2-D grid Pallas kernel (interpret mode on CPU) agrees with the
-    reference path."""
+    """``use_pallas=True`` routes the fast path through the unified fused
+    kernel (interpret mode on CPU); it agrees with the reference path."""
     x, w = _data(geom, 70, 4 if geom is CASE_B else 3, 4)
     params = _params(geom)
     kw = dict(acfg=AnalogConfig(backend="emulator"), geom=geom,

@@ -130,3 +130,201 @@ def test_emulator_block_grid(geom, M, NB, NO):
     ref = conv4xbar.apply(params, x, periph).reshape(M, NB * NO, -1)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-5, atol=2e-6)
+
+
+# --------------------------------------------------------------------------- #
+# emulator_block_unified (ONE kernel, every device corner)
+# --------------------------------------------------------------------------- #
+def _unified_fixture(geom, n_periph=2, NB=2, NO=3, M=6, seed=5):
+    """aux/pre + drive tensors for the unified serving kernel."""
+    from repro.core import conv4xbar
+    from repro.models.common import init_params
+    key = jax.random.PRNGKey(seed)
+    schema = conv4xbar.conv4xbar_schema(geom, n_periph=n_periph)
+    params = init_params(key, schema)
+    aux = conv4xbar.blocklast_weights(params, geom)
+    D, H, W = geom.tiles, geom.rows, geom.cols
+    g = jax.random.uniform(jax.random.fold_in(key, 1), (NB, NO, D, H, W))
+    pre = conv4xbar.blocklast_precompute(aux, g)
+    u = jax.random.uniform(jax.random.fold_in(key, 2), (M, NB, D, H))
+    pos = (jax.random.uniform(jax.random.fold_in(key, 3),
+                              (M, NB, D, H)) > 0.5).astype(jnp.float32)
+    return aux, pre, u, pos
+
+
+@pytest.mark.parametrize("geom", [CASE_A, CASE_B], ids=lambda g: g.name)
+@pytest.mark.parametrize("block_m", [4, 8])  # 6 % 4 != 0: pad-and-slice
+def test_emulator_block_unified_ideal_bitwise(geom, block_m):
+    """Ideal corner: the fused kernel (interpret mode) is BIT-IDENTICAL to
+    the chunked XLA fast path -- same dual_rail_stage1/_tail_stages code,
+    different schedule."""
+    from repro.core import conv4xbar
+    from repro.kernels.emulator_block.emulator_block import (
+        emulator_block_unified_pallas)
+    aux, pre, u, pos = _unified_fixture(geom)
+    ref = conv4xbar.apply_blocklast(aux, pre, u, pos, chunk=3)
+    out = emulator_block_unified_pallas(aux, pre, u, pos, block_m=block_m,
+                                        interpret=True)
+    assert out.shape == ref.shape
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_emulator_block_unified_conditioned():
+    """Conditioned corner: the scenario epilogue (fc0 shift) matches the
+    XLA path, and the all-zero feature encoding reproduces the ideal
+    corner of the same net exactly -- one compiled kernel per shape serves
+    every corner."""
+    from repro.core import conv4xbar
+    from repro.kernels.emulator_block.emulator_block import (
+        emulator_block_unified_pallas)
+    from repro.nonideal import N_SCENARIO_FEATURES
+    aux, pre, u, pos = _unified_fixture(
+        CASE_A, n_periph=2 + N_SCENARIO_FEATURES)
+    sfeat = jnp.linspace(-0.5, 0.5, N_SCENARIO_FEATURES)
+    shift = sfeat @ aux["f0_scen"]
+    ref = conv4xbar.apply_blocklast(aux, pre, u, pos, chunk=2,
+                                    fc0_shift=shift)
+    out = emulator_block_unified_pallas(aux, pre, u, pos, shift=shift,
+                                        block_m=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-7)
+    # zero features == no epilogue == the plain ideal evaluation, bitwise
+    z = jnp.zeros((N_SCENARIO_FEATURES,)) @ aux["f0_scen"]
+    out_z = emulator_block_unified_pallas(aux, pre, u, pos, shift=z,
+                                          block_m=4, interpret=True)
+    out_n = emulator_block_unified_pallas(aux, pre, u, pos, shift=None,
+                                          block_m=4, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_z), np.asarray(out_n))
+
+
+def test_emulator_block_unified_nonideal_vs_block_tensor():
+    """Non-ideal corner, end to end: the unified-kernel fast path under a
+    stressed scenario (perturbed conductances + conditioning features)
+    agrees with the block-tensor reference path within fp32 tolerance."""
+    from repro.configs.base import AnalogConfig
+    from repro.core.analog import AnalogExecutor
+    from repro.core import conv4xbar
+    from repro.models.common import init_params
+    from repro.nonideal import N_SCENARIO_FEATURES, get_scenario
+    key = jax.random.PRNGKey(9)
+    params = init_params(key, conv4xbar.conv4xbar_schema(
+        CASE_A, n_periph=2 + N_SCENARIO_FEATURES))
+    w = jax.random.normal(key, (70, 3)) * 0.3
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 70)) * 0.5
+    kw = dict(acfg=AnalogConfig(backend="emulator"), geom=CASE_A,
+              emulator_params=params)
+    outs = []
+    for exkw in (dict(fast_path=False), dict(use_pallas=True)):
+        ex = AnalogExecutor(**kw, **exkw)
+        ex.deploy(scenario=get_scenario("stressed"),
+                  key=jax.random.PRNGKey(2))
+        outs.append(np.asarray(ex.matmul(x, w, "t")))
+    np.testing.assert_allclose(outs[1], outs[0], rtol=2e-4, atol=1e-5)
+
+
+def test_emulator_block_unified_bf16():
+    """bf16 accumulation mode: GEMMs run with bf16 operands / f32
+    accumulators; parity is loose by construction."""
+    from repro.core import conv4xbar
+    from repro.kernels.emulator_block.emulator_block import (
+        emulator_block_unified_pallas)
+    aux, pre, u, pos = _unified_fixture(CASE_A)
+    ref = conv4xbar.apply_blocklast(aux, pre, u, pos, chunk=2)
+    out = emulator_block_unified_pallas(aux, pre, u, pos, block_m=8,
+                                        interpret=True,
+                                        compute_dtype=jnp.bfloat16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_emulator_block_unified_dispatcher_fallback_bitwise():
+    """The dispatcher's two routes (pallas kernel / chunked XLA) are
+    bit-identical in f32, so ``use_pallas`` is a pure scheduling choice."""
+    from repro.kernels.emulator_block import emulator_block_unified
+    aux, pre, u, pos = _unified_fixture(CASE_A)
+    y_xla = emulator_block_unified(aux, pre, u, pos, use_pallas=False,
+                                   chunk=2)
+    y_pl = emulator_block_unified(aux, pre, u, pos, use_pallas=True,
+                                  interpret=True, block_m=4)
+    np.testing.assert_array_equal(np.asarray(y_pl), np.asarray(y_xla))
+
+
+def test_unified_kernel_compile_once_across_corners():
+    """Corner swaps through the deployed forward recompile NOTHING with the
+    fused kernel on the fast path: scenario features ride the precomputed
+    shift operand, perturbed conductances ride pre[...] -- all traced
+    leaves of one executable."""
+    from repro.configs.base import AnalogConfig
+    from repro.core.analog import AnalogExecutor
+    from repro.core import conv4xbar
+    from repro.models.common import init_params
+    from repro.nonideal import N_SCENARIO_FEATURES, get_scenario
+    key = jax.random.PRNGKey(11)
+    params = init_params(key, conv4xbar.conv4xbar_schema(
+        CASE_A, n_periph=2 + N_SCENARIO_FEATURES))
+    w = jax.random.normal(key, (70, 3)) * 0.3
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 70)) * 0.5
+    ex = AnalogExecutor(acfg=AnalogConfig(backend="emulator"), geom=CASE_A,
+                        emulator_params=params, use_pallas=True)
+    outs = [np.asarray(ex.matmul(x, w, "t"))]                  # ideal
+    fn = ex._fns["t"][2]
+    ex.deploy(scenario=get_scenario("stressed"), key=jax.random.PRNGKey(3))
+    outs.append(np.asarray(ex.matmul(x, w, "t")))              # corner
+    ex.deploy(age=2.592e6)
+    outs.append(np.asarray(ex.matmul(x, w, "t")))              # age
+    assert ex._fns["t"][2] is fn
+    assert fn._cache_size() == 1                               # ONE compile
+    for a, b in zip(outs, outs[1:]):
+        assert not np.array_equal(a, b)
+
+
+def test_emulator_block_pad_batch():
+    """Flat-batch kernel with N % block_n != 0: pad-and-slice instead of
+    the old hard assert."""
+    from repro.core import conv4xbar
+    from repro.kernels.emulator_block import emulator_block
+    from repro.models.common import init_params
+    geom = CASE_A
+    key = jax.random.PRNGKey(2)
+    params = init_params(key, conv4xbar.conv4xbar_schema(geom, n_periph=2))
+    n = 10                                    # 10 % 8 != 0
+    x = jax.random.uniform(key, (n,) + (geom.features, geom.tiles,
+                                        geom.rows, geom.cols))
+    periph = jax.random.uniform(jax.random.fold_in(key, 1), (n, 2))
+    out = emulator_block(params, x, periph, geom, block_n=8)
+    ref = conv4xbar.apply(params, x, periph)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_autotune_cache_and_report(tmp_path, monkeypatch):
+    """best_config: sweep once, then memory hit, then (fresh process
+    simulated by clearing memory) disk hit; report records the source."""
+    from repro.kernels import autotune
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    autotune.clear()
+    calls = []
+
+    def measure(cfg):
+        calls.append(cfg["b"])
+        if cfg["b"] == 8:
+            raise ValueError("does not compile")  # losing candidate
+
+    cands = [{"b": b} for b in (4, 8)]
+    cfg = autotune.best_config("k", (1, 2), cands, measure, {"b": 16})
+    assert cfg["b"] == 4 and 8 in calls
+    assert autotune.report()["k"]["source"] == "swept"
+    calls.clear()
+    assert autotune.best_config("k", (1, 2), cands, measure, {"b": 16}) == cfg
+    assert not calls                              # memory hit, no re-sweep
+    assert autotune.report()["k"]["source"] == "memory"
+    autotune.clear()                              # "new process"
+    assert autotune.best_config("k", (1, 2), cands, measure, {"b": 16}) == cfg
+    assert not calls and autotune.report()["k"]["source"] == "disk"
+    # disabled -> caller's default, untimed
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    autotune.clear(disk=True)
+    assert autotune.best_config("k", (1, 2), cands, measure,
+                                {"b": 16}) == {"b": 16}
+    assert not calls and autotune.report()["k"]["source"] == "default"

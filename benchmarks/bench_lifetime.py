@@ -68,6 +68,7 @@ from repro.nonideal import (LifetimeScheduler,
                             make_conditioned_field_calibrator,
                             make_field_retrainer, tile_scenarios)
 from repro.nonideal.lifetime import DEFAULT_TIMELINE
+from repro.obs import RecompileSentinel
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
@@ -174,19 +175,23 @@ def run(quick: bool = False, seed: int = 0):
             ex = _make_executor(backend, eparams)
             sched = LifetimeScheduler(ex, fleet, timeline=DEFAULT_TIMELINE,
                                       key=k_fleet, calib_n=calib_n, **kwargs)
-            recs = sched.run(w, "life", x)
-            runs[mode] = [{"label": r["label"], "t": r["t"],
-                           "retrained": r["retrained"],
-                           "accuracy": _accuracy(r["y"], ref)}
-                          for r in recs]
             # ONE unified forward; executables count only distinct input
             # SHAPES: the matmul batch, plus (when recalibrating) the
             # cold-calibration probe batch and its warm half-budget batch.
             # Ages, remaps, read draws, retrained params and affines are
             # all DeploymentState leaves and never add executables.
             expected = 2 if mode == "unmitigated" else 3
-            runs[mode + "_compiled_once"] = \
-                ex._fns["life"][2]._cache_size() == expected
+            with RecompileSentinel(executor=ex, max_traces=expected,
+                                   strict=False,
+                                   label=f"lifetime:{backend}:{mode}") as sent:
+                recs = sched.run(w, "life", x)
+            runs[mode] = [{"label": r["label"], "t": r["t"],
+                           "retrained": r["retrained"],
+                           "accuracy": _accuracy(r["y"], ref)}
+                          for r in recs]
+            runs[mode + "_compiled_once"] = (
+                sent.ok
+                and sent.new_counts.get("executor.unified[life]") == expected)
 
         dominates = [m["accuracy"] > u["accuracy"]
                      for u, m in zip(runs["unmitigated"][1:],

@@ -39,6 +39,7 @@ from repro.configs.base import AnalogConfig
 from repro.configs.rram_ps32 import CASE_A
 from repro.core.analog import AnalogExecutor
 from repro.nonideal import Scenario, ScenarioSweep
+from repro.obs import RecompileSentinel
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
@@ -93,22 +94,24 @@ def run(quick: bool = False, seed: int = 0):
         y_ideal = np.asarray(ex.matmul(x, w, "rob"))
         sweep = ScenarioSweep(ex, w, "rob", n_draws=n_draws)
         # NOTE one name for every swept scenario: `name` is pytree aux data
-        # (static), so it must not vary within a compile-once sweep
-        sig_pts = _sweep_axis(
-            sweep, x, [Scenario(name="sweep", prog_sigma=s) for s in sigmas],
-            key_dev, y_ideal, y_digital)
-        drift_pts = _sweep_axis(
-            sweep, x,
-            [Scenario(name="sweep", drift_nu=DRIFT_NU, drift_t=t)
-             for t in drift_ts],
-            key_dev, y_ideal, y_digital)
-        assert sweep.trace_count == 1, \
-            f"scenario sweep retraced ({sweep.trace_count}x) -- scenario " \
-            f"params must stay traced arguments"
+        # (static), so it must not vary within a compile-once sweep.
+        # strict sentinel: a retrace means scenario params stopped being
+        # traced arguments -- fail loudly right here
+        with RecompileSentinel(sweep=sweep,
+                               label=f"robustness:{backend}") as sent:
+            sig_pts = _sweep_axis(
+                sweep, x,
+                [Scenario(name="sweep", prog_sigma=s) for s in sigmas],
+                key_dev, y_ideal, y_digital)
+            drift_pts = _sweep_axis(
+                sweep, x,
+                [Scenario(name="sweep", drift_nu=DRIFT_NU, drift_t=t)
+                 for t in drift_ts],
+                key_dev, y_ideal, y_digital)
         curves.append({
             "backend": backend,
             "n_draws": n_draws,
-            "compiled_once": sweep.trace_count == 1,
+            "compiled_once": sent.ok,
             "sigma": {"levels": list(sigmas),
                       "points": sig_pts,
                       "monotone": _monotone_decreasing(

@@ -29,6 +29,7 @@ from repro.core.analog import AnalogExecutor
 from repro.core.analytic import analytic_block_response
 from repro.core.circuit import CircuitParams, block_response
 from repro.core.emulator import normalize_features, sample_block_inputs
+from repro.obs import OBS
 
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_speed.json")
 
@@ -46,8 +47,10 @@ def _pallas_backend() -> str:
 def run(batch: int = 2048, seed: int = 0, tcfg=QUICK, iters: int = 3,
         with_circuit: bool = True):
     # benchmark runs sweep block sizes (kernels.autotune); the resolved
-    # configs land in the run row (schema 2)
+    # configs land in the run row, and telemetry rides along so the
+    # cache-hit counters land there too (schema 3)
     os.environ.setdefault("REPRO_AUTOTUNE", "1")
+    OBS.enable()
     geom, acfg, cp = CASE_A, AnalogConfig(), CircuitParams()
     res = get_emulator(geom.name, tcfg, seed)
     key = jax.random.PRNGKey(seed)
@@ -137,12 +140,32 @@ def run(batch: int = 2048, seed: int = 0, tcfg=QUICK, iters: int = 3,
     return rows, sys_rows
 
 
+def _obs_summary() -> dict:
+    """Counter totals worth tracking per run: executor cache hit/miss
+    counts and autotune resolutions by source, folded out of the full
+    telemetry snapshot (docs/observability.md)."""
+    met = OBS.snapshot()["metrics"]
+
+    def by_label(name: str, label: str) -> dict:
+        out: dict = {}
+        for s in met.get(name, {}).get("series", []):
+            k = s["labels"].get(label, "?")
+            out[k] = out.get(k, 0) + int(s["value"])
+        return out
+
+    return {"plan_cache": by_label("analog_plan_cache_total", "event"),
+            "state_cache": by_label("analog_state_cache_total", "event"),
+            "autotune_sources": by_label("autotune_resolutions_total",
+                                         "source")}
+
+
 def write_json(rows, sys_rows, label: str, path: str = BENCH_JSON):
-    """Append this run to the perf-trajectory file (schema v2: each run
+    """Append this run to the perf-trajectory file (schema v3: each run
     row also records the autotuner's resolved block sizes and cache-hit
-    status under ``kernels``; see docs/performance.md)."""
+    status under ``kernels``, plus the telemetry counter summary under
+    ``obs``; see docs/performance.md)."""
     from repro.kernels import autotune
-    doc = {"schema": 2, "unit_block": "us_per_block",
+    doc = {"schema": 3, "unit_block": "us_per_block",
            "unit_matmul": "us_per_matmul_512x32_b16", "runs": []}
     if os.path.exists(path):
         try:
@@ -161,6 +184,7 @@ def write_json(rows, sys_rows, label: str, path: str = BENCH_JSON):
         "block_us": {k: round(v, 3) for k, v in rows.items()},
         "matmul_us": {k: round(v, 1) for k, v in sys_rows.items()},
         "kernels": autotune.report(),
+        "obs": _obs_summary(),
     })
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)

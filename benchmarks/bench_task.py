@@ -20,9 +20,10 @@ end-to-end: every point re-materializes the per-site device states and
 threads them through the SAME compiled prefill/decode executables --
 
 Asserted (exit 1 on violation):
-  * compile-once: ``prefill_traces == decode_traces == 1`` per backend
-    across the whole sigma x age sweep, and each call site's unified
-    forward holds exactly one calibration executable;
+  * compile-once: a ``repro.obs.RecompileSentinel`` watches the session's
+    prefill/decode trace counters and every call site's unified forward
+    across the whole sigma x age sweep -- one trace each, never a
+    recompile;
   * on the sigma axis, the ideal corner scores at least as well as the
     heaviest swept corner on ``acc_logits`` (common-random-numbers fleet
     key; the age axis is reported ungated -- see the note in ``run``);
@@ -49,6 +50,7 @@ from repro.configs.rram_ps32 import CASE_A
 from repro.core.analog import AnalogExecutor
 from repro.launch.serve import ServeSession
 from repro.nonideal import Scenario
+from repro.obs import RecompileSentinel
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
@@ -104,18 +106,17 @@ def run(quick: bool = False, seed: int = 0):
             sess.calibrate(n=calib_n)
             return _metrics(sess.generate(), ref)
 
-        sigma_pts = [point(Scenario(name="task", prog_sigma=s))
-                     for s in sigmas]
-        age_pts = [point(Scenario(name="task", prog_sigma=AGE_SIGMA,
-                                  drift_nu=DRIFT_NU, drift_t=t))
-                   for t in ages]
         # compile-once across the WHOLE sweep: the per-site device states
         # are traced arguments of the serving steps, and each site's
-        # unified forward compiled exactly one calibration batch shape
-        site_fns = [ex._fns[sk][2] for sk in sess.sites()]
-        compiled_once = (sess.prefill_traces == 1
-                         and sess.decode_traces == 1
-                         and all(fn._cache_size() == 1 for fn in site_fns))
+        # unified forward compiles exactly one calibration batch shape
+        with RecompileSentinel(session=sess, executor=ex, strict=False,
+                               label=f"task:{backend}") as sent:
+            sigma_pts = [point(Scenario(name="task", prog_sigma=s))
+                         for s in sigmas]
+            age_pts = [point(Scenario(name="task", prog_sigma=AGE_SIGMA,
+                                      drift_nu=DRIFT_NU, drift_t=t))
+                       for t in ages]
+        compiled_once = sent.ok
         curves.append({
             "backend": backend,
             "analog_layers": list(ex.acfg.layers),

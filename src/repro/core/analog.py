@@ -57,6 +57,7 @@ from __future__ import annotations
 
 import contextlib
 import functools
+import time
 import warnings
 import zlib
 from typing import Callable, Dict, Optional, Tuple
@@ -77,6 +78,7 @@ from repro.nonideal.perturb import (apply_read_noise, perturb_plan,
                                     remap_plan, scenario_circuit_params)
 from repro.nonideal.scenario import (N_SCENARIO_FEATURES, Scenario,
                                      scenario_features)
+from repro.obs import OBS
 
 _UNSET = object()
 
@@ -381,7 +383,15 @@ class AnalogExecutor:
         plan = self._plan_for(w, tag)
         ent = self._state_cache.get(tag) if tag else None
         if ent is not None and ent[0] is plan and ent[1] is dep:
+            if OBS.enabled:
+                OBS.counter("analog_state_cache_total",
+                            "materialized device-state cache lookups",
+                            tag=tag, event="hit").inc()
             return ent[2]
+        if OBS.enabled:
+            OBS.counter("analog_state_cache_total",
+                        "materialized device-state cache lookups",
+                        tag=tag or "<anon>", event="miss").inc()
         sc = dep.scenario
         with jax.ensure_compile_time_eval():
             ep = (self.emulator_params
@@ -490,7 +500,15 @@ class AnalogExecutor:
             return build_conductance_plan(w, self.acfg, self.geom)
         ent = self._plans.get(tag) if tag else None
         if ent is not None and ent[0] is w:
+            if OBS.enabled:
+                OBS.counter("analog_plan_cache_total",
+                            "conductance-plan cache lookups per weight tag",
+                            tag=tag, event="hit").inc()
             return ent[1]
+        if OBS.enabled:
+            OBS.counter("analog_plan_cache_total",
+                        "conductance-plan cache lookups per weight tag",
+                        tag=tag or "<anon>", event="miss").inc()
         # force eager evaluation even under an enclosing jit trace: the plan
         # must come out concrete so it is computed once and cached, not
         # re-tiled inside the compiled graph on every call
@@ -726,6 +744,23 @@ class AnalogExecutor:
         sol, *_ = jnp.linalg.lstsq(A, rhs)
         self.calibration[tag] = (float(sol[0]), float(sol[1]))
         self._last_calib_n = n_eff
+        if OBS.enabled:
+            # fleet health: RMS residual of the affine fit over the DATA
+            # rows (prior rows excluded) -- a drifting device that the
+            # affine can no longer linearize shows up here first.  All
+            # arrays are concrete (this is an eager fit): recording them
+            # cannot perturb anything served.
+            res = yv_flat * sol[0] + sol[1] - yd_flat
+            OBS.gauge("analog_calibration_residual",
+                      "RMS residual of the volts->logical affine fit",
+                      tag=tag).set(float(jnp.sqrt(jnp.mean(res * res))))
+            OBS.gauge("analog_calibration_probes",
+                      "probe budget used by the last calibration fit",
+                      tag=tag).set(n_eff)
+            OBS.counter("analog_calibrations_total",
+                        "calibration fits per tag and start mode",
+                        tag=tag,
+                        mode="warm" if prev is not None else "cold").inc()
         return self.calibration[tag]
 
     # ------------------------------------------------------------------ #
@@ -756,7 +791,23 @@ class AnalogExecutor:
         # are replaced by the state's gf leaf anyway, and an f32 alias
         # would make the per-tag plan cache ping-pong between identities
         # for bf16-served weights
-        fn = jax.jit(lambda x2, st: _st_matmul_u(self, tag, x2, w, st))
+        if OBS.enabled:
+            OBS.counter("analog_unified_builds_total",
+                        "per-tag unified forwards (re)built -- each build "
+                        "implies at least one fresh compile",
+                        tag=tag).inc()
+
+        def _fwd(x2, st):
+            # trace-time side effect: counts compiles of THIS tag's
+            # forward (pure Python -- the jaxpr is unchanged, so the
+            # counter is compile- and bit-neutral by construction)
+            if OBS.enabled:
+                OBS.counter("analog_traces_total",
+                            "jit traces of the per-tag unified forward",
+                            tag=tag).inc()
+            return _st_matmul_u(self, tag, x2, w, st)
+
+        fn = jax.jit(_fwd)
         self._fns[tag] = (w, rls, fn)
         return fn
 
@@ -776,14 +827,32 @@ class AnalogExecutor:
         bit-identical to the plain serving fast path."""
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        t0 = time.perf_counter() if OBS.enabled else 0.0
         if _is_tracer(x2) or _is_tracer(w) or not tag:
+            mode = "eager"
             if state is None:
                 a, b = self.calibration.get(tag, (1.0, 0.0))
                 state = self._inline_state(tag, w, a, b)
             y = _st_matmul_u(self, tag, x2, w, state)
         else:
+            mode = "jit"
             st = state if state is not None else self.state_for(tag, w)
             y = self._unified_for(tag, w)(x2, st)
+        if OBS.enabled:
+            # dispatch latency, NOT synchronized compute time: no
+            # block_until_ready is added here (that would serialize the
+            # dispatch pipeline the serving loop depends on).  "jit" is
+            # the per-tag compiled forward; "eager" is the in-trace /
+            # anonymous-tag path (under an enclosing jit this records
+            # once, at trace time).
+            dt = time.perf_counter() - t0
+            OBS.histogram("analog_matmul_seconds",
+                          "unified-forward dispatch latency, split "
+                          "eager-vs-jit (host-side, no device sync)",
+                          mode=mode).observe(dt)
+            OBS.counter("analog_matmul_calls_total",
+                        "analog matmul calls per tag and dispatch mode",
+                        tag=tag or "<anon>", mode=mode).inc()
         return y.reshape(*lead, w.shape[1]).astype(x.dtype)
 
     # ------------------------------------------------------------------ #

@@ -8,8 +8,14 @@ replaces the constants with a measured choice: on first use of a
 timed on dummy operands and the winner is cached
 
   * in-process (``_MEM``), so one sweep serves the whole run, and
-  * on disk (``~/.cache/repro/autotune.json`` or
-    ``$REPRO_AUTOTUNE_CACHE``), so repeat runs skip the sweep entirely.
+  * on disk (``cache_dir()/autotune.json`` -- ``$REPRO_CACHE_DIR``,
+    else ``$XDG_CACHE_HOME/repro``, else ``~/.cache/repro``; the file
+    itself overridable with ``$REPRO_AUTOTUNE_CACHE``), so repeat runs
+    skip the sweep entirely.
+
+Every resolution is also counted into the telemetry registry when
+enabled (``autotune_resolutions_total{kernel, source}``, plus a sweep
+duration histogram and a cache-path info gauge -- docs/observability.md).
 
 Sweeping is explicit opt-in off-TPU (``REPRO_AUTOTUNE=1``): candidates
 are timed through real compiles, which is exactly right for a serving
@@ -35,18 +41,37 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 
+from repro.obs import OBS
+
 _MEM: Dict[str, dict] = {}
 _REPORT: Dict[str, dict] = {}
 _DISK_VERSION = 1
 
 
+def cache_dir() -> str:
+    """Root of the repro disk caches.  Resolution order:
+
+      1. ``REPRO_CACHE_DIR``    -- explicit override (CI runners and
+         multi-user hosts point this at a job-local scratch dir so
+         concurrent runs never collide on one shared cache file);
+      2. ``XDG_CACHE_HOME``/repro -- the XDG base-directory convention;
+      3. ``~/.cache/repro``     -- the historical default.
+    """
+    env = os.environ.get("REPRO_CACHE_DIR")
+    if env:
+        return env
+    xdg = os.environ.get("XDG_CACHE_HOME")
+    base = xdg if xdg else os.path.join(os.path.expanduser("~"), ".cache")
+    return os.path.join(base, "repro")
+
+
 def cache_path() -> str:
-    """Disk-cache location (override with ``REPRO_AUTOTUNE_CACHE``)."""
+    """Autotune disk-cache file (``REPRO_AUTOTUNE_CACHE`` overrides the
+    whole path; otherwise it lives under ``cache_dir()``)."""
     env = os.environ.get("REPRO_AUTOTUNE_CACHE")
     if env:
         return env
-    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
-                        "autotune.json")
+    return os.path.join(cache_dir(), "autotune.json")
 
 
 def enabled() -> bool:
@@ -128,6 +153,7 @@ def best_config(kernel: str, key_parts: Sequence, candidates: List[dict],
     if not enabled() or measure is None:
         _record(kernel, key, default, "default")
         return default
+    t_sweep = time.perf_counter()
     best, best_t = default, float("inf")
     for cfg in candidates:
         try:
@@ -136,6 +162,11 @@ def best_config(kernel: str, key_parts: Sequence, candidates: List[dict],
             continue
         if t < best_t:
             best, best_t = cfg, t
+    if OBS.enabled:
+        OBS.histogram("autotune_sweep_seconds",
+                      "wall-clock of one candidate sweep (compiles "
+                      "included)", kernel=kernel).observe(
+                          time.perf_counter() - t_sweep)
     _MEM[key] = best
     _store_disk(key, best)
     _record(kernel, key, best, "swept")
@@ -144,6 +175,14 @@ def best_config(kernel: str, key_parts: Sequence, candidates: List[dict],
 
 def _record(kernel: str, key: str, cfg: dict, source: str) -> None:
     _REPORT[kernel] = {"key": key, "config": dict(cfg), "source": source}
+    if OBS.enabled:
+        OBS.counter("autotune_resolutions_total",
+                    "block-size resolutions per kernel and source "
+                    "(memory/disk cache hit, fresh sweep, or the "
+                    "caller's default)", kernel=kernel, source=source).inc()
+        OBS.gauge("autotune_cache_path_info",
+                  "constant 1; the label carries the active autotune "
+                  "disk-cache path", path=cache_path()).set(1)
 
 
 def report() -> Dict[str, dict]:

@@ -37,9 +37,17 @@ read-noise draw, bit-identical tokens.
 """
 import argparse
 import contextlib
+import itertools
+import json
 import os
 import time
 from typing import Dict, Optional
+
+from repro.obs import OBS
+
+# per-process serving call-site ordinal: telemetry series from two
+# sessions of the same arch stay distinguishable
+_SESSION_IDS = itertools.count()
 
 
 class ServeSession:
@@ -102,6 +110,9 @@ class ServeSession:
             self.batch["enc_frames"] = jax.random.normal(
                 k_enc, (batch, prompt_len, cfg.d_model), jnp.bfloat16)
 
+        # telemetry identity of this serving call site (docs/observability
+        # .md): every session-level metric series carries site=<this>
+        self.site = f"{arch}#{next(_SESSION_IDS)}"
         self._prefill_step = S.make_prefill_step(cfg, pcfg)
         self._decode_step = S.make_decode_step(cfg, pcfg)
         # per-site state threading needs unrolled layers (see module doc)
@@ -142,8 +153,15 @@ class ServeSession:
     def states(self) -> Dict[str, object]:
         """One ready-to-serve ``DeploymentState`` per call site,
         materialized from the executor's ACTIVE deployment."""
-        return {sk: self.ex.state_for(sk, w)
-                for sk, w in self.sites().items()}
+        sts = {sk: self.ex.state_for(sk, w)
+               for sk, w in self.sites().items()}
+        if OBS.enabled:
+            for sk in sts:
+                OBS.counter("serve_state_swaps_total",
+                            "DeploymentStates materialized and threaded "
+                            "into the compiled steps, per analog call site",
+                            site=self.site, call_site=sk).inc()
+        return sts
 
     def calibrate(self, key=None, n: int = 16,
                   warm_start: bool = False) -> None:
@@ -184,11 +202,21 @@ class ServeSession:
 
         def run_prefill(b, states):
             self.prefill_traces += 1           # trace-time side effect
+            if OBS.enabled:
+                OBS.counter("serve_traces_total",
+                            "jit traces of the serving steps (a healthy "
+                            "sweep holds this at 1 per step)",
+                            site=self.site, step="prefill").inc()
             with self._bound(states):
                 return self._prefill_step(self.params, b)
 
         def run_decode(tok, cache, pos, states):
             self.decode_traces += 1
+            if OBS.enabled:
+                OBS.counter("serve_traces_total",
+                            "jit traces of the serving steps (a healthy "
+                            "sweep holds this at 1 per step)",
+                            site=self.site, step="decode").inc()
             with self._bound(states):
                 return self._decode_step(self.params, tok, cache, pos)
 
@@ -232,6 +260,11 @@ class ServeSession:
         logits, pcache = self._prefill(self.batch, states)
         logits.block_until_ready()
         t_prefill = time.time() - t0
+        if OBS.enabled:
+            OBS.histogram("serve_prefill_seconds",
+                          "full prefill wall clock (synchronized) per "
+                          "serving call site", site=self.site,
+                          arch=self.cfg.name).observe(t_prefill)
 
         # build a generation cache sized for P+G, splice the prefill cache
         cs = M.model_cache_schema(
@@ -260,9 +293,21 @@ class ServeSession:
         out_tokens, out_logits = [tok], [logits]
         t0 = time.time()
         for i in range(G - 1):
+            ts = time.perf_counter() if OBS.enabled else 0.0
             logits, cache = self._decode(tok, cache,
                                          jnp.asarray(P + i, jnp.int32),
                                          states)
+            if OBS.enabled:
+                # per-step DISPATCH latency: deliberately no
+                # block_until_ready inside the loop (a host sync per
+                # step would serialize the dispatch pipeline -- see the
+                # comment above); the synchronized total lands in
+                # serve_decode_seconds below
+                OBS.histogram("serve_decode_step_seconds",
+                              "per-step decode dispatch latency (host "
+                              "side, no device sync)", site=self.site,
+                              arch=self.cfg.name).observe(
+                                  time.perf_counter() - ts)
             if self.temperature > 0:
                 self._key, sub = jax.random.split(self._key)
                 tok = jax.random.categorical(
@@ -274,6 +319,15 @@ class ServeSession:
             out_logits.append(logits)
         jax.block_until_ready(tok)
         t_decode = time.time() - t0
+        if OBS.enabled:
+            OBS.histogram("serve_decode_seconds",
+                          "full decode-loop wall clock (synchronized) per "
+                          "serving call site", site=self.site,
+                          arch=self.cfg.name).observe(t_decode)
+            OBS.counter("serve_tokens_total",
+                        "tokens served (prompt + generated)",
+                        site=self.site, arch=self.cfg.name).inc(
+                            B * (P + G))
         return {"tokens": np.asarray(jnp.concatenate(out_tokens, axis=1)),
                 "logits": np.stack([np.asarray(l, np.float32)
                                     for l in out_logits]),
@@ -329,7 +383,14 @@ def main():
                     help="serve a deployment saved with --state-save: the "
                          "per-site device states (fleet draw, age, remap, "
                          "read keys, calibration) are restored verbatim")
+    ap.add_argument("--telemetry", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="enable the metrics registry for this run and dump "
+                         "the JSON snapshot on exit -- to PATH, or to stdout "
+                         "when the flag is given bare (docs/observability.md)")
     args = ap.parse_args()
+    if args.telemetry is not None:
+        OBS.enable()
     if args.scenario and args.analog_backend == "digital":
         ap.error("--scenario requires a non-digital --analog-backend")
     if (args.fault_remap or args.age is not None) and not args.scenario:
@@ -402,7 +463,10 @@ def main():
         ap.error("--state-save/--state-load need unrolled analog layers: "
                  f"pass --layers N with N < {len(sess.cfg.pattern)} "
                  "(the arch's layer-pattern length)")
-    out = sess.generate(states=loaded_states)
+    from repro.obs import RecompileSentinel
+    with RecompileSentinel(session=sess, executor=ex, strict=False,
+                           label="serve") as sent:
+        out = sess.generate(states=loaded_states)
 
     B, P, G = args.batch, args.prompt_len, args.gen
     print(f"prefill {B}x{P}: {out['prefill_s']*1e3:.1f} ms "
@@ -414,6 +478,16 @@ def main():
         path = sess.save_deployment(args.state_save)
         print(f"deployment saved: {len(sess._last_states)} call sites "
               f"-> {path}")
+    if args.telemetry is not None:
+        if not sent.ok:
+            print(f"WARNING recompile sentinel tripped: {sent.violations}")
+        from repro.obs import snapshot as obs_snapshot
+        if args.telemetry == "-":
+            print(json.dumps(obs_snapshot(), indent=2, sort_keys=True))
+        else:
+            from repro.obs import write_snapshot
+            write_snapshot(args.telemetry)
+            print(f"telemetry snapshot -> {args.telemetry}")
 
 
 if __name__ == "__main__":

@@ -57,6 +57,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.nonideal.scenario import Scenario, collapse_tiles
+from repro.obs import OBS
 
 # Canonical drift checkpoints: (label, seconds since programming).
 DEFAULT_TIMELINE: Tuple[Tuple[str, float], ...] = (
@@ -316,6 +317,34 @@ class LifetimeScheduler:
         self._calib_used = self.ex._last_calib_n
         return out
 
+    def _observe(self, tag: str, t: float, event: str, retrained: bool,
+                 recalibrated: bool) -> None:
+        """Fleet-health telemetry for one checkpoint (no-op when the
+        registry is disabled): current drift age and probe budget as
+        gauges, every applied mitigation as an event counter
+        (docs/observability.md)."""
+        OBS.gauge("lifetime_drift_age_seconds",
+                  "drift age the fleet is currently deployed at",
+                  tag=tag).set(t)
+        OBS.gauge("lifetime_calib_probes",
+                  "probe budget spent by the last calibration at this "
+                  "checkpoint (0 = not recalibrated)",
+                  tag=tag).set(self._calib_used)
+        OBS.counter("lifetime_checkpoints_total",
+                    "lifetime checkpoints walked", tag=tag).inc()
+        events = [event]
+        if event == "deploy" and self.remap:
+            events.append("remap")
+        if retrained:
+            events.append("retrain")
+        if recalibrated:
+            events.append("recalibrate")
+        for ev in events:
+            OBS.counter("lifetime_events_total",
+                        "mitigation events applied across the lifetime "
+                        "walk (deploy/remap/retrain/recalibrate/"
+                        "checkpoint)", tag=tag, event=ev).inc()
+
     def deploy(self, w, tag: str) -> Scenario:
         """Program the fleet (t = 0) and fit the initial calibration.
 
@@ -333,6 +362,8 @@ class LifetimeScheduler:
         self.history = [{"label": "t0", "t": 0.0, "retrained": retrained,
                          "conditioned": self.conditioned,
                          "calib_n": self._calib_used}]
+        if OBS.enabled:
+            self._observe(tag, 0.0, "deploy", retrained, True)
         return sc0
 
     def step(self, w, tag: str, label: str, t: float) -> Scenario:
@@ -350,6 +381,8 @@ class LifetimeScheduler:
         self.history.append({"label": label, "t": t, "retrained": retrained,
                              "conditioned": self.conditioned,
                              "calib_n": self._calib_used})
+        if OBS.enabled:
+            self._observe(tag, t, "checkpoint", retrained, self.recalibrate)
         return aged
 
     def run(self, w, tag: str, x) -> List[dict]:

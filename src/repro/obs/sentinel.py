@@ -1,0 +1,117 @@
+"""RecompileSentinel: the compile-once invariant as a reusable check.
+
+Every bench in this repo asserts some flavor of "the sweep compiled
+exactly once" by hand-collecting trace counters
+(``ServeSession.prefill_traces``, ``jit_fn._cache_size()``,
+``ScenarioSweep.trace_count``).  The sentinel packages that into one
+context manager: snapshot the counters on entry, re-read them on exit,
+and flag any watched counter that grew past its budget.
+
+    with RecompileSentinel(session=sess, executor=ex,
+                           label="task:emulator") as sent:
+        for corner in corners:
+            ex.deploy(scenario=corner)
+            sess.generate()
+    assert sent.ok          # strict=True (default) raises instead
+
+Watchable things (any combination):
+
+  * ``session``  -- a ``ServeSession``: ``prefill_traces`` and
+    ``decode_traces``;
+  * ``executor`` -- an ``AnalogExecutor``: the executable count of every
+    per-tag unified forward (``_fns``), including tags created inside
+    the block (they count from zero);
+  * ``sweep``    -- a ``ScenarioSweep``: ``trace_count``;
+  * ``fns``      -- any jitted callables exposing ``_cache_size()``.
+
+``max_traces`` is the per-counter budget for NEW traces/executables
+inside the block (default 1: the block may pay its first compile, never
+a recompile).  On exit the outcome lands in the metrics registry when
+telemetry is enabled (``obs_sentinel_checks_total{label, outcome}``),
+which is what lets CI fail a serve run on ``outcome="violation"``
+straight from the exported snapshot (tools/check_telemetry.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+from repro.obs.registry import OBS
+
+
+class RecompileError(AssertionError):
+    """A watched jit cache grew past the sentinel's trace budget."""
+
+
+def _cache_size(fn) -> int:
+    try:
+        return fn._cache_size()
+    except Exception:                  # pragma: no cover - jax API drift
+        return 0
+
+
+class RecompileSentinel:
+    """Context manager asserting nothing recompiled beyond budget
+    (see module docstring)."""
+
+    def __init__(self, *, session=None, executor=None, sweep=None,
+                 fns: Sequence = (), max_traces: int = 1, label: str = "",
+                 strict: bool = True):
+        self.session = session
+        self.executor = executor
+        self.sweep = sweep
+        self.fns = tuple(fns)
+        self.max_traces = max_traces
+        self.label = label
+        self.strict = strict
+        self.ok: Optional[bool] = None
+        self.new_counts: Dict[str, int] = {}
+        self.violations: Dict[str, int] = {}
+        self._base: Dict[str, int] = {}
+
+    def counts(self) -> Dict[str, int]:
+        """Current absolute counts of every watched counter."""
+        c: Dict[str, int] = {}
+        if self.session is not None:
+            c["session.prefill_traces"] = self.session.prefill_traces
+            c["session.decode_traces"] = self.session.decode_traces
+        if self.executor is not None:
+            for tag, ent in self.executor._fns.items():
+                c[f"executor.unified[{tag}]"] = _cache_size(ent[2])
+        if self.sweep is not None:
+            c["sweep.trace_count"] = self.sweep.trace_count
+        for i, fn in enumerate(self.fns):
+            c[f"fn[{i}]"] = _cache_size(fn)
+        return c
+
+    def __enter__(self) -> "RecompileSentinel":
+        self._base = self.counts()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is not None:
+            return False               # don't mask the original error
+        end = self.counts()
+        self.new_counts = {k: v - self._base.get(k, 0)
+                           for k, v in end.items()}
+        self.violations = {k: v for k, v in self.new_counts.items()
+                           if v > self.max_traces}
+        self.ok = not self.violations
+        if OBS.enabled:
+            OBS.counter(
+                "obs_sentinel_checks_total",
+                "RecompileSentinel outcomes (violation = a watched jit "
+                "cache grew past the trace budget)",
+                label=self.label or "<unlabeled>",
+                outcome="ok" if self.ok else "violation").inc()
+            for k, v in self.new_counts.items():
+                OBS.gauge(
+                    "obs_sentinel_new_traces",
+                    "new traces/executables per watched counter in the "
+                    "last sentinel block",
+                    label=self.label or "<unlabeled>", watch=k).set(v)
+        if self.strict and not self.ok:
+            raise RecompileError(
+                f"recompile sentinel {self.label or ''!s} tripped: "
+                f"{self.violations} new traces exceed the budget of "
+                f"{self.max_traces} (all watched: {self.new_counts})")
+        return False

@@ -1,0 +1,69 @@
+"""Trace spans: wall-clock timing of a code region into a histogram.
+
+A span is the cheapest possible wrapper around ``time.perf_counter``:
+on exit it records the elapsed seconds into the owning registry's
+``<name>_seconds`` histogram (span names therefore use underscores, not
+dots, so the derived metric name is Prometheus-legal as-is).  With the
+registry's ``profiler`` flag set the span additionally opens a
+``jax.profiler.TraceAnnotation`` of the same name, so serving spans show
+up on the XLA trace viewer timeline next to the device ops they wrap.
+
+Spans never touch traced values and never emit jax ops: a span around a
+jitted call times the host-side dispatch (document the sync discipline
+at the call site -- the span does not ``block_until_ready`` for you).
+
+When telemetry is disabled, ``Telemetry.span`` returns the shared
+``NULL_SPAN`` singleton -- entering and exiting it is two empty method
+calls, no allocation, no clock read.
+"""
+from __future__ import annotations
+
+import time
+
+
+class NullSpan:
+    """No-op context manager handed out while telemetry is disabled."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+
+NULL_SPAN = NullSpan()
+
+
+class Span:
+    """Times a with-block into ``<name>_seconds`` on ``registry``."""
+
+    __slots__ = ("_registry", "name", "help", "labels", "_t0", "_annotation")
+
+    def __init__(self, registry, name: str, help: str = "",
+                 labels: dict | None = None):
+        self._registry = registry
+        self.name = name
+        self.help = help
+        self.labels = labels or {}
+        self._t0 = 0.0
+        self._annotation = None
+
+    def __enter__(self) -> "Span":
+        if getattr(self._registry, "profiler", False):
+            import jax.profiler  # lazy: obs must import without jax
+
+            self._annotation = jax.profiler.TraceAnnotation(self.name)
+            self._annotation.__enter__()
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        dt = time.perf_counter() - self._t0
+        if self._annotation is not None:
+            self._annotation.__exit__(*exc)
+            self._annotation = None
+        self._registry.histogram(self.name + "_seconds", self.help,
+                                 **self.labels).observe(dt)
+        return False

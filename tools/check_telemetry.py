@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Validate a telemetry snapshot against the checked-in schema.
+
+CI's telemetry-smoke step runs a short serve with ``--telemetry=PATH``
+and feeds the exported snapshot through this checker
+(tools/telemetry_schema.json):
+
+  * every ``require`` entry must exist with the declared kind, at least
+    ``min_series`` label series, and the declared label keys on every
+    series -- a serve that stopped exporting its latency histograms or
+    cache counters fails here;
+  * no ``forbid_nonzero`` series may be positive -- this is how a
+    ``RecompileSentinel`` violation recorded during the run
+    (``obs_sentinel_checks_total{outcome="violation"}``) fails CI
+    straight from the artifact.
+
+Exit 1 with a per-rule report on any violation.
+
+  PYTHONPATH=src python tools/check_telemetry.py SNAP.json [--schema JSON]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_SCHEMA = os.path.join(REPO, "tools", "telemetry_schema.json")
+
+
+def check(snap: dict, schema: dict) -> list:
+    """All violations of ``schema`` in ``snap`` (empty = healthy)."""
+    errs = []
+    metrics = snap.get("metrics")
+    if not isinstance(metrics, dict):
+        return [f"snapshot has no 'metrics' mapping "
+                f"(schema={snap.get('schema')!r})"]
+    for rule in schema.get("require", []):
+        name = rule["metric"]
+        m = metrics.get(name)
+        if m is None:
+            errs.append(f"missing required metric {name}")
+            continue
+        if m.get("kind") != rule.get("kind", m.get("kind")):
+            errs.append(f"{name}: kind {m.get('kind')!r}, schema wants "
+                        f"{rule['kind']!r}")
+        series = m.get("series", [])
+        if len(series) < rule.get("min_series", 1):
+            errs.append(f"{name}: {len(series)} series, schema wants "
+                        f">= {rule.get('min_series', 1)}")
+        for want in rule.get("labels", []):
+            bad = [s for s in series if want not in s.get("labels", {})]
+            if bad:
+                errs.append(f"{name}: {len(bad)} series missing label "
+                            f"{want!r}")
+    for rule in schema.get("forbid_nonzero", []):
+        m = metrics.get(rule["metric"])
+        if m is None:
+            continue
+        sub = rule.get("labels", {})
+        for s in m.get("series", []):
+            labels = s.get("labels", {})
+            if all(labels.get(k) == v for k, v in sub.items()) \
+                    and s.get("value", 0) > 0:
+                errs.append(f"{rule['metric']}{sub}: forbidden series is "
+                            f"nonzero ({s.get('value')}) -- labels "
+                            f"{labels}")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("snapshot", help="telemetry snapshot JSON to validate")
+    ap.add_argument("--schema", default=DEFAULT_SCHEMA,
+                    help="schema file (default: tools/telemetry_schema.json)")
+    args = ap.parse_args(argv)
+    with open(args.snapshot) as f:
+        snap = json.load(f)
+    with open(args.schema) as f:
+        schema = json.load(f)
+    errs = check(snap, schema)
+    if errs:
+        print(f"telemetry snapshot FAILED {len(errs)} schema check(s):")
+        for e in errs:
+            print(f"  - {e}")
+        return 1
+    n = len(snap.get("metrics", {}))
+    print(f"telemetry snapshot ok: {n} metrics, schema "
+          f"v{schema.get('version')}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,108 @@
+#!/usr/bin/env python
+"""Telemetry snapshot reporter: one snapshot as a table, or the delta
+between two.
+
+Consumes the JSON snapshots the serving stack exports
+(``serve --telemetry=PATH``, ``repro.obs.write_snapshot``;
+docs/observability.md) and renders them human-first:
+
+  * one snapshot  -- every metric as a table row per label series
+    (histograms show count / mean / min / max);
+  * two snapshots -- ``diff_snapshots(base, snap)``: counters and
+    histograms subtract per series (what happened BETWEEN the two
+    exports), gauges show the later value;
+  * ``--prometheus`` -- emit the Prometheus text exposition instead of
+    the table (pipe into a pushgateway or a scrape file).
+
+  PYTHONPATH=src python tools/obs_report.py SNAP.json [--base BASE.json]
+                                            [--prometheus] [--grep RE]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+from repro.obs import diff_snapshots, to_prometheus
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "metrics" not in doc:
+        raise SystemExit(f"{path}: not a telemetry snapshot "
+                         "(no 'metrics' key)")
+    return doc
+
+
+def _fmt_val(v: float) -> str:
+    if isinstance(v, float) and v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return f"{v:.6g}"
+
+
+def _labels(labels: dict) -> str:
+    return ",".join(f"{k}={v}" for k, v in sorted(labels.items())) or "-"
+
+
+def rows(snap: dict, grep: str = "") -> list:
+    """Flatten a snapshot into ``(metric, kind, labels, value)`` table
+    rows; histograms render as ``count / mean / min / max``."""
+    pat = re.compile(grep) if grep else None
+    out = []
+    for name, m in sorted(snap["metrics"].items()):
+        if pat and not pat.search(name):
+            continue
+        for s in m["series"]:
+            if m["kind"] == "histogram":
+                n = s["count"]
+                mean = s["sum"] / n if n else 0.0
+                val = (f"n={n} mean={mean:.6g} "
+                       f"min={_fmt_val(s['min']) if n else '-'} "
+                       f"max={_fmt_val(s['max']) if n else '-'}")
+            else:
+                val = _fmt_val(s["value"])
+            out.append((name, m["kind"], _labels(s["labels"]), val))
+    return out
+
+
+def render(table: list) -> str:
+    if not table:
+        return "(no metrics matched)"
+    heads = ("metric", "kind", "labels", "value")
+    widths = [max(len(heads[i]), *(len(r[i]) for r in table))
+              for i in range(4)]
+    lines = ["  ".join(h.ljust(w) for h, w in zip(heads, widths)),
+             "  ".join("-" * w for w in widths)]
+    lines += ["  ".join(c.ljust(w) for c, w in zip(r, widths))
+              for r in table]
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("snapshot", help="telemetry snapshot JSON")
+    ap.add_argument("--base", default=None, metavar="JSON",
+                    help="earlier snapshot: report the counter/histogram "
+                         "delta between the two instead of the absolutes")
+    ap.add_argument("--prometheus", action="store_true",
+                    help="emit Prometheus text exposition, not a table")
+    ap.add_argument("--grep", default="",
+                    help="only metrics whose name matches this regex")
+    args = ap.parse_args(argv)
+
+    snap = _load(args.snapshot)
+    if args.base:
+        snap = diff_snapshots(_load(args.base), snap)
+    if args.prometheus:
+        sys.stdout.write(to_prometheus(snap))
+    else:
+        if snap.get("diff"):
+            print(f"# delta: {args.base} -> {args.snapshot}")
+        print(render(rows(snap, args.grep)))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -140,33 +140,103 @@ class _StateBinding:
     weight`` (under ``jax.eval_shape``: zero FLOPs) for a ``ServeSession``
     to materialize states against; in serve mode it routes each site
     through the unified forward with that site's (typically traced)
-    state."""
+    state.
+
+    Scanned models (``lax.scan`` over layer periods) thread their states
+    as scan xs: the binding doubles as the model's scan-states provider
+    (``models.common.use_scan_states``).  Sites inside scan group ``g``,
+    period ``p`` are keyed ``"{g}.{p}:{tag}#{j}"`` with the ordinal ``j``
+    counted within the period (``scan_record``); at serve time
+    ``scan_xs`` stacks the per-period states onto a leading layer axis so
+    the scan body receives each period's states as TRACED xs slices
+    (``scan_slice``), and ``intercept`` resolves sites from the slice --
+    the traced weight slice takes the executor's eager in-trace path, so
+    the whole scan stays inside ONE compiled serving step."""
 
     def __init__(self, states: Optional[Dict[str, DeploymentState]] = None,
                  record: Optional[Dict[str, jax.Array]] = None):
         self.states = states
         self.record = record
         self._ordinals: Dict[str, int] = {}
+        self._prefix = ""
+        self._slice: Optional[Dict[str, DeploymentState]] = None
+
+    @property
+    def recording(self) -> bool:
+        return self.record is not None
 
     def site_key(self, tag: str) -> str:
         i = self._ordinals.get(tag, 0)
         self._ordinals[tag] = i + 1
-        return f"{tag}#{i}"
+        return f"{self._prefix}{tag}#{i}"
+
+    @contextlib.contextmanager
+    def _scoped(self, prefix: str, slice_states):
+        """Fresh within-period ordinals + key prefix / slice lookup for
+        the duration (scan bodies re-enter per period / per trace, so the
+        reset also makes remat's double-trace idempotent)."""
+        saved = (self._ordinals, self._prefix, self._slice)
+        self._ordinals, self._prefix, self._slice = {}, prefix, slice_states
+        try:
+            yield
+        finally:
+            self._ordinals, self._prefix, self._slice = saved
+
+    def scan_record(self, group: str, period: int):
+        """Record mode: key the sites of one Python-unrolled period."""
+        return self._scoped(f"{group}.{period}:", None)
+
+    def scan_slice(self, group: str, ls):
+        """Serve mode: resolve the scan body's sites from the traced
+        per-period state slice ``ls`` (keyed by within-period site key)."""
+        return self._scoped(f"{group}.?:", ls)
+
+    def scan_xs(self, group: str, n: int):
+        """Stack the bound states of scan group ``group`` onto a leading
+        layer axis: ``{inner_site_key: DeploymentState}`` with every leaf
+        ``(n, ...)`` -- ready to ride ``lax.scan`` as xs.  Returns None
+        when the group has no bound states (digital scan layers)."""
+        if self.states is None:
+            return None
+        pre = f"{group}."
+        per: list = [dict() for _ in range(n)]
+        for sk, st in self.states.items():
+            if not sk.startswith(pre) or ":" not in sk:
+                continue
+            p_str, inner = sk[len(pre):].split(":", 1)
+            per[int(p_str)][inner] = st
+        if not per[0]:
+            return None
+        keys = sorted(per[0])
+        if any(sorted(d) != keys for d in per):
+            raise KeyError(
+                f"scan group {group!r}: per-period site keys differ "
+                f"across the {n} periods (bound: {sorted(self.states)}); "
+                "a saved deployment must be served with the model / "
+                "layer configuration it was saved from")
+        return {k: jax.tree.map(lambda *ls: jnp.stack(ls),
+                                *[d[k] for d in per]) for k in keys}
 
     def intercept(self, ex: "AnalogExecutor", x, w, tag: str):
         sk = self.site_key(tag)
         if self.record is not None:
             self.record[sk] = w
             return None                # digital fallback while recording
-        st = self.states.get(sk) if self.states is not None else None
+        if self._slice is not None:
+            # inside a scan body: the key's period field is positional
+            # (the xs slice IS period p); look up by within-period key
+            st = self._slice.get(sk.split(":", 1)[1])
+        else:
+            st = self.states.get(sk) if self.states is not None else None
         if st is None:
             # a silent digital fallback here would break the round-trip
             # contract without a trace -- fail loudly instead
+            bound = sorted(self._slice) if self._slice is not None \
+                else sorted(self.states or ())
             raise KeyError(
                 f"no DeploymentState bound for call site {sk!r} (bound: "
-                f"{sorted(self.states or ())}); a saved deployment must "
-                "be served with the model / layer configuration it was "
-                "saved from")
+                f"{bound}); a saved deployment must be served with the "
+                "model / layer configuration it was saved from")
         return ex.matmul(x, w, sk, state=st)
 
 

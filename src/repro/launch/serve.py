@@ -17,23 +17,24 @@ params, recalibrations -- and the serving steps never recompile
 which turns this into accuracy-vs-sigma / accuracy-vs-age curves on
 actual token prediction).
 
-State threading needs every analog layer Python-unrolled (the model's
-``lax.scan`` over layer periods hands dense() traced weight slices with
-no per-layer call site to key a state against), i.e. ``num_layers <
-len(pattern)`` -- use ``reduced_layers`` (CLI ``--layers``).  For
-scanned models the session falls back to the legacy in-trace hook: the
-active deployment bakes into the compiled steps at trace time, exactly
-as the pre-session launcher behaved -- ``generate()`` rebuilds the
-steps when the deployment changed, so swaps still take effect, they
-just pay a retrace -- and ``--state-save/--state-load`` are
-unavailable.
+State threading covers scanned and unrolled layers alike.  Call sites
+in Python-unrolled layers are keyed ``"<tag>#<ordinal>"`` (model tags
+repeat across layers; trace order is deterministic); call sites inside
+the model's ``lax.scan`` over layer periods are keyed
+``"<group>.<period>:<tag>#<ordinal>"`` (``group`` is ``dec``/``enc``)
+and their per-period states ride the scan as stacked xs -- a leading
+layer axis on every state leaf -- so full-depth scanned models get the
+same zero-recompile corner/age/remap sweeps as unrolled ones (the
+legacy bake-in-at-trace-time fallback is gone).  A deployment is
+serializable either way: ``--state-save`` writes the served per-site
+states + spec to npz (``core.deployment.save_deployment``) and
+``--state-load`` restores them verbatim in another process -- same
+fleet, same age, same remap, same read-noise draw, bit-identical
+tokens.
 
-Call sites are keyed ``"<tag>#<ordinal>"`` (model tags repeat across
-layers; trace order is deterministic), and a deployment is serializable:
-``--state-save`` writes the served per-site states + spec to npz
-(``core.deployment.save_deployment``) and ``--state-load`` restores them
-verbatim in another process -- same fleet, same age, same remap, same
-read-noise draw, bit-identical tokens.
+Batched multi-request serving (continuous batching, paged KV slots,
+Poisson-load benchmarks) lives one level up in
+``repro.launch.batching`` (docs/serving.md).
 """
 import argparse
 import contextlib
@@ -115,11 +116,11 @@ class ServeSession:
         self.site = f"{arch}#{next(_SESSION_IDS)}"
         self._prefill_step = S.make_prefill_step(cfg, pcfg)
         self._decode_step = S.make_decode_step(cfg, pcfg)
-        # per-site state threading needs unrolled layers (see module doc)
-        self.threading = executor is not None and cfg.num_periods == 0
+        # per-site state threading: unrolled sites as plain traced args,
+        # scanned sites as stacked lax.scan xs (see module docstring)
+        self.threading = executor is not None
         self._sites: Optional[Dict[str, object]] = None
         self._steps_built = False
-        self._legacy_dep = None        # deployment baked into legacy steps
         self._last_states: Optional[dict] = None
         self.prefill_traces = 0
         self.decode_traces = 0
@@ -133,18 +134,13 @@ class ServeSession:
         model's weights are concrete; only activations are abstract)."""
         if self.ex is None:
             return {}
-        if not self.threading:
-            raise RuntimeError(
-                "per-site deployment-state threading needs every analog "
-                "layer unrolled (num_layers < len(pattern)); rebuild the "
-                f"session with reduced_layers < {len(self.cfg.pattern)} "
-                "(CLI: --layers)")
         if self._sites is None:
             from repro.core.analog import _StateBinding
-            from repro.models.common import use_dense_hook
+            from repro.models.common import use_dense_hook, use_scan_states
             rec: Dict[str, object] = {}
-            with use_dense_hook(self.ex.hook), \
-                    self.ex.bound_states(_StateBinding(record=rec)):
+            binding = _StateBinding(record=rec)
+            with use_dense_hook(self.ex.hook), use_scan_states(binding), \
+                    self.ex.bound_states(binding):
                 self._jax.eval_shape(
                     lambda b: self._prefill_step(self.params, b), self.batch)
             self._sites = rec
@@ -188,13 +184,13 @@ class ServeSession:
     def _bound(self, states):
         if self.ex is None:
             return contextlib.nullcontext()
-        from repro.models.common import use_dense_hook
+        from repro.core.analog import _StateBinding
+        from repro.models.common import use_dense_hook, use_scan_states
+        binding = _StateBinding(states=states)
         stack = contextlib.ExitStack()
         stack.enter_context(use_dense_hook(self.ex.hook))
-        if self.threading:
-            from repro.core.analog import _StateBinding
-            stack.enter_context(
-                self.ex.bound_states(_StateBinding(states=states)))
+        stack.enter_context(use_scan_states(binding))
+        stack.enter_context(self.ex.bound_states(binding))
         return stack
 
     def _build_steps(self):
@@ -236,20 +232,8 @@ class ServeSession:
         jax, jnp = self._jax, self._jnp
         import numpy as np
         from repro.models import model as M
-        if self.ex is not None and not self.threading:
-            # legacy (scanned-model) mode: the ACTIVE deployment bakes
-            # into the steps at trace time, so a deploy() swap between
-            # generate() calls must rebuild the jitted steps (fresh jit
-            # objects -> retrace); threading mode is the zero-recompile
-            # path
-            if self._steps_built and self._legacy_dep \
-                    is not self.ex.deployment:
-                self._steps_built = False
-            self._legacy_dep = self.ex.deployment
         if not self._steps_built:
             self._build_steps()
-        if states is not None and not self.threading:
-            self.sites()                       # raises with guidance
         if states is None:
             states = self.states() if self.threading else {}
         self._last_states = states
@@ -339,10 +323,10 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--layers", type=int, default=None,
-                    help="reduced layer count override; below the arch's "
-                         "pattern length the layers unroll, enabling "
-                         "per-site deployment-state threading "
-                         "(--state-save/--state-load)")
+                    help="reduced layer count override (below the arch's "
+                         "pattern length the layers unroll; state "
+                         "threading and --state-save/--state-load work "
+                         "for scanned and unrolled layers alike)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
@@ -459,10 +443,6 @@ def main():
                         prompt_len=args.prompt_len, gen=args.gen,
                         temperature=args.temperature, seed=args.seed,
                         executor=ex)
-    if (args.state_save or args.state_load) and not sess.threading:
-        ap.error("--state-save/--state-load need unrolled analog layers: "
-                 f"pass --layers N with N < {len(sess.cfg.pattern)} "
-                 "(the arch's layer-pattern length)")
     from repro.obs import RecompileSentinel
     with RecompileSentinel(session=sess, executor=ex, strict=False,
                            label="serve") as sent:

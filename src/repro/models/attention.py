@@ -398,32 +398,56 @@ def attn_mixer(params, x, *, cfg: ArchConfig, pcfg: ParallelConfig, kind: str,
         return _out_proj(params, o, cfg), None
 
     if mode == "decode":
-        q = apply_rope(q, pos + jnp.zeros((B, 1), jnp.int32), base)
+        # pos is either a scalar (all rows at the same position -- single
+        # session) or a (B,) vector of per-slot positions (continuous
+        # batching: each request slot decodes at its own offset).
+        vec = getattr(pos, "ndim", 0) == 1
+        p2 = pos[:, None] if vec else pos + jnp.zeros((B, 1), jnp.int32)
+        q = apply_rope(q, p2, base)
         k, v = _project_kv(params, x, cfg)
-        k = apply_rope(k, pos + jnp.zeros((B, 1), jnp.int32), base)
+        k = apply_rope(k, p2, base)
         if kind == GLOBAL_ATTN:
             S_max = cache["k"].shape[1]
-            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                              (0, pos % S_max, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                              (0, pos % S_max, 0, 0))
-            if pcfg.decode_seq_shard:
-                o = sharded_flash_decode(q, ck, cv, pos, cfg, tp_axis=pcfg.tp_axis)
+            if vec:
+                rows = jnp.arange(B)
+                ck = cache["k"].at[rows, pos % S_max].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                cv = cache["v"].at[rows, pos % S_max].set(
+                    v[:, 0].astype(cache["v"].dtype))
+                o = decode_attention(
+                    q, ck, cv, jnp.arange(S_max)[None, :] <= pos[:, None], cfg)
             else:
-                o = decode_attention(q, ck, cv, jnp.arange(S_max) <= pos, cfg)
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, pos % S_max, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, pos % S_max, 0, 0))
+                if pcfg.decode_seq_shard:
+                    o = sharded_flash_decode(q, ck, cv, pos, cfg,
+                                             tp_axis=pcfg.tp_axis)
+                else:
+                    o = decode_attention(q, ck, cv, jnp.arange(S_max) <= pos, cfg)
         else:  # local / chunked ring buffer
             W = cache["k"].shape[1]
             slot = pos % W
-            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                              (0, slot, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                              (0, slot, 0, 0))
-            idx = jnp.arange(W)
-            abs_pos = pos - ((slot - idx) % W)        # position held in slot i
+            if vec:
+                rows = jnp.arange(B)
+                ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+                cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+                idx = jnp.arange(W)[None, :]
+                slot_b, pos_b = slot[:, None], pos[:, None]
+            else:
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+                idx = jnp.arange(W)
+                slot_b, pos_b = slot, pos
+            abs_pos = pos_b - ((slot_b - idx) % W)    # position held in slot i
             if kind == LOCAL_ATTN:
-                valid = (abs_pos >= 0) & (abs_pos > pos - W) & (abs_pos <= pos)
+                valid = (abs_pos >= 0) & (abs_pos > pos_b - W) & (abs_pos <= pos_b)
             else:  # chunked: same chunk as pos
-                valid = (abs_pos >= 0) & (abs_pos // W == pos // W) & (abs_pos <= pos)
+                valid = (abs_pos >= 0) & (abs_pos // W == pos_b // W) \
+                    & (abs_pos <= pos_b)
             o = decode_attention(q, ck, cv, valid, cfg)
         return _out_proj(params, o, cfg), {"k": ck, "v": cv}
 

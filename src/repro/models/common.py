@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
+import zlib
 from typing import Any, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -143,7 +144,11 @@ def init_params(key: jax.Array, schema, dtype=jnp.float32):
         schema, is_leaf=is_schema_leaf)
 
     def init_one(path, p: ParamSchema):
-        k = jax.random.fold_in(key, abs(hash(jax.tree_util.keystr(path))) % (2 ** 31))
+        # crc32, NOT hash(): str hashing is salted per interpreter run,
+        # which made every process draw DIFFERENT params for the same
+        # seed and broke cross-process round trips (--state-save/-load)
+        k = jax.random.fold_in(key, zlib.crc32(
+            jax.tree_util.keystr(path).encode()) & 0x7FFFFFFF)
         dt = p.dtype if p.dtype != jnp.float32 else dtype
         if p.init == "zeros":
             return jnp.zeros(p.shape, dt)
@@ -222,6 +227,42 @@ def dense(x: jax.Array, w: jax.Array, tag: str = "") -> jax.Array:
         if out is not None:
             return out
     return jnp.einsum("...k,kf->...f", x, w.astype(x.dtype))
+
+
+# --------------------------------------------------------------------------- #
+# Scan-states channel: lets the model's lax.scan over layer periods thread
+# per-period DeploymentStates as scan xs.  The provider (an analog
+# _StateBinding) exposes:
+#   recording          -- True while discovering call sites (period loop is
+#                         Python-unrolled so dense() sees concrete weights)
+#   scan_record(g, p)  -- context: record period p of scan group g
+#   scan_xs(g, n)      -- stacked per-period state pytree (leading axis n)
+#                         to feed lax.scan as xs, or None when group g has
+#                         no bound states
+#   scan_slice(g, ls)  -- context: serve the scan body's current period
+#                         from the traced per-period slice ls
+# The model never imports the analog layer; it only calls this protocol.
+# --------------------------------------------------------------------------- #
+class _ScanStatesState(threading.local):
+    def __init__(self):
+        self.provider = None
+
+
+_SCAN_STATES = _ScanStatesState()
+
+
+@contextlib.contextmanager
+def use_scan_states(provider):
+    prev = _SCAN_STATES.provider
+    _SCAN_STATES.provider = provider
+    try:
+        yield provider
+    finally:
+        _SCAN_STATES.provider = prev
+
+
+def scan_states_provider():
+    return _SCAN_STATES.provider
 
 
 # --------------------------------------------------------------------------- #

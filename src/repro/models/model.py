@@ -8,6 +8,7 @@ periods with stacked params, remainder layers are unrolled at the tail.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Any, Dict, Optional, Tuple
 
@@ -18,8 +19,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import (ArchConfig, ParallelConfig, BIDIR_ATTN)
 from repro.models.blocks import (apply_layer, layer_schema, layer_cache_schema)
 from repro.models.common import (ParamSchema, abstract_array, apply_norm,
-                                 current_mesh, dense, norm_schema, shard,
-                                 stack_schema, _sanitize_spec)
+                                 current_mesh, dense, norm_schema,
+                                 scan_states_provider, shard, stack_schema,
+                                 _sanitize_spec)
 
 NEG_INF = -1e30
 
@@ -111,25 +113,42 @@ def _remat_wrap(fn, pcfg: ParallelConfig):
 
 
 def _run_stack(stack_params, x, *, cfg: ArchConfig, pcfg: ParallelConfig,
-               pattern, tail_kinds, mode, caches, pos, positions, enc_out):
-    """Runs scan-over-periods + unrolled tail. Returns (x, aux, new_caches)."""
+               pattern, tail_kinds, mode, caches, pos, positions, enc_out,
+               scan_group: str = "dec"):
+    """Runs scan-over-periods + unrolled tail. Returns (x, aux, new_caches).
 
-    def period_fn(x, aux, lp, lc):
+    When a scan-states provider is installed (``models.common.
+    use_scan_states``; a serving session threading per-site analog
+    ``DeploymentState``s), the scanned periods cooperate with it: in
+    record mode the period loop is Python-unrolled so every ``dense()``
+    call site sees its CONCRETE per-period weight slice (call sites keyed
+    ``"{scan_group}.{period}:{tag}#{ordinal}"``); in serve mode the
+    provider's stacked per-period states ride the scan as xs, so each
+    period's sites resolve against traced state slices and the whole
+    stack stays ONE compiled step -- scanned models get the same
+    zero-recompile state swaps as unrolled ones."""
+    provider = scan_states_provider()
+
+    def period_fn(x, aux, lp, lc, ls=None):
         # The scan carry is saved per period by remat: keep it SEQ-SHARDED
         # over the model axis so the stash is L/period x (B,S/tp,D) per
         # device (Megatron-SP-style); gather once per period for compute.
-        if not pcfg.residual_seq_shard:
-            x = shard(x, "dp", None, None)
-        ncs = {}
-        for i, kind in enumerate(pattern):
-            x, nc, a = apply_layer(
-                lp[f"p{i}"], x, cfg=cfg, pcfg=pcfg, kind=kind, mode=mode,
-                cache=None if lc is None else lc.get(f"p{i}"),
-                pos=pos, positions=positions, enc_out=enc_out)
-            if nc is not None:
-                ncs[f"p{i}"] = nc
-            aux = aux + a
-        x = shard(x, "dp", "model", None)
+        ctx = (provider.scan_slice(scan_group, ls)
+               if provider is not None and ls is not None
+               else contextlib.nullcontext())
+        with ctx:
+            if not pcfg.residual_seq_shard:
+                x = shard(x, "dp", None, None)
+            ncs = {}
+            for i, kind in enumerate(pattern):
+                x, nc, a = apply_layer(
+                    lp[f"p{i}"], x, cfg=cfg, pcfg=pcfg, kind=kind, mode=mode,
+                    cache=None if lc is None else lc.get(f"p{i}"),
+                    pos=pos, positions=positions, enc_out=enc_out)
+                if nc is not None:
+                    ncs[f"p{i}"] = nc
+                aux = aux + a
+            x = shard(x, "dp", "model", None)
         return x, aux, (ncs if ncs else None)
 
     period = _remat_wrap(period_fn, pcfg)
@@ -138,28 +157,56 @@ def _run_stack(stack_params, x, *, cfg: ArchConfig, pcfg: ParallelConfig,
 
     scan_params = stack_params["scan"]
     if scan_params:
-        if mode == "decode":
-            def body(carry, xs):
-                lp, lc = xs
-                x, aux = carry
-                x, aux, nc = period(x, aux, lp, lc)
-                return (x, aux), nc
-            (x, aux), ys = jax.lax.scan(body, (x, aux),
-                                        (scan_params, caches["scan"]))
-            new_caches["scan"] = ys
-        elif mode == "prefill":
-            def body(carry, lp):
-                x, aux = carry
-                x, aux, nc = period(x, aux, lp, None)
-                return (x, aux), nc
-            (x, aux), ys = jax.lax.scan(body, (x, aux), scan_params)
-            new_caches["scan"] = ys
+        n = jax.tree.leaves(scan_params)[0].shape[0]
+        if provider is not None and provider.recording:
+            # call-site discovery: unroll the periods so dense() records
+            # concrete weight slices under stable per-period site keys
+            # (runs under eval_shape -- activations are abstract, the
+            # closed-over params and their slices are concrete)
+            ncs = []
+            for p in range(n):
+                # the params are concrete (closed over); slice them OUT of
+                # the ambient trace so dense() records real arrays, not
+                # tracers that would leak out of the eval_shape scope
+                with jax.ensure_compile_time_eval():
+                    lp = jax.tree.map(lambda v: v[p], scan_params)
+                lc = (jax.tree.map(lambda v: v[p], caches["scan"])
+                      if mode == "decode" else None)
+                with provider.scan_record(scan_group, p):
+                    x, aux, nc = period_fn(x, aux, lp, lc)
+                ncs.append(nc)
+            if mode in ("prefill", "decode") and ncs[0] is not None:
+                new_caches["scan"] = jax.tree.map(
+                    lambda *vs: jnp.stack(vs), *ncs)
         else:
-            def body(carry, lp):
-                x, aux = carry
-                x, aux, _ = period(x, aux, lp, None)
-                return (x, aux), None
-            (x, aux), _ = jax.lax.scan(body, (x, aux), scan_params)
+            xs_states = (provider.scan_xs(scan_group, n)
+                         if provider is not None else None)
+            if mode == "decode":
+                def body(carry, xs):
+                    lp, lc, ls = xs
+                    x, aux = carry
+                    x, aux, nc = period(x, aux, lp, lc, ls)
+                    return (x, aux), nc
+                (x, aux), ys = jax.lax.scan(
+                    body, (x, aux), (scan_params, caches["scan"], xs_states))
+                new_caches["scan"] = ys
+            elif mode == "prefill":
+                def body(carry, xs):
+                    lp, ls = xs
+                    x, aux = carry
+                    x, aux, nc = period(x, aux, lp, None, ls)
+                    return (x, aux), nc
+                (x, aux), ys = jax.lax.scan(body, (x, aux),
+                                            (scan_params, xs_states))
+                new_caches["scan"] = ys
+            else:
+                def body(carry, xs):
+                    lp, ls = xs
+                    x, aux = carry
+                    x, aux, _ = period(x, aux, lp, None, ls)
+                    return (x, aux), None
+                (x, aux), _ = jax.lax.scan(body, (x, aux),
+                                           (scan_params, xs_states))
 
     for i, kind in enumerate(tail_kinds):
         lc = None
@@ -191,7 +238,7 @@ def encode(params, enc_frames, *, cfg: ArchConfig, pcfg: ParallelConfig):
     x, aux, _ = _run_stack(
         {"scan": params["encoder"]["scan"], "tail": {}}, x, cfg=cfg, pcfg=pcfg,
         pattern=(BIDIR_ATTN,), tail_kinds=(), mode="train", caches=None,
-        pos=None, positions=None, enc_out=None)
+        pos=None, positions=None, enc_out=None, scan_group="enc")
     return apply_norm(params["encoder"]["final_norm"], x, cfg.norm), aux
 
 
@@ -316,8 +363,9 @@ def prefill(params, tokens, *, cfg: ArchConfig, pcfg: ParallelConfig,
 
 def decode_step(params, token, cache, pos, *, cfg: ArchConfig,
                 pcfg: ParallelConfig, compute_dtype=jnp.bfloat16):
-    """token: (B,1) int32; pos: () int32 -- position being written.
-    Returns (logits (B,Vp), new_cache)."""
+    """token: (B,1) int32; pos: () int32 -- position being written -- or
+    (B,) int32 for per-row positions (continuous batching: each request
+    slot decodes at its own offset).  Returns (logits (B,Vp), new_cache)."""
     h, new_cache, _ = forward(params, token, cfg=cfg, pcfg=pcfg, mode="decode",
                               cache=cache, pos=pos, compute_dtype=compute_dtype)
     logits = compute_logits(params, h, cfg)[:, 0]

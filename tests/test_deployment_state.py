@@ -204,6 +204,81 @@ def test_deployment_npz_roundtrip(tmp_path):
 
 
 # --------------------------------------------------------------------------- #
+# Scan-threaded serving (per-period states as lax.scan xs)
+# --------------------------------------------------------------------------- #
+def _scanned_session(ex, batch=2, gen=4, seed=0):
+    """A reduced gemma3-1b at 12 layers: two scan periods, so the
+    per-period DeploymentStates ride the layer scan as stacked xs."""
+    from repro.launch.serve import ServeSession
+    sess = ServeSession("gemma3-1b", reduced=True, reduced_layers=12,
+                        batch=batch, prompt_len=8, gen=gen, seed=seed,
+                        executor=ex)
+    assert any(k.startswith("dec.") for k in sess.sites()), \
+        "arch must actually be scanned (per-period 'dec.{p}:' site keys)"
+    return sess
+
+
+def test_scanned_session_swaps_compile_once_logits_shift():
+    """Corner -> age -> remap swaps on a SCANNED model keep one compiled
+    step pair (the states are scan xs, not trace constants) and take
+    effect at the logits level from the very next generate()."""
+    ex = _executor()
+    sess = _scanned_session(ex)
+    outs = [sess.generate()["logits"]]                        # ideal
+    ex.deploy(scenario=get_scenario("stressed"), key=jax.random.PRNGKey(1))
+    outs.append(sess.generate()["logits"])                    # corner
+    ex.deploy(age=2.592e6)
+    outs.append(sess.generate()["logits"])                    # age
+    ex.deploy(remap=True)
+    sess.generate()                                           # remap swap
+    assert sess.prefill_traces == 1 and sess.decode_traces == 1
+    assert not np.array_equal(outs[0], outs[1])               # corner bit
+    assert not np.array_equal(outs[1], outs[2])               # aging bit
+
+
+def test_scanned_threaded_ideal_matches_in_trace_hook_path():
+    """Threading per-period ideal states through the scan xs reproduces
+    the plain in-trace dense-hook path bit-for-bit -- threading is a
+    pure re-plumbing of WHERE the state enters, never of the math."""
+    from repro.models.common import use_dense_hook
+
+    sess = _scanned_session(_executor())
+    out = sess.generate()
+
+    ex_ref = _executor()
+    ref = _scanned_session(ex_ref)
+    ref._bound = lambda states: use_dense_hook(ex_ref.hook)   # no threading
+    out_ref = ref.generate()
+    np.testing.assert_array_equal(out["tokens"], out_ref["tokens"])
+    np.testing.assert_array_equal(out["logits"], out_ref["logits"])
+
+
+def test_scanned_deployment_npz_roundtrip_through_session(tmp_path):
+    """--state-save / --state-load for a scanned arch: per-period states
+    (stacked scan leaves) survive npz and serve bit-identically from a
+    fresh executor + session."""
+    from repro.core.deployment import load_deployment
+
+    ex = _executor()
+    ex.deploy(scenario=scenario_at_age(get_scenario("stressed"), 8.64e4),
+              key=jax.random.PRNGKey(5), remap=True)
+    sess = _scanned_session(ex)
+    out = sess.generate()
+    path = str(tmp_path / "scan_dep.npz")
+    sess.save_deployment(path)
+
+    loaded, dep = load_deployment(path)
+    assert set(loaded) == set(sess.sites())
+    ex2 = _executor()
+    ex2.deploy(scenario=dep.scenario, key=dep.key, remap=dep.remap,
+               states=loaded)
+    sess2 = _scanned_session(ex2)
+    out2 = sess2.generate(states=loaded)
+    np.testing.assert_array_equal(out2["tokens"], out["tokens"])
+    np.testing.assert_array_equal(out2["logits"], out["logits"])
+
+
+# --------------------------------------------------------------------------- #
 # Deprecation shims
 # --------------------------------------------------------------------------- #
 def test_setter_shims_warn_and_delegate_exactly():

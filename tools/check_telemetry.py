@@ -14,9 +14,19 @@ and feeds the exported snapshot through this checker
     (``obs_sentinel_checks_total{outcome="violation"}``) fails CI
     straight from the artifact.
 
+Two profiles select which require list applies (``forbid_nonzero``
+applies to both):
+
+  * ``session`` (default) -- a ``ServeSession`` serve (the ``require``
+    schema key; CI telemetry-smoke);
+  * ``serve``   -- the continuous-batching engine (``require_serve``;
+    fed by ``benchmarks/bench_serve.py --telemetry`` in the CI
+    serve-smoke job).
+
 Exit 1 with a per-rule report on any violation.
 
   PYTHONPATH=src python tools/check_telemetry.py SNAP.json [--schema JSON]
+      [--profile session|serve]
 """
 from __future__ import annotations
 
@@ -28,14 +38,17 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_SCHEMA = os.path.join(REPO, "tools", "telemetry_schema.json")
 
 
-def check(snap: dict, schema: dict) -> list:
+PROFILES = {"session": "require", "serve": "require_serve"}
+
+
+def check(snap: dict, schema: dict, profile: str = "session") -> list:
     """All violations of ``schema`` in ``snap`` (empty = healthy)."""
     errs = []
     metrics = snap.get("metrics")
     if not isinstance(metrics, dict):
         return [f"snapshot has no 'metrics' mapping "
                 f"(schema={snap.get('schema')!r})"]
-    for rule in schema.get("require", []):
+    for rule in schema.get(PROFILES[profile], []):
         name = rule["metric"]
         m = metrics.get(name)
         if m is None:
@@ -73,12 +86,16 @@ def main(argv=None) -> int:
     ap.add_argument("snapshot", help="telemetry snapshot JSON to validate")
     ap.add_argument("--schema", default=DEFAULT_SCHEMA,
                     help="schema file (default: tools/telemetry_schema.json)")
+    ap.add_argument("--profile", default="session", choices=sorted(PROFILES),
+                    help="which require list applies: 'session' (a "
+                         "ServeSession serve) or 'serve' (the "
+                         "continuous-batching engine)")
     args = ap.parse_args(argv)
     with open(args.snapshot) as f:
         snap = json.load(f)
     with open(args.schema) as f:
         schema = json.load(f)
-    errs = check(snap, schema)
+    errs = check(snap, schema, profile=args.profile)
     if errs:
         print(f"telemetry snapshot FAILED {len(errs)} schema check(s):")
         for e in errs:
@@ -86,7 +103,7 @@ def main(argv=None) -> int:
         return 1
     n = len(snap.get("metrics", {}))
     print(f"telemetry snapshot ok: {n} metrics, schema "
-          f"v{schema.get('version')}")
+          f"v{schema.get('version')}, profile {args.profile}")
     return 0
 
 

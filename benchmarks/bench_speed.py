@@ -137,6 +137,22 @@ def run(batch: int = 2048, seed: int = 0, tcfg=QUICK, iters: int = 3,
     sys_rows["emulator_pallas_unified"] = dt * 1e6
     dt, _ = timed(jax.jit(lambda a: a @ w), xin, iters=iters)
     sys_rows["digital"] = dt * 1e6
+    # tensor-parallel serving row (docs/parallel.md): the same matmul
+    # through a (2, 4) data x model mesh.  Only measurable when the
+    # process has >= 8 devices (the CI multidevice-smoke job forces
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8).  NOTE: forced
+    # host devices multiplex the host's physical cores -- on a
+    # single-core host the row records the partitioning OVERHEAD, not a
+    # speedup; a real >= 1.5x needs >= 8 real cores/devices
+    # (docs/performance.md).
+    if len(jax.devices()) >= 8:
+        from repro.parallel.sharding import serve_mesh
+        ex_sh = AnalogExecutor(
+            acfg=dataclasses.replace(acfg, backend="emulator"), geom=geom,
+            cp=cp, emulator_params=res.params, mesh=serve_mesh(2, 4))
+        fn = jax.jit(lambda a: ex_sh.matmul(a, w, "bench"))
+        dt, _ = timed(fn, xin, iters=iters)
+        sys_rows["emulator_sharded"] = dt * 1e6
     return rows, sys_rows
 
 

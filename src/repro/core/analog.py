@@ -79,6 +79,9 @@ from repro.nonideal.perturb import (apply_read_noise, perturb_plan,
 from repro.nonideal.scenario import (N_SCENARIO_FEATURES, Scenario,
                                      scenario_features)
 from repro.obs import OBS
+from repro.parallel.sharding import (DATA_AXIS, MODEL_AXIS, lattice_scheme,
+                                     local_lattice, mesh_shape,
+                                     shard_deployment_state, state_pspecs)
 
 _UNSET = object()
 
@@ -262,7 +265,8 @@ class AnalogExecutor:
                  use_pallas: Optional[bool] = None,
                  scenario: Optional[Scenario] = None,
                  scenario_key: Optional[jax.Array] = None,
-                 fault_remap: bool = False):
+                 fault_remap: bool = False,
+                 mesh=None, shard_scheme: str = "auto"):
         self.acfg = acfg
         self.geom = geom
         self.cp = cp if cp is not None else CircuitParams()
@@ -273,6 +277,12 @@ class AnalogExecutor:
         self.fast_path = fast_path            # cached-plan blockified path
         self.fast_chunk = fast_chunk          # None = autotuned/heuristic
         self.use_pallas = use_pallas          # None = auto (TPU only)
+        # tensor-parallel serving (repro.parallel.sharding; docs/parallel.md):
+        # a (data, model) mesh shards batch rows and the tile lattice; the
+        # scheme ('auto' -> lattice_scheme, or forced 'row'/'col'/'none')
+        # picks which lattice axis the model axis partitions
+        self.mesh = mesh
+        self.shard_scheme = shard_scheme
 
         self._plans: Dict[str, Tuple[jax.Array, ConductancePlan]] = {}
         # ONE jit-cache family: tag -> (w, r_line_scale, fn(x2, state))
@@ -506,14 +516,17 @@ class AnalogExecutor:
         they carry their saved affine and read key."""
         dep = self._deployment
         if dep.states is not None and tag in dep.states:
-            return dep.states[tag]
+            # preloaded states still get mesh placement: this is the
+            # re-shard-on-load path for deployments saved under a
+            # different (or no) mesh shape (docs/parallel.md)
+            return self.shard_state(dep.states[tag])
         st = self._base_state(tag, w)
         a, b = self.calibration.get(tag, (1.0, 0.0))
         st = st.with_calibration(a, b)
         sc = dep.scenario
         if sc is not None and sc.has_read_noise:
             st = st.with_read_key(self._next_read_key())
-        return st
+        return self.shard_state(st)
 
     def _inline_state(self, tag: str, w: jax.Array, a, b) -> DeploymentState:
         """State for the in-trace path (enclosing jit / grad / anonymous
@@ -690,6 +703,182 @@ class AnalogExecutor:
         return jnp.where(u01 > 0.0, t + u01 * (1.0 - t), 0.0)
 
     # ------------------------------------------------------------------ #
+    # Tensor-parallel serving (docs/parallel.md)
+    # ------------------------------------------------------------------ #
+    def _scheme_for(self, nb: int, no: int) -> Optional[str]:
+        """Lattice-sharding scheme for a (NB, NO) plan on this executor's
+        mesh: 'auto' defers to ``lattice_scheme`` (col preferred -- it is
+        bit-identical to the replicated path); a forced scheme is
+        validated against the model-axis divisibility it requires."""
+        _, tp = mesh_shape(self.mesh)
+        if tp <= 1:
+            return None
+        if self.shard_scheme == "auto":
+            return lattice_scheme(nb, no, tp)
+        s = None if self.shard_scheme == "none" else self.shard_scheme
+        if s not in (None, "row", "col"):
+            raise ValueError(f"shard_scheme={self.shard_scheme!r} "
+                             "(expected 'auto', 'row', 'col' or 'none')")
+        if s == "col" and no % tp:
+            raise ValueError(
+                f"shard_scheme='col' needs NO % tp == 0 (NO={no}, tp={tp})")
+        if s == "row" and nb % tp:
+            raise ValueError(
+                f"shard_scheme='row' needs NB % tp == 0 (NB={nb}, tp={tp})")
+        return s
+
+    def shard_state(self, st: DeploymentState) -> DeploymentState:
+        """Place a ``DeploymentState``'s leaves on the serving mesh under
+        the lattice partition specs (no-op without a mesh).  Idempotent,
+        and re-shards states materialized elsewhere -- including host
+        arrays npz-loaded from a deployment saved under a DIFFERENT mesh
+        shape (``load_deployment(..., executor=...)``)."""
+        if self.mesh is None:
+            return st
+        nb, no = int(st.gf.shape[0]), int(st.gf.shape[1])
+        return shard_deployment_state(st, self.mesh,
+                                      self._scheme_for(nb, no))
+
+    def shard_states(self, states: Dict[str, DeploymentState]
+                     ) -> Dict[str, DeploymentState]:
+        """``shard_state`` over a per-site state dict (serve sessions,
+        loaded deployments)."""
+        return {k: self.shard_state(v) for k, v in states.items()}
+
+    def _sharded_matmul(self, x2d: jax.Array, x_scale: jax.Array,
+                        plan: ConductancePlan, tag: str,
+                        eparams: Optional[dict],
+                        sfeat: Optional[jax.Array]) -> jax.Array:
+        """The dp x tp ``shard_map`` evaluation of one analog matmul.
+
+        Everything order-sensitive stays OUTSIDE the shard_map exactly as
+        the replicated path computes it -- the global drive scale, the
+        wordline tiling, the read-noise draw on the FULL conductance field
+        (so noise values are mesh-invariant), the scenario shift, and the
+        fault-remap output gather (post-psum, on full columns).  Inside,
+        each shard evaluates its lattice slice as a local
+        ``ConductancePlan`` view (``with_lattice``) -- blocks are
+        independent across the lattice, so the per-shard math is the
+        replicated math restricted to a slice -- and ONE ``psum`` over
+        the model axis completes the digital bitline accumulation:
+
+          col: full per-column NB reduction locally, scatter into the
+               owned column range, psum against exact zeros elsewhere
+               (bit-identical to the replicated path);
+          row: per-shard partial bitline sums, psum finishes the
+               reduction (float-tolerance: the psum re-brackets the f32
+               accumulation).
+
+        Returns the calibrand voltages (B, N) with the output permutation
+        (or padded-column slice) already applied."""
+        from repro.parallel.collectives import shard_map_compat
+        from jax.sharding import PartitionSpec as P
+
+        mesh = self.mesh
+        dp, tp = mesh_shape(mesh)
+        scheme = self._scheme_for(plan.NB, plan.NO)
+        nb_l, no_l = local_lattice(plan.NB, plan.NO, tp, scheme)
+        gf_spec = state_pspecs(scheme)["gf"]
+        no, NOno = plan.no, plan.NO * plan.no
+        B = x2d.shape[0]
+
+        fast = self.acfg.backend == "emulator" and self.fast_path
+        if fast:
+            aux = self._blocklast_aux(eparams)
+            ep = self.emulator_params if eparams is None else eparams
+            shift = (sfeat @ aux["f0_scen"]
+                     if sfeat is not None and "f0_scen" in aux else None)
+            u = plan.tile_v(self._drive01(jnp.abs(x2d) / x_scale), 1.0)
+            pos = plan.tile_v((x2d > 0).astype(jnp.float32), 1.0)
+            drives, R = (u, pos), B
+        else:
+            # the rails ride as SEPARATE operands, concatenated per-shard
+            # inside the body: a batch-axis concat feeding a shard_map
+            # operand is miscompiled by GSPMD on this jax version (each
+            # row comes back multiplied by the model-axis size -- see
+            # tests/test_multidevice.py), while ops inside the manual
+            # region are plain local computations
+            vp = plan.tile_v(self._drive01(jnp.clip(x2d, 0.0, None)
+                                           / x_scale), 1.0)
+            vn = plan.tile_v(self._drive01(jnp.clip(-x2d, 0.0, None)
+                                           / x_scale), 1.0)
+            ep, shift = eparams, None
+            drives, R = (vp, vn), B
+
+        # pad batch rows to a dp multiple with zero rows -- bit-neutral:
+        # rows are independent and the drive scale is already fixed
+        Rp = -(-R // dp) * dp
+        if Rp != R:
+            drives = tuple(
+                jnp.pad(v, ((0, Rp - R),) + ((0, 0),) * (v.ndim - 1))
+                for v in drives)
+        # row scheme shards the drives' NB axis alongside gf; col/None
+        # replicate them over model (columns share the wordline drive)
+        d_spec = P(DATA_AXIS, MODEL_AXIS) if scheme == "row" \
+            else P(DATA_AXIS)
+
+        def _combine(y_cols, Ml):
+            # y_cols: (Ml, no_l * no) -- this shard's full-NB column slice
+            # (col) or all-column bitline partial (row / replicated)
+            if scheme == "col":
+                i = jax.lax.axis_index(MODEL_AXIS)
+                y_cols = jax.lax.dynamic_update_slice(
+                    jnp.zeros((Ml, NOno), y_cols.dtype), y_cols,
+                    (0, i * no_l * no))
+            if scheme is not None:
+                y_cols = jax.lax.psum(y_cols, MODEL_AXIS)  # THE collective
+            return y_cols
+
+        # bodies take every traced quantity as an explicit arg (shard_map
+        # rejects closed-over tracers) and rebuild the stage-collapsed
+        # weights from the raw param arrays inside (aux carries static
+        # kernel widths that cannot ride a PartitionSpec'd pytree)
+        if fast:
+            from repro.kernels.emulator_block import emulator_block_unified
+
+            def body(u, pos, gf, ep, *sh):
+                lp = plan.with_lattice(gf, self.acfg, NB=nb_l, NO=no_l)
+                laux = conv4xbar.blocklast_weights(ep, self.geom)
+                lpre = conv4xbar.blocklast_precompute(laux, lp.g_norm)
+                y2 = emulator_block_unified(
+                    laux, lpre, u, pos, shift=sh[0] if sh else None,
+                    use_pallas=self.use_pallas, chunk=self.fast_chunk,
+                    tune=False)
+                Ml = u.shape[0]
+                asm = lambda o: o.reshape(Ml, nb_l, no_l * no).sum(axis=1)
+                return _combine(asm(y2[0]) - asm(y2[1]), Ml)
+
+            args = drives + (plan.g_feat, ep)
+            in_specs = (d_spec, d_spec, gf_spec, P())
+            if shift is not None:
+                args += (shift,)
+                in_specs += (P(),)
+        else:
+            v_read = self.acfg.v_read
+
+            def body(vp, vn, gf, ep, sf):
+                lp = plan.with_lattice(gf, self.acfg, NB=nb_l, NO=no_l)
+                # both rails in ONE blockified batch, as the replicated
+                # path stacks them (local concat: safe inside the region)
+                vb = jnp.concatenate([vp, vn], axis=0)
+                x = lp.build_x(vb * v_read)
+                outs = self.block_outputs(x.astype(jnp.float32), ep, sf)
+                Ml = vp.shape[0]
+                y = outs.reshape(2 * Ml, nb_l, no_l * no).sum(axis=1)
+                return _combine(y[:Ml] - y[Ml:], Ml)
+
+            args = drives + (plan.g_feat, ep, sfeat)
+            in_specs = (d_spec, d_spec, gf_spec, P(), P())
+
+        y = shard_map_compat(body, mesh, in_specs, P(DATA_AXIS))(*args)
+        if Rp != R:
+            y = y[:R]
+        # logical column order: the remap gather runs post-psum on the
+        # full output, exactly as plan.assemble orders it
+        return (jnp.take(y, plan.out_perm, axis=1)
+                if plan.out_perm is not None else y[:, :plan.N])
+
+    # ------------------------------------------------------------------ #
     def raw_matmul(self, x2d: jax.Array, w: jax.Array, tag: str = "",
                    plan: Optional[ConductancePlan] = None,
                    read_key: Optional[jax.Array] = None,
@@ -734,12 +923,33 @@ class AnalogExecutor:
                     sfeat = self._scenario_features()
         if read_key is not None:
             rs = 0.0 if read_sigma is None else read_sigma
-            plan = plan.with_g(
-                apply_read_noise(plan.g_feat, self.acfg, rs, read_key),
-                self.acfg)
+            if self.mesh is not None and mesh_shape(self.mesh) != (1, 1):
+                # The read-noise draw must be MESH-INVARIANT: jax's
+                # default (non-partitionable) threefry changes values
+                # when GSPMD partitions the counter computation, and
+                # even with a pinned draw a partitioned elementwise
+                # application leaves ulp-level fusion differences.  So
+                # the whole noise block -- inputs, draw, output -- runs
+                # replicated (P()) and the shard_map operand re-slices
+                # the result; a deployment then serves the same noisy
+                # conductances on every mesh shape, including none
+                # (docs/parallel.md).
+                from jax.sharding import NamedSharding
+                from jax.sharding import PartitionSpec as P
+                rep = NamedSharding(self.mesh, P())
+                wsc = jax.lax.with_sharding_constraint
+                gn = wsc(apply_read_noise(
+                    wsc(plan.g_feat, rep), self.acfg,
+                    wsc(jnp.asarray(rs, jnp.float32), rep), read_key), rep)
+            else:
+                gn = apply_read_noise(plan.g_feat, self.acfg, rs, read_key)
+            plan = plan.with_g(gn, self.acfg)
         B = x2d.shape[0]
         x2d = x2d.astype(jnp.float32)
         x_scale = jnp.maximum(jnp.max(jnp.abs(x2d)), 1e-9)
+        if self.mesh is not None and mesh_shape(self.mesh) != (1, 1):
+            return self._sharded_matmul(x2d, x_scale, plan, tag,
+                                        eparams, sfeat), x_scale
         if self.acfg.backend == "emulator" and self.fast_path:
             from repro.kernels.emulator_block import emulator_block_unified
             aux = self._blocklast_aux(eparams)

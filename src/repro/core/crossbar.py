@@ -151,6 +151,24 @@ class ConductancePlan:
         permuted group layout (see `nonideal.perturb.remap_plan`)."""
         return dataclasses.replace(self, out_perm=out_perm)
 
+    def with_lattice(self, g_feat: jax.Array, acfg: AnalogConfig, *,
+                     NB: Optional[int] = None,
+                     NO: Optional[int] = None) -> "ConductancePlan":
+        """A LOCAL view of this plan over a slice of the tile lattice:
+        same geometry (rows/D/no), a reduced block-group (NB) and/or
+        output-group (NO) count, and the matching ``g_feat`` slice.
+        ``repro.parallel.sharding`` builds one per shard inside the
+        executor's ``shard_map`` body -- every backend evaluates blocks
+        independently, so computing on a lattice slice is bit-identical
+        to slicing the full computation.  The output permutation is
+        dropped: the fault-remap gather runs on the full post-psum
+        output, never on a shard-local slice."""
+        g_norm = (g_feat - acfg.g_min) / (acfg.g_max - acfg.g_min)
+        return dataclasses.replace(
+            self, NB=self.NB if NB is None else NB,
+            NO=self.NO if NO is None else NO,
+            g_feat=g_feat, g_norm=g_norm, out_perm=None)
+
     def with_g(self, g_feat: jax.Array, acfg: AnalogConfig) -> "ConductancePlan":
         """Same block layout, different conductances (repro.nonideal injects
         perturbed devices here).  g_norm is rederived so every consumer --

@@ -228,10 +228,19 @@ def save_deployment(path: str, states: Dict[str, DeploymentState],
     return path
 
 
-def load_deployment(path: str
+def load_deployment(path: str, executor=None
                     ) -> Tuple[Dict[str, DeploymentState], Deployment]:
     """Inverse of ``save_deployment``: ``(states, deployment)`` with the
-    loaded states attached to the returned spec (``deployment.states``)."""
+    loaded states attached to the returned spec (``deployment.states``).
+
+    With ``executor`` given (an ``AnalogExecutor``), the loaded host
+    arrays are placed straight onto the executor's serving mesh under
+    the lattice partition specs (``executor.shard_states``).  The npz
+    records VALUES, not placements, so a deployment saved under one mesh
+    shape re-shards cleanly onto any other -- the elastic-restart
+    semantics for serving fleets (docs/parallel.md).  Without
+    ``executor`` (or without a mesh) this is a no-op and the executor
+    re-shards lazily in ``state_for``."""
     data = np.load(path, allow_pickle=True)
     eparams = {k[len(_EP_PREFIX):]: jnp.asarray(data[k])
                for k in data.files if k.startswith(_EP_PREFIX)}
@@ -246,5 +255,7 @@ def load_deployment(path: str
             v = jnp.asarray(data[f"{tag}::{f}"])
             kw[f] = v
         states[tag] = DeploymentState(eparams=dict(eparams), **kw)
+    if executor is not None:
+        states = executor.shard_states(states)
     dep = Deployment.from_spec_json(str(data[_SPEC_KEY]))
     return states, dep.replace(states=states)

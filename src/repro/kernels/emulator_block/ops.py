@@ -56,6 +56,7 @@ def emulator_block_unified(aux: dict, pre: dict, u01: jax.Array,
                            chunk: int | None = None,
                            block_m: int | None = None,
                            interpret: bool | None = None,
+                           tune: bool = True,
                            compute_dtype=jnp.float32) -> jax.Array:
     """Single entry point for the emulator serving math, every corner.
 
@@ -70,7 +71,13 @@ def emulator_block_unified(aux: dict, pre: dict, u01: jax.Array,
 
     ``block_m``/``chunk`` left as None are resolved by the autotuner
     (``kernels.autotune``) when sweeping is enabled, else fall back to
-    heuristic defaults (min(128, M) / 2).  Returns (2, M*NB*NO, O).
+    heuristic defaults (min(128, M) / 2).  ``tune=False`` skips the
+    autotuner entirely and takes the heuristic defaults directly -- the
+    executor's ``shard_map`` bodies run per-shard lattice slices whose
+    shapes the tuner never measured, and a sweep (timed compiles) must
+    not fire inside a collective trace.  Block-size choice is a pure
+    scheduling decision either way: outputs are bit-identical in f32.
+    Returns (2, M*NB*NO, O).
     """
     M = u01.shape[0]
     g0k = pre["g0k"]
@@ -82,6 +89,8 @@ def emulator_block_unified(aux: dict, pre: dict, u01: jax.Array,
     if use_pallas:
         if interpret is None:
             interpret = not _on_tpu()
+        if block_m is None and not tune:
+            block_m = min(128, M)
         if block_m is None:
             key_parts = (M, NB, NO, D, W, G, k1, C0, n_out,
                          jnp.dtype(compute_dtype).name, interpret)
@@ -115,6 +124,8 @@ def emulator_block_unified(aux: dict, pre: dict, u01: jax.Array,
             aux, pre, u01, pos01, shift=shift, block_m=block_m,
             interpret=interpret, compute_dtype=compute_dtype)
 
+    if chunk is None and not tune:
+        chunk = 2
     if chunk is None:
         key_parts = (M, NB, NO, D, W, G, k1, C0, n_out)
         state = {}             # lazy dummies + per-config compiled fns

@@ -279,8 +279,15 @@ class ContinuousBatchEngine:
     def refresh_states(self, states: Optional[dict] = None) -> None:
         """Re-materialize per-site ``DeploymentState``s from the
         session's executor (call after ``ex.deploy(...)`` mid-run: the
-        swap applies from the next tick, with zero recompiles)."""
+        swap applies from the next tick, with zero recompiles).
+
+        Explicitly passed ``states`` (e.g. host arrays from
+        ``load_deployment``) are placed onto the executor's serving mesh
+        first, so a mid-run hot-swap keeps the compiled tick's input
+        shardings stable (docs/parallel.md)."""
         if states is not None:
+            if self.session.threading:
+                states = self.session.ex.shard_states(states)
             self._states = states
         else:
             self._states = (self.session.states()

@@ -34,3 +34,10 @@ def make_mesh_for(devices: Optional[int] = None, *, model_axis: int = 1) -> Mesh
     n = devices if devices is not None else len(jax.devices())
     assert n % model_axis == 0, (n, model_axis)
     return _make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def make_serve_mesh(dp: int = 1, tp: int = 1) -> Mesh:
+    """(data, model) serving mesh for the tensor-parallel analog plane
+    (``repro.parallel.sharding``; the ``serve --mesh DP,TP`` flag)."""
+    from repro.parallel.sharding import serve_mesh
+    return serve_mesh(dp, tp)

@@ -331,6 +331,14 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--mesh", default=None, metavar="DP,TP",
+                    help="serve the analog plane tensor-parallel on a "
+                         "(data, model) mesh of this shape: DeploymentState "
+                         "leaves shard over the tile lattice and the bitline "
+                         "reduction runs as one psum (docs/parallel.md); "
+                         "requires a non-digital --analog-backend and "
+                         "DP*TP available devices (combine with --devices "
+                         "to force host devices)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0,
                     help="PRNG seed; init/prompt/sampling/device-noise each "
@@ -385,6 +393,9 @@ def main():
             and args.analog_backend == "digital":
         ap.error("--state-save/--state-load require a non-digital "
                  "--analog-backend")
+    if args.mesh is not None and args.analog_backend == "digital":
+        ap.error("--mesh shards the analog plane and requires a "
+                 "non-digital --analog-backend")
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -398,6 +409,15 @@ def main():
     # SEMULATOR serving path; uses the cached-conductance-plan fast path)
     ex = None
     loaded_states = None
+    mesh = None
+    if args.mesh is not None:
+        from repro.launch.mesh import make_serve_mesh
+        try:
+            dp, tp = (int(v) for v in args.mesh.split(","))
+        except ValueError:
+            ap.error(f"--mesh expects DP,TP (got {args.mesh!r})")
+        mesh = make_serve_mesh(dp, tp)
+        print(f"serving mesh: (data, model) = ({dp}, {tp})")
     if args.analog_backend != "digital":
         import numpy as np
         from repro.configs.base import AnalogConfig
@@ -413,7 +433,7 @@ def main():
         ex = AnalogExecutor(
             acfg=AnalogConfig(enabled=True, backend=args.analog_backend,
                               layers=("mlp",)),
-            geom=CASE_A, emulator_params=eparams)
+            geom=CASE_A, emulator_params=eparams, mesh=mesh)
         if args.conditioned_emulator:
             from repro.nonideal import (N_SCENARIO_FEATURES,
                                         SCENARIO_FEATURE_NAMES)
@@ -426,7 +446,9 @@ def main():
                   f"features ({', '.join(SCENARIO_FEATURE_NAMES[:4])}, ...)")
         if args.state_load:
             from repro.core.deployment import load_deployment
-            loaded_states, dep = load_deployment(args.state_load)
+            # executor=ex: loaded host arrays land straight on the serving
+            # mesh (re-shard-on-load; the npz records values, not placements)
+            loaded_states, dep = load_deployment(args.state_load, executor=ex)
             ex.deploy(scenario=dep.scenario, key=dep.key, remap=dep.remap,
                       states=dep.states)
             print(f"deployment restored: {len(loaded_states)} call sites "

@@ -1,2 +1,7 @@
 from repro.parallel.collectives import (int8_compress, int8_decompress,
                                         compressed_psum)  # noqa: F401
+from repro.parallel.sharding import (DATA_AXIS, MODEL_AXIS,  # noqa: F401
+                                     lattice_scheme, local_lattice,
+                                     mesh_shape, serve_mesh,
+                                     shard_deployment_state,
+                                     shard_output_slices, state_pspecs)

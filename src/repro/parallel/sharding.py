@@ -1,0 +1,179 @@
+"""Tensor-parallel partitioning of the analog serving plane.
+
+Every ``DeploymentState`` used to be replicated per host: the conductance
+field ``gf`` -- by far the largest leaf, ``(NB, NO, D, H, W)`` over the
+whole tile lattice -- lived in full on every device, capping both layer
+width and fleet size.  This module gives the deployment-state leaves
+``PartitionSpec``s aligned with the tile lattice of the weights they
+mirror, and supplies the mesh / placement helpers the executor's
+``shard_map``-ed forward (``core.analog``) is built on.
+
+Mesh axes (``serve_mesh(dp, tp)``):
+
+  data   -- batch rows (requests / probe rows).  Bit-exact: rows are
+            independent, and the drive normalization is a global max
+            (computed outside the shard_map, so every shard sees the
+            same scale).
+  model  -- the tile lattice.  Two schemes (``lattice_scheme``):
+
+    col -- shard the NO axis (output groups / bitline columns).  Each
+           shard runs the FULL bitline (NB) reduction for its own
+           columns in the exact flat order of the replicated path, then
+           ONE ``psum`` over ``model`` completes the digital
+           block-group accumulation (each shard contributes its columns
+           plus exact zeros elsewhere).  Adding zeros is bit-preserving,
+           so the col scheme is BIT-IDENTICAL to the replicated path.
+    row -- shard the NB axis (row tiles / block groups).  Each shard
+           sums its own block groups and ONE ``psum`` over ``model``
+           finishes the bitline reduction -- the classic Megatron-style
+           row-parallel linear.  The psum re-brackets the f32
+           accumulation (local sums first, shard sum second), so row
+           outputs agree with the replicated path to float tolerance,
+           not bitwise (documented in docs/parallel.md).
+
+  ``lattice_scheme`` prefers ``col`` exactly because it preserves the
+  serving plane's standing bit-identity contract; ``row`` is chosen when
+  only NB divides the model axis, and either can be forced via
+  ``AnalogExecutor(shard_scheme=...)``.
+
+Doctest (pure partition math; no devices needed):
+
+    >>> lattice_scheme(nb=2, no=8, tp=4)
+    'col'
+    >>> lattice_scheme(nb=8, no=6, tp=4)
+    'row'
+    >>> lattice_scheme(nb=3, no=5, tp=4) is None
+    True
+    >>> local_lattice(nb=8, no=6, tp=4, scheme='row')
+    (2, 6)
+    >>> shard_output_slices(no=8, cols_per_group=1, tp=4)
+    [(0, 2), (2, 4), (4, 6), (6, 8)]
+
+See docs/parallel.md for the leaf PartitionSpec table, psum placement
+and the re-shard-on-load semantics.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+
+
+# --------------------------------------------------------------------------- #
+# Pure partition math (property-tested in tests/test_sharding.py)
+# --------------------------------------------------------------------------- #
+def lattice_scheme(nb: int, no: int, tp: int) -> Optional[str]:
+    """Which lattice axis the ``model`` mesh axis shards for a plan with
+    ``nb`` block groups (rows) x ``no`` output groups (columns).
+
+    Prefers ``'col'`` (bit-identical to the replicated path) whenever NO
+    divides ``tp``; falls back to ``'row'`` (single psum on the bitline
+    reduction, float-tolerance identity) when only NB divides; returns
+    ``None`` -- replicate the lattice over ``model`` -- when neither
+    does.  ``tp == 1`` always replicates."""
+    if tp <= 1:
+        return None
+    if no % tp == 0:
+        return "col"
+    if nb % tp == 0:
+        return "row"
+    return None
+
+
+def local_lattice(nb: int, no: int, tp: int,
+                  scheme: Optional[str]) -> Tuple[int, int]:
+    """Per-shard (NB_local, NO_local) under ``scheme``."""
+    if scheme == "row":
+        return nb // tp, no
+    if scheme == "col":
+        return nb, no // tp
+    return nb, no
+
+
+def shard_output_slices(no: int, cols_per_group: int,
+                        tp: int) -> List[Tuple[int, int]]:
+    """The [start, stop) output-column range each ``col``-scheme shard
+    owns.  These ranges tile [0, no * cols_per_group) exactly -- no
+    column dropped, duplicated, or reordered (the partition property the
+    sharded assembly relies on; fuzzed in tests/test_sharding.py
+    against ``fault_aware_group_perm`` assemblies)."""
+    assert no % tp == 0, (no, tp)
+    w = (no // tp) * cols_per_group
+    return [(s * w, (s + 1) * w) for s in range(tp)]
+
+
+def state_pspecs(scheme: Optional[str]) -> Dict[str, P]:
+    """field name -> PartitionSpec for every ``DeploymentState`` leaf.
+
+    The conductance field and the per-tile read sigma are partitioned
+    along the same lattice axis as the weights they mirror; everything
+    else (read key, output permutation, emulator params, scenario
+    features, calibration affine) is replicated -- those leaves are
+    either consumed post-psum on the full output or are O(1)-sized.
+
+      gf         (NB, NO, D, H, W) -> row: P('model', ...) on NB
+                                      col: P(None, 'model', ...) on NO
+      read_sigma (NB, NO)          -> same lattice axis
+      read_key / out_perm / eparams / sfeat / cal_a / cal_b -> P()
+    """
+    if scheme == "row":
+        gf, rs = P(MODEL_AXIS), P(MODEL_AXIS)
+    elif scheme == "col":
+        gf, rs = P(None, MODEL_AXIS), P(None, MODEL_AXIS)
+    else:
+        gf, rs = P(), P()
+    return {"gf": gf, "read_sigma": rs, "read_key": P(), "out_perm": P(),
+            "eparams": P(), "sfeat": P(), "cal_a": P(), "cal_b": P()}
+
+
+# --------------------------------------------------------------------------- #
+# Mesh + placement
+# --------------------------------------------------------------------------- #
+def serve_mesh(dp: int = 1, tp: int = 1,
+               devices: Optional[int] = None) -> Mesh:
+    """A (data, model) serving mesh over ``dp * tp`` devices (defaults
+    to requiring exactly that many; ``devices`` forces a host-device
+    count check upstream).  Thin wrapper over ``launch.mesh._make_mesh``
+    so Auto axis types follow the installed jax version."""
+    from repro.launch.mesh import _make_mesh
+    n = dp * tp
+    avail = len(jax.devices()) if devices is None else devices
+    if n > avail:
+        raise ValueError(
+            f"serve_mesh({dp}, {tp}) needs {n} devices, have {avail} "
+            "(force host devices with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return _make_mesh((dp, tp), (DATA_AXIS, MODEL_AXIS))
+
+
+def mesh_shape(mesh: Optional[Mesh]) -> Tuple[int, int]:
+    """(dp, tp) of a serving mesh (1, 1 when mesh is None).  Accepts any
+    mesh carrying the data/model axes; absent axes count as size 1."""
+    if mesh is None:
+        return 1, 1
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return shape.get(DATA_AXIS, 1), shape.get(MODEL_AXIS, 1)
+
+
+def shard_deployment_state(st, mesh: Mesh, scheme: Optional[str]):
+    """Place one ``DeploymentState``'s leaves on ``mesh`` under the
+    lattice partition specs.  Works on freshly materialized, npz-loaded
+    (host) and previously-sharded states alike: ``device_put`` re-shards
+    onto the target mesh, which is exactly the elastic-restart semantics
+    deployments need when an npz saved under one mesh shape is served
+    under another (docs/parallel.md)."""
+    import dataclasses
+
+    specs = state_pspecs(scheme)
+
+    def put(field, v):
+        sh = NamedSharding(mesh, specs[field])
+        return jax.tree.map(lambda a: jax.device_put(a, sh), v)
+
+    return dataclasses.replace(
+        st, **{f: put(f, getattr(st, f)) for f in specs})

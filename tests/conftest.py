@@ -1,13 +1,61 @@
 """Test-suite plumbing.
 
-The container may lack ``hypothesis``; the property tests only use a small
-slice of its API (given / settings / integers / floats / sampled_from), so
-when the real package is missing we install a deterministic stand-in that
-runs each property test over a fixed number of seeded samples.  This keeps
-``pytest -x`` collecting (and the non-property tests running) everywhere.
+Two pieces live here:
+
+  * ``run_multidevice`` -- the one way this suite runs anything on more
+    than one device.  XLA's host-device count is locked at first jax
+    init, so multi-device behaviour (sharded training, the
+    tensor-parallel analog serving plane, collectives) is exercised in a
+    subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count``
+    forced in its environment.  Tests import it with
+    ``from conftest import run_multidevice``.
+
+  * a deterministic ``hypothesis`` stand-in.  The container may lack
+    ``hypothesis``; the property tests only use a small slice of its API
+    (given / settings / integers / floats / sampled_from / booleans), so
+    when the real package is missing we install a stub that runs each
+    property test over a fixed number of seeded samples.  The stub's
+    ``given`` wrapper advertises only the test's NON-strategy parameters
+    via ``__signature__``, so pytest still injects fixtures into
+    property tests exactly as real hypothesis does.  This keeps
+    ``pytest -x`` collecting (and every test running) everywhere.
 """
+import inspect
+import os
+import subprocess
 import sys
 import types
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_multidevice(script: str, n_devices: int = 8,
+                    timeout: float = 900.0) -> str:
+    """Run ``script`` under ``sys.executable`` with ``n_devices`` forced
+    host devices; returns its stdout.
+
+    The child gets ``src`` on PYTHONPATH and
+    ``--xla_force_host_platform_device_count=<n_devices>`` prepended to
+    XLA_FLAGS (set BEFORE jax ever imports -- the whole reason for the
+    subprocess).  A non-zero exit raises ``AssertionError`` carrying the
+    captured stdout/stderr tails, so a failing child script reads like a
+    failing test."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO_ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={int(n_devices)} "
+        + env.get("XLA_FLAGS", ""))
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=timeout,
+                       cwd=REPO_ROOT)
+    if r.returncode != 0:
+        raise AssertionError(
+            f"multi-device subprocess failed (exit {r.returncode})\n"
+            f"--- stdout (tail) ---\n{r.stdout[-4000:]}\n"
+            f"--- stderr (tail) ---\n{r.stderr[-6000:]}")
+    return r.stdout
+
 
 try:  # pragma: no cover - exercised only when hypothesis is installed
     import hypothesis  # noqa: F401
@@ -45,6 +93,13 @@ except ImportError:
                     fn(*args, **drawn, **kwargs)
             wrapper.__name__ = fn.__name__
             wrapper.__doc__ = fn.__doc__
+            # advertise only the non-strategy parameters: pytest reads
+            # __signature__ to decide which fixtures to inject, exactly
+            # as it does for real hypothesis' wrapper
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies])
             wrapper._hyp_max_examples = 10
             return wrapper
         return deco

@@ -1,19 +1,32 @@
-"""Multi-device behaviour, exercised in a subprocess with 8 forced host
-devices (XLA device count is locked at first jax init, so these cannot run
-in the main pytest process):
-  * sharded training on a (4, 2) mesh: loss decreases, state is sharded
-  * elastic restart: checkpoint from (4, 2) restored onto (2, 4)
-  * int8-compressed psum matches fp32 psum within quantization error
-"""
-import os
-import subprocess
-import sys
+"""Multi-device behaviour, exercised in subprocesses with 8 forced host
+devices (XLA's device count is locked at first jax init, so none of this
+can run in the main pytest process; ``run_multidevice`` in conftest.py
+owns the subprocess + env plumbing).
 
+Training plane (pre-existing coverage, now on the shared helper):
+  * sharded training on a (4, 2) mesh: loss decreases, state is sharded;
+    elastic restart onto (2, 4) continues from the same checkpoints
+  * int8-compressed psum matches fp32 psum within quantization error
+
+Serving plane (the tensor-parallel analog deploy tier; docs/parallel.md):
+  * sharded ideal-corner forward is bit-identical to the replicated path
+    (col scheme), float-close (row scheme), exact again when the lattice
+    divides neither axis (replicated fallback)
+  * a corner -> age -> remap -> params swap sequence on a (2, 4) mesh
+    compiles exactly once (RecompileSentinel + the unified jit cache)
+  * a deployment npz saved under a (4, 2) mesh re-shards onto (2, 4) on
+    load and serves bit-identical outputs
+  * guard for the jax 0.4.37 GSPMD miscompilation that shaped the
+    executor's shard_map bodies: a batch-axis concat OUTSIDE a shard_map
+    (feeding its operand inside jit) returns wrong values on a dp>1
+    mesh, so the generic path passes the positive/negative drive rails
+    as SEPARATE operands and concatenates inside the body
+"""
 import pytest
 
-SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from conftest import run_multidevice
+
+TRAIN_SCRIPT = r"""
 import jax, numpy as np
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
@@ -33,8 +46,6 @@ data = SyntheticLMData(cfg, seq_len=32, global_batch=8)
 from repro.launch.mesh import _make_mesh
 
 mesh1 = _make_mesh((4, 2), ("data", "model"))
-tr = Trainer(cfg=cfg, pcfg=pcfg, tcfg=tcfg, mesh=mesh1, data=data,
-             ckpt_dir="/tmp/repro_md_ckpt")
 import shutil; shutil.rmtree("/tmp/repro_md_ckpt", ignore_errors=True)
 tr = Trainer(cfg=cfg, pcfg=pcfg, tcfg=tcfg, mesh=mesh1, data=data,
              ckpt_dir="/tmp/repro_md_ckpt")
@@ -51,27 +62,223 @@ assert tr2.metrics_log[0]["step"] == 10
 # loss continues from where it was (same data stream, same params)
 assert abs(tr2.metrics_log[0]["loss"] - l1[-1]) < 0.8, \
     (tr2.metrics_log[0]["loss"], l1[-1])
+print("TRAIN_ELASTIC_OK")
+"""
 
-# int8 compressed psum vs exact
+PSUM_SCRIPT = r"""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+assert len(jax.devices()) == 8
+
+from repro.launch.mesh import _make_mesh
 from repro.parallel.collectives import compressed_psum, shard_map_compat
-mesh3 = _make_mesh((8,), ("pod",))
+
+mesh = _make_mesh((8,), ("pod",))
 x = jax.random.normal(jax.random.PRNGKey(0), (8, 256))
 def f(xl):
     return compressed_psum(xl, "pod")
-y = shard_map_compat(f, mesh3, P("pod"), P("pod"))(x)
+y = shard_map_compat(f, mesh, P("pod"), P("pod"))(x)
 exact = jnp.broadcast_to(x.sum(0, keepdims=True), x.shape)
 err = float(jnp.max(jnp.abs(y - exact)))
 scale = float(jnp.max(jnp.abs(x))) / 127.0
 assert err <= 8 * scale + 1e-6, (err, scale)
-print("MULTIDEVICE_OK")
+print("PSUM_OK")
+"""
+
+# shared prelude for the sharded analog serving scripts: a replicated
+# and a mesh-carrying executor over the same emulator params
+_ANALOG_PRELUDE = r"""
+import numpy as np, jax
+import jax.numpy as jnp
+assert len(jax.devices()) == 8
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import CASE_A
+from repro.core import conv4xbar
+from repro.core.analog import AnalogExecutor
+from repro.models.common import init_params
+from repro.parallel.sharding import serve_mesh
+
+PARAMS = init_params(jax.random.PRNGKey(7),
+                     conv4xbar.conv4xbar_schema(CASE_A, n_periph=2))
+
+def mk(backend="emulator", **kw):
+    if backend == "emulator":
+        kw.setdefault("emulator_params", PARAMS)
+        kw.setdefault("use_pallas", False)
+    return AnalogExecutor(acfg=AnalogConfig(backend=backend), geom=CASE_A,
+                          **kw)
+
+def data(K, N, B=6, seed=0):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (K, N)) * 0.3
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, K)) * 0.5
+    return x, w
+"""
+
+BIT_IDENTITY_SCRIPT = _ANALOG_PRELUDE + r"""
+mesh = serve_mesh(2, 4)
+
+# col scheme (NO=8, tp=4): BIT-identical for the emulator fast path AND
+# the generic (analytic) path -- each shard contributes its own columns
+# plus exact zeros, so the single psum adds nothing inexact
+x, w = data(70, 8)
+for backend in ("emulator", "analytic"):
+    y_rep = np.asarray(mk(backend).matmul(x, w, "t"))
+    exs = mk(backend, mesh=mesh)
+    assert exs._scheme_for(1, 8) == "col"
+    y_sh = np.asarray(exs.matmul(x, w, "t"))
+    np.testing.assert_array_equal(y_sh, y_rep)
+
+# row scheme (NB=4, tp=4), forced: the psum re-brackets the f32 bitline
+# accumulation, so identity holds to float tolerance, not bitwise
+x, w = data(1024, 5)
+y_rep = np.asarray(mk().matmul(x, w, "t"))
+y_sh = np.asarray(mk(mesh=mesh, shard_scheme="row").matmul(x, w, "t"))
+np.testing.assert_allclose(y_sh, y_rep, rtol=1e-5, atol=2e-6)
+
+# neither axis divides tp (NB=3, NO=5): lattice replicates over model,
+# no psum, still exact
+x, w = data(768, 5)
+y_rep = np.asarray(mk().matmul(x, w, "t"))
+exs = mk(mesh=mesh)
+assert exs._scheme_for(3, 5) is None
+y_sh = np.asarray(exs.matmul(x, w, "t"))
+np.testing.assert_array_equal(y_sh, y_rep)
+print("SHARD_IDENTITY_OK")
+"""
+
+COMPILE_ONCE_SCRIPT = _ANALOG_PRELUDE + r"""
+from repro.nonideal import get_scenario
+from repro.obs import RecompileSentinel
+
+ex = mk(mesh=serve_mesh(2, 4))
+x, w = data(70, 8, B=4)
+
+outs = [np.asarray(ex.matmul(x, w, "t"))]                     # ideal
+with RecompileSentinel(executor=ex, label="sharded-swaps") as sent:
+    ex.deploy(scenario=get_scenario("stressed"), key=jax.random.PRNGKey(1))
+    outs.append(np.asarray(ex.matmul(x, w, "t")))             # corner
+    ex.deploy(age=2.592e6)
+    outs.append(np.asarray(ex.matmul(x, w, "t")))             # age
+    ex.deploy(remap=True)
+    outs.append(np.asarray(ex.matmul(x, w, "t")))             # remap
+    new_p = init_params(jax.random.PRNGKey(8),
+                        conv4xbar.conv4xbar_schema(CASE_A, n_periph=2))
+    ex.deploy(params=new_p)
+    outs.append(np.asarray(ex.matmul(x, w, "t")))             # hot-swap
+assert ex._fns["t"][2]._cache_size() == 1, ex._fns["t"][2]._cache_size()
+for a, b in zip(outs, outs[1:]):
+    assert not np.array_equal(a, b)          # each swap actually changed y
+print("COMPILE_ONCE_OK", sent.new_counts)
+"""
+
+RESHARD_SCRIPT = _ANALOG_PRELUDE + r"""
+import os, tempfile
+from jax.sharding import PartitionSpec as P
+from repro.core.deployment import load_deployment, save_deployment
+from repro.nonideal import get_scenario
+
+x, w = data(70, 8, B=4)
+
+# serve a stressed + remapped deployment on a (4, 2) mesh, pin its state
+ex1 = mk(mesh=serve_mesh(4, 2))
+ex1.deploy(scenario=get_scenario("stressed"), remap=True,
+           key=jax.random.PRNGKey(1))
+st = ex1.state_for("t", w)
+ex1.deploy(states={"t": st})                  # pin the read-cycle key
+y1 = np.asarray(ex1.matmul(x, w, "t"))
+path = os.path.join(tempfile.mkdtemp(), "dep.npz")
+save_deployment(path, {"t": st}, ex1.deployment)
+
+# load under a DIFFERENT mesh shape: values re-shard onto (2, 4)
+ex2 = mk(mesh=serve_mesh(2, 4))
+states, dep = load_deployment(path, executor=ex2)
+ex2.deploy(scenario=dep.scenario, key=dep.key, remap=dep.remap,
+           states=dep.states)
+st2 = ex2.state_for("t", w)
+sh = st2.gf.sharding
+assert tuple(sh.mesh.devices.shape) == (2, 4), sh
+assert sh.spec == P(None, "model"), sh.spec   # col scheme shards NO
+y2 = np.asarray(ex2.matmul(x, w, "t"))
+np.testing.assert_array_equal(y2, y1)         # same fleet, new mesh
+print("RESHARD_OK")
+"""
+
+CONCAT_GUARD_SCRIPT = r"""
+import jax, numpy as np
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+assert len(jax.devices()) == 8
+from repro.parallel.collectives import shard_map_compat
+from repro.parallel.sharding import DATA_AXIS, serve_mesh
+
+mesh = serve_mesh(2, 4)
+h = jnp.arange(8.0).reshape(4, 2)
+
+# the shape the executor's generic path USES: rails as separate
+# shard_map operands, concatenated INSIDE the body and reduced back to
+# the per-device batch before leaving it (so the doubled batch never
+# crosses the shard boundary and the output keeps global row order)
+def body(a, b):
+    c = jnp.concatenate([a, b], axis=0)
+    n = a.shape[0]
+    return c[:n] * 2.0 + c[n:]
+f = shard_map_compat(body, mesh, (P(DATA_AXIS), P(DATA_AXIS)),
+                     P(DATA_AXIS))
+y = np.asarray(jax.jit(lambda t: f(t, t + 6.0))(h))
+np.testing.assert_array_equal(y, np.asarray(h) * 2.0 + np.asarray(h) + 6.0)
+
+expect = np.concatenate([np.asarray(h), np.asarray(h) + 6.0], axis=0)
+
+# the shape it must NOT use: on jax 0.4.37, a batch-axis concat under
+# jit feeding a shard_map operand on a dp>1 mesh returns values scaled
+# by the model-axis size (GSPMD miscompilation; even for an identity
+# body with no psum).  Report either way -- if a future jax fixes it,
+# the note below flags that the workaround could be retired.
+g = shard_map_compat(lambda a: a, mesh, P(DATA_AXIS), P(DATA_AXIS))
+z = np.asarray(jax.jit(
+    lambda t: g(jnp.concatenate([t, t + 6.0], axis=0)))(h))
+if np.array_equal(z, expect):
+    print("NOTE: upstream concat-into-shard_map bug no longer reproduces")
+else:
+    print("upstream bug still present (max abs err "
+          f"{float(np.max(np.abs(z - expect))):.3g})")
+print("CONCAT_GUARD_OK")
 """
 
 
 @pytest.mark.slow
-def test_multidevice_training_elastic_and_compression():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src:" + env.get("PYTHONPATH", "")
-    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                       capture_output=True, text=True, timeout=900,
-                       cwd=os.path.dirname(os.path.dirname(__file__)))
-    assert "MULTIDEVICE_OK" in r.stdout, (r.stdout[-2000:], r.stderr[-3000:])
+def test_multidevice_training_and_elastic_restart():
+    out = run_multidevice(TRAIN_SCRIPT)
+    assert "TRAIN_ELASTIC_OK" in out, out[-2000:]
+
+
+@pytest.mark.slow
+def test_multidevice_int8_compressed_psum():
+    out = run_multidevice(PSUM_SCRIPT)
+    assert "PSUM_OK" in out, out[-2000:]
+
+
+@pytest.mark.slow
+def test_sharded_serve_bit_identical_to_replicated():
+    out = run_multidevice(BIT_IDENTITY_SCRIPT)
+    assert "SHARD_IDENTITY_OK" in out, out[-2000:]
+
+
+@pytest.mark.slow
+def test_sharded_swap_sequence_compiles_once():
+    out = run_multidevice(COMPILE_ONCE_SCRIPT)
+    assert "COMPILE_ONCE_OK" in out, out[-2000:]
+
+
+@pytest.mark.slow
+def test_deployment_reshards_across_mesh_shapes():
+    out = run_multidevice(RESHARD_SCRIPT)
+    assert "RESHARD_OK" in out, out[-2000:]
+
+
+@pytest.mark.slow
+def test_concat_into_shard_map_guard():
+    out = run_multidevice(CONCAT_GUARD_SCRIPT)
+    assert "CONCAT_GUARD_OK" in out, out[-2000:]

@@ -53,29 +53,18 @@ def _sequential_reference(sess: ServeSession, prompts):
     return outs
 
 
-_SHARED = {}
-
-
-def _shared():
-    """Shared digital session + 4-slot engine + solo-expected tokens.
-
-    A plain memoized helper (not only a fixture) because the hypothesis
-    stub in conftest.py cannot forward pytest fixtures through its
-    ``given`` wrapper -- property tests call this directly.
-    """
-    if not _SHARED:
-        sess = ServeSession(ARCH, reduced=True, batch=1, prompt_len=P,
-                            gen=G, seed=0)
-        eng = ContinuousBatchEngine(sess, max_slots=4, max_len=P + G)
-        prompts = _prompts(6, P, sess.cfg.vocab_size)
-        expected = [eng.run([p], max_new=G)[0] for p in prompts]
-        _SHARED["v"] = (sess, eng, prompts, expected)
-    return _SHARED["v"]
-
-
 @pytest.fixture(scope="module")
 def digital():
-    return _shared()
+    """Shared digital session + 4-slot engine + solo-expected tokens.
+    Property tests take this fixture too: the conftest hypothesis stub's
+    ``given`` wrapper advertises non-strategy params via ``__signature__``,
+    so pytest injects fixtures the same way real hypothesis does."""
+    sess = ServeSession(ARCH, reduced=True, batch=1, prompt_len=P,
+                        gen=G, seed=0)
+    eng = ContinuousBatchEngine(sess, max_slots=4, max_len=P + G)
+    prompts = _prompts(6, P, sess.cfg.vocab_size)
+    expected = [eng.run([p], max_new=G)[0] for p in prompts]
+    return sess, eng, prompts, expected
 
 
 # --------------------------------------------------------------------------- #
@@ -230,11 +219,11 @@ def test_engine_queue_backpressure(digital):
 # --------------------------------------------------------------------------- #
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(min_value=0, max_value=10**9))
-def test_scheduler_never_drops_dups_or_reorders(seed):
+def test_scheduler_never_drops_dups_or_reorders(digital, seed):
     """Random admit/step/cancel interleavings: every finished request's
     tokens equal its solo-served expectation exactly (no drop/dup/
     reorder); cancelled requests hold a strict prefix."""
-    sess, eng, prompts, expected = _shared()
+    sess, eng, prompts, expected = digital
     assert not eng.busy                      # clean engine between examples
     rng = np.random.default_rng(seed)
     n_req = int(rng.integers(1, len(prompts) + 1))

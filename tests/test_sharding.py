@@ -1,0 +1,120 @@
+"""Property tests for the pure partition math of the tensor-parallel
+analog serving plane (repro.parallel.sharding; docs/parallel.md).
+
+No mesh and no devices here: these pin down the invariants the
+``shard_map``-ed forward in ``core.analog`` rests on, on a single
+device, with integer payloads so any violation is an exact mismatch
+rather than float noise:
+
+  * ``lattice_scheme`` / ``local_lattice`` factorize the tile lattice
+    exactly (shard-local shapes multiply back to the global lattice,
+    col preferred whenever it is available);
+  * ``shard_output_slices`` tiles the flat output-column range exactly
+    -- contiguous, disjoint, in order;
+  * the col-scheme scatter-then-psum assembly and the row-scheme
+    partial-sum-then-psum assembly are each a PARTITION of the
+    unsharded ``fault_aware_group_perm`` assembly: random tile shapes,
+    mesh factorizations and stuck-fault permutations never drop,
+    duplicate, or reorder an output group.
+
+Runs under real hypothesis or the deterministic stub in conftest.py.
+"""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import CASE_A
+from repro.core.crossbar import build_conductance_plan, fault_aware_group_perm
+from repro.core.deployment import _STATE_FIELDS
+from repro.parallel.sharding import (lattice_scheme, local_lattice,
+                                     shard_output_slices, state_pspecs)
+
+ACFG = AnalogConfig()
+# CASE_A: rows=64, D=4 tiles per block group -> 256 K-rows per block group
+_K_PER_NB = CASE_A.tiles * ACFG.rows
+
+
+def _plan(rng, nb, n):
+    """A real conductance plan with exactly ``nb`` block groups and
+    ``n`` output columns (CASE_A has one output per block, so NO=n)."""
+    K = int(rng.integers((nb - 1) * _K_PER_NB + 1, nb * _K_PER_NB + 1))
+    w = rng.normal(size=(K, n)).astype(np.float32) * 0.3
+    plan = build_conductance_plan(jnp.asarray(w), ACFG, CASE_A)
+    assert (plan.NB, plan.NO) == (nb, n), (plan.NB, plan.NO)
+    return plan
+
+
+@settings(max_examples=25, deadline=None)
+@given(nb=st.integers(min_value=1, max_value=12),
+       no=st.integers(min_value=1, max_value=12),
+       tp=st.sampled_from([1, 2, 3, 4, 8]))
+def test_lattice_scheme_factorizes_exactly(nb, no, tp):
+    scheme = lattice_scheme(nb, no, tp)
+    nb_l, no_l = local_lattice(nb, no, tp, scheme)
+    if scheme == "col":
+        assert no % tp == 0 and (nb_l, no_l * tp) == (nb, no)
+    elif scheme == "row":
+        assert nb % tp == 0 and (nb_l * tp, no_l) == (nb, no)
+    else:
+        assert (nb_l, no_l) == (nb, no)
+        assert tp <= 1 or (no % tp != 0 and nb % tp != 0)
+    if tp > 1 and no % tp == 0:
+        # col is preferred whenever available: it keeps the serving
+        # plane's bit-identity contract (module docstring)
+        assert scheme == "col"
+
+
+@settings(max_examples=25, deadline=None)
+@given(groups=st.integers(min_value=1, max_value=6),
+       cpg=st.integers(min_value=1, max_value=4),
+       tp=st.sampled_from([1, 2, 4]))
+def test_shard_output_slices_tile_the_columns_exactly(groups, cpg, tp):
+    no = groups * tp
+    slices = shard_output_slices(no, cpg, tp)
+    cols = [c for a, b in slices for c in range(a, b)]
+    assert cols == list(range(no * cpg))     # contiguous, disjoint, ordered
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**9),
+       nb=st.integers(min_value=1, max_value=3),
+       groups=st.integers(min_value=1, max_value=3),
+       tp=st.sampled_from([2, 4]))
+def test_sharded_assembly_partitions_fault_aware_assembly(seed, nb, groups,
+                                                          tp):
+    rng = np.random.default_rng(seed)
+    plan = _plan(rng, nb, groups * tp)
+    stuck = rng.random(np.shape(plan.g_feat)) < 0.05
+    out_perm, gperm, ginv = fault_aware_group_perm(
+        np.asarray(plan.g_feat), stuck, plan, ACFG)
+    # the remap itself is a bijection: no group dropped or duplicated
+    assert sorted(gperm.tolist()) == list(range(plan.NO))
+    assert sorted(ginv.tolist()) == list(range(plan.NO))
+    assert sorted(out_perm.tolist()) == list(range(plan.N))
+
+    # integer block outputs: any dropped/duplicated/reordered group is an
+    # exact mismatch, never float noise
+    M = 3
+    flat = rng.integers(-8, 9, size=(M, plan.NB, plan.NO * plan.no))
+    ref = flat.sum(axis=1)[:, out_perm]      # unsharded permuted assembly
+
+    # col scheme: each shard sums the full bitline for its own column
+    # slice and scatters it; the "psum" is the += over shards
+    acc = np.zeros((M, plan.NO * plan.no), flat.dtype)
+    for a, b in shard_output_slices(plan.NO, plan.no, tp):
+        acc[:, a:b] += flat[:, :, a:b].sum(axis=1)
+    np.testing.assert_array_equal(acc[:, out_perm], ref)
+
+    # row scheme at its finest grain (one block group per shard): the
+    # psum finishes the digital block-group accumulation
+    row = sum(flat[:, s] for s in range(plan.NB))
+    np.testing.assert_array_equal(row[:, out_perm], ref)
+
+
+def test_state_pspecs_cover_every_deployment_state_field():
+    """The leaf PartitionSpec table stays in sync with DeploymentState:
+    adding a state field without deciding its placement is an error."""
+    for scheme in (None, "row", "col"):
+        assert set(state_pspecs(scheme)) == set(_STATE_FIELDS)

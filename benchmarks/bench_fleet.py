@@ -1,0 +1,233 @@
+"""Fleet digital twin: a maintenance campaign over 10^5 simulated devices.
+
+One ``repro.fleet.Fleet`` -- population drawn around an aging corner
+(programming noise, read noise, stuck-off faults, drift, all with
+per-device lognormal fab spread) -- is walked through the drift timeline
+under three maintenance policies:
+
+  * **never**       -- calibrate at deployment, then serve untouched;
+  * **always**      -- recalibrate every device at every checkpoint;
+  * **plan**        -- ``MaintenancePlanner``: per-device DP schedules on
+                      ``SurrogateRanker`` forecasts (a pinball-loss
+                      quantile surface fitted on a probed subsample --
+                      the million-device-cheap path).
+
+Every policy replay, the surrogate's probe grid and the SLO probe ride
+the fleet's ONE compiled chunk executable: device ids, ages and
+calibration ages are traced operands of a fixed-shape vmapped chunk, so
+the whole campaign compiles exactly once and memory is bounded by the
+chunk size, never the population (``RecompileSentinel``-gated).
+
+The serving model is the trained scenario-conditioned emulator
+(``benchmarks.common.get_conditioned_emulator``): each device's aged
+per-tile corner rides the feature operands, so forecasting and replay
+never retrain (docs/fleet.md).
+
+Asserted (exit 1 on violation):
+  * the planner's cost-adjusted accuracy matches or beats BOTH baselines
+    at every checkpoint (cost model: action costs + SLO-violation
+    penalty, ``mean(1/(1+err)) - acc_per_cost * cum_cost / n``);
+  * ONE chunk executable across the entire campaign;
+  * under the conditioned emulator ``field_retrain`` is dominated and
+    never scheduled (``retrain_gain = 1.0`` -- docs/emulator.md).
+
+CSV lines to stdout + results/fleet_<label>.json.
+
+  PYTHONPATH=src python -m benchmarks.bench_fleet [--quick]
+      [--devices N] [--telemetry [PATH]]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_lifetime import LIFETIME_QUICK
+from benchmarks.common import QUICK, get_conditioned_emulator
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import CASE_A
+from repro.core.analog import AnalogExecutor
+from repro.fleet import (ActionCosts, Fleet, FleetSpec, MaintenancePlanner,
+                         always_recalibrate_policy, never_policy,
+                         simulate_policy)
+from repro.nonideal import Scenario
+from repro.nonideal.lifetime import DEFAULT_TIMELINE
+from repro.obs import OBS, RecompileSentinel
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+N_DEVICES_FULL = 100_000
+N_DEVICES_QUICK = 10_000
+
+# the population's nominal corner: enough drift + staleness signal that
+# a stale affine fails the SLO by end of timeline, while a freshly
+# recalibrated device passes -- the regime where scheduling matters
+BASE = Scenario(name="fleet-base", prog_sigma=0.05, read_sigma=0.01,
+                p_stuck_off=0.02, drift_nu=0.04, drift_t=0.0)
+
+# SLO: fixed multiple of the fleet's median FRESHLY-MAINTAINED error at
+# the first checkpoint -- self-calibrating against the emulator's model
+# floor, so the gate measures scheduling, not absolute net quality.  2x
+# leaves maintained devices (p90 ~ 1.5x median) comfortably inside the
+# SLO while the never-maintained drift trajectory crosses it, so the
+# planner's tau=0.8 surrogate sees most devices as repairable instead
+# of conservatively retiring the whole fleet
+SLO_OVER_FLOOR = 2.0
+
+
+def _policies(n: int, timeline, planner_actions):
+    return (("never", never_policy(n, timeline)),
+            ("always", always_recalibrate_policy(n, timeline)),
+            ("plan", planner_actions))
+
+
+def run(quick: bool = False, seed: int = 0, n_devices: int | None = None):
+    geom = CASE_A
+    tcfg = LIFETIME_QUICK if quick else QUICK
+    cond = get_conditioned_emulator(geom.name, tcfg, seed)
+    key = jax.random.PRNGKey(seed)
+    K, N, B = (64, 8, 4) if quick else (128, 16, 8)
+    n = int(n_devices or (N_DEVICES_QUICK if quick else N_DEVICES_FULL))
+    w = jax.random.normal(key, (K, N)) * 0.2
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, K)) * 0.5
+    ages = [t for _, t in DEFAULT_TIMELINE]
+
+    ex = AnalogExecutor(acfg=AnalogConfig(backend="emulator"), geom=geom,
+                        emulator_params=cond.params, use_pallas=False)
+    assert ex.emulator_conditioned, "bench_fleet needs the conditioned net"
+    spec = FleetSpec(n_devices=n, base=BASE, chunk=256)
+    fleet = Fleet(ex, w, "fleet", spec, key=jax.random.fold_in(key, 2))
+    fleet._build()                       # executable exists before the gate
+
+    rss0 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    t0 = time.time()
+    with RecompileSentinel(fns=(fleet._fn,), max_traces=1, strict=False,
+                           label="fleet:chunk") as sent:
+        # SLO from the realized model floor: fresh-calibration error at
+        # the first checkpoint, probed on an evenly-strided subsample
+        probe_ids = np.arange(0, n, max(1, n // 512), dtype=np.int32)
+        floor = fleet.evaluate(x, ages[0], ids=probe_ids, cal_age=ages[0])
+        slo = SLO_OVER_FLOOR * float(np.median(floor))
+
+        planner = MaintenancePlanner(fleet, ages, costs=ActionCosts(),
+                                     slo=slo,
+                                     n_probe=128 if quick else 256)
+        plan = planner.plan(x)
+        replays = {
+            name: simulate_policy(fleet, x, ages, acts, planner.costs,
+                                  slo, policy=name)
+            for name, acts in _policies(n, ages, plan.actions)
+        }
+    wall_s = time.time() - t0
+    rss_mb = (resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+              - rss0) / 1024.0
+
+    dominates = [
+        all(replays["plan"][i]["cost_adjusted_acc"]
+            >= replays[b][i]["cost_adjusted_acc"] for b in ("never",
+                                                            "always"))
+        for i in range(len(ages))
+    ]
+    action_counts = {name: int((plan.actions == a).sum())
+                     for a, name in enumerate(
+                         ("none", "recalibrate", "field_retrain", "retire"))}
+    return {
+        "n_devices": n,
+        "chunk": spec.chunk,
+        "slo": slo,
+        "timeline": [{"label": l, "t": t} for l, t in DEFAULT_TIMELINE],
+        "plan": {"expected_cost": plan.expected_cost,
+                 "remap_horizon": (list(plan.remap_horizon)
+                                   if plan.remap_horizon else None),
+                 "actions": action_counts},
+        "surrogate_train_pinball": (planner.ranker.train_pinball
+                                    if planner.ranker else None),
+        "replays": replays,
+        "campaign_wall_s": wall_s,
+        "campaign_rss_delta_mb": rss_mb,
+        "gates": {
+            "plan_dominates_at_every_checkpoint": all(dominates),
+            "chunk_compiled_once": (sent.ok and fleet.cache_size() == 1),
+            "retrain_dominated": action_counts["field_retrain"] == 0,
+        },
+    }
+
+
+def write_json(row, label: str, quick: bool, seed: int) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"fleet_{label}.json")
+    doc = {"schema": 1,
+           "label": label,
+           "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+           "jax_backend": jax.default_backend(),
+           "quick": quick,
+           "seed": seed,
+           "metric": "cost_adjusted_acc = mean(1/(1+rel_err)) - "
+                     "acc_per_cost * cum_cost / n; cost = action costs + "
+                     "slo_penalty per violating device-checkpoint",
+           **row}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return path
+
+
+def main(quick: bool = False, seed: int = 0, label: str | None = None,
+         n_devices: int | None = None, telemetry: str | None = None):
+    if telemetry is not None:
+        OBS.enable()
+    row = run(quick=quick, seed=seed, n_devices=n_devices)
+    print(f"fleet_devices,{row['n_devices']},chunk={row['chunk']}")
+    print(f"fleet_slo,{row['slo']:.4f},rel_err")
+    for i, (label_i, _) in enumerate(DEFAULT_TIMELINE):
+        cols = ",".join(
+            f"{row['replays'][p][i]['cost_adjusted_acc']:.4f}"
+            for p in ("never", "always", "plan"))
+        print(f"fleet_cost_adjusted_acc,{label_i},{cols}")
+        cols = ",".join(str(row['replays'][p][i]['violations'])
+                        for p in ("never", "always", "plan"))
+        print(f"fleet_slo_violations,{label_i},{cols}")
+    for name, cnt in row["plan"]["actions"].items():
+        print(f"fleet_plan_actions,{name},{cnt}")
+    print(f"fleet_campaign_wall_s,{row['campaign_wall_s']:.1f},s")
+    print(f"fleet_campaign_rss_delta_mb,{row['campaign_rss_delta_mb']:.0f},"
+          "mb")
+    for k, v in row["gates"].items():
+        print(f"fleet_{k},{int(v)},bool")
+    path = write_json(row, label or ("quick" if quick else "full"),
+                      quick, seed)
+    print(f"fleet_json,{os.path.abspath(path)},written")
+    if telemetry is not None:
+        from repro.obs import snapshot, write_snapshot
+        if telemetry == "-":
+            print(json.dumps(snapshot(), indent=2, sort_keys=True))
+        else:
+            write_snapshot(telemetry)
+            print(f"telemetry snapshot -> {telemetry}")
+    bad = [k for k, v in row["gates"].items() if not v]
+    if bad:
+        raise SystemExit(f"fleet gates violated: {bad}")
+    return row
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 10^4 devices, reduced emulator protocol")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--label", default=None)
+    ap.add_argument("--devices", type=int, default=None,
+                    help="override the campaign's population size")
+    ap.add_argument("--telemetry", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="enable the metrics registry and dump the JSON "
+                         "snapshot (PATH, or stdout when bare)")
+    args = ap.parse_args()
+    main(quick=args.quick, seed=args.seed, label=args.label,
+         n_devices=args.devices, telemetry=args.telemetry)

@@ -76,6 +76,13 @@ P_STUCK_OFF = 0.04
 DRIFT_NU = 0.05
 SIGMA_LO, SIGMA_HI = 0.02, 0.08        # per-tile fab gradient
 
+# wear-aware remapping gate: a stressed corner -- heavy stuck-off rate +
+# a retention-decay gradient across die positions -- where the physical
+# host a group lands on decides how hard it drifts by end of horizon
+WEAR_P_STUCK_OFF = 0.18
+WEAR_NU_HI = 0.04
+WEAR_KEYS = 6                          # fault draws sampled by the gate
+
 # "matching" margin for the conditioned-vs-finetuned gate: the conditioned
 # net must come within this accuracy of the per-checkpoint fine-tuned
 # baseline at every drift checkpoint (it usually beats it -- the margin
@@ -124,6 +131,72 @@ def _ideal_bit_identity(backend: str, eparams, x, w, tag: str) -> bool:
     y_sc = ex._unified_for(tag, w)(x2, DeploymentState.ideal(plan,
                                                              eparams=ep))
     return bool(np.array_equal(np.asarray(y_sc), y_plain))
+
+
+def wear_remap_gate(seed: int = 0):
+    """Wear-aware vs instantaneous fault remapping at end of horizon.
+
+    A stressed corner (heavy stuck-off rate, per-die-position drift
+    gradient) is deployed twice per fault draw with the analytic
+    backend: ``remap=True`` (instantaneous assignment) and
+    ``remap=<timeline ages>`` (wear-aware: candidates realized through
+    the serving perturbation at every checkpoint age and selected by
+    end-of-horizon weight deviation).  Both walks cold-calibrate at
+    deploy, age to the end of ``DEFAULT_TIMELINE`` and warm-recalibrate
+    -- then serving accuracy vs the digital product is compared on a
+    large probe batch.  Gates: wear-aware >= instant for EVERY fault
+    draw (the realized-score selection falls back to the instant
+    assignment whenever anticipation doesn't pay), and
+    ``remap_plan(horizon=None)`` stays bit-identical to a call without
+    the argument."""
+    from repro.nonideal import remap_plan
+
+    key = jax.random.PRNGKey(seed)
+    K, N, B = 64, 8, 256
+    w = jax.random.normal(key, (K, N)) * 0.2
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, K)) * 0.5
+    ref = np.asarray(x @ w)
+    ages = tuple(t for _, t in DEFAULT_TIMELINE)
+
+    probe = _make_executor("analytic", None)._plan_for(w, "probe")
+    nu = np.broadcast_to(np.linspace(0.0, WEAR_NU_HI, probe.NO),
+                         (probe.NB, probe.NO))
+    corner = tile_scenarios(probe.NB, probe.NO, name="wear",
+                            p_stuck_off=WEAR_P_STUCK_OFF, drift_nu=nu)
+
+    # horizon=None must be bit-identical to a call without the argument
+    acfg = AnalogConfig(backend="analytic")
+    kb = jax.random.fold_in(key, 3)
+    p_a, o_a = remap_plan(probe, acfg, corner, kb)
+    p_b, o_b = remap_plan(probe, acfg, corner, kb, horizon=None)
+    bit_identical = (np.array_equal(np.asarray(o_a), np.asarray(o_b))
+                     and np.array_equal(np.asarray(p_a.g_feat),
+                                        np.asarray(p_b.g_feat)))
+
+    kf = jax.random.fold_in(key, 2)
+    draws = []
+    for i in range(WEAR_KEYS):
+        kk = jax.random.fold_in(kf, i)
+        out = {}
+        for mode, remap in (("instant", True), ("wear", ages)):
+            ex = _make_executor("analytic", None)
+            ex.deploy(scenario=corner, key=kk, remap=remap)
+            ex.calibrate(jax.random.fold_in(key, 11), w, "wear", n=64)
+            ex.deploy(age=ages[-1])
+            ex.calibrate(jax.random.fold_in(key, 12), w, "wear", n=64,
+                         warm_start=True)
+            out[mode] = _accuracy(ex.matmul(x, w, "wear"), ref)
+        draws.append(out)
+    return {
+        "p_stuck_off": WEAR_P_STUCK_OFF,
+        "drift_nu_hi": WEAR_NU_HI,
+        "horizon": list(ages),
+        "draws": draws,
+        "wear_strict_wins": sum(d["wear"] > d["instant"] for d in draws),
+        "wear_ge_instant_all": all(d["wear"] >= d["instant"]
+                                   for d in draws),
+        "horizon_none_bit_identical": bit_identical,
+    }
 
 
 def run(quick: bool = False, seed: int = 0):
@@ -228,7 +301,7 @@ def run(quick: bool = False, seed: int = 0):
     return curves
 
 
-def write_json(curves, label: str, quick: bool, seed: int) -> str:
+def write_json(curves, wear, label: str, quick: bool, seed: int) -> str:
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"lifetime_{label}.json")
     doc = {"schema": 1,
@@ -245,7 +318,8 @@ def write_json(curves, label: str, quick: bool, seed: int) -> str:
                      "field retraining on the emulator backend); "
                      "conditioned = ONE scenario-conditioned emulator, "
                      "remap + recalibrate, zero retraining",
-           "curves": curves}
+           "curves": curves,
+           "wear_remap": wear}
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
         f.write("\n")
@@ -254,6 +328,7 @@ def write_json(curves, label: str, quick: bool, seed: int) -> str:
 
 def main(quick: bool = False, seed: int = 0, label: str | None = None):
     curves = run(quick=quick, seed=seed)
+    wear = wear_remap_gate(seed=seed)
     for c in curves:
         conditioned = c.get("conditioned")
         for i, (u, m) in enumerate(zip(c["unmitigated"], c["mitigated"])):
@@ -274,7 +349,14 @@ def main(quick: bool = False, seed: int = 0, label: str | None = None):
                       "conditioned_compiled_once",
                       "conditioned_ideal_bit_identical"):
                 print(f"lifetime_{c['backend']}_{k},{int(c[k])},bool")
-    path = write_json(curves, label or ("quick" if quick else "full"),
+    for i, d in enumerate(wear["draws"]):
+        print(f"lifetime_wear_remap,draw{i},{d['instant']:.4f},"
+              f"{d['wear']:.4f}")
+    print(f"lifetime_wear_ge_instant,{int(wear['wear_ge_instant_all'])},"
+          f"bool,strict_wins={wear['wear_strict_wins']}")
+    print("lifetime_wear_horizon_none_bit_identical,"
+          f"{int(wear['horizon_none_bit_identical'])},bool")
+    path = write_json(curves, wear, label or ("quick" if quick else "full"),
                       quick, seed)
     print(f"lifetime_json,{os.path.abspath(path)},written")
     gates = ("dominates_at_every_checkpoint", "compiled_once",
@@ -283,6 +365,9 @@ def main(quick: bool = False, seed: int = 0, label: str | None = None):
              "conditioned_ideal_bit_identical")
     bad = [f"{c['backend']}:{k}" for c in curves
            for k in gates if not c.get(k, True)]
+    bad += [f"wear_remap:{k}" for k in ("wear_ge_instant_all",
+                                        "horizon_none_bit_identical")
+            if not wear[k]]
     if bad:
         raise SystemExit(f"lifetime invariants violated: {bad}")
     return curves

@@ -77,7 +77,8 @@ from repro.core.emulator import normalize_features
 from repro.nonideal.perturb import (apply_read_noise, perturb_plan,
                                     remap_plan, scenario_circuit_params)
 from repro.nonideal.scenario import (N_SCENARIO_FEATURES, Scenario,
-                                     scenario_features)
+                                     scenario_features,
+                                     scenario_features_tiled)
 from repro.obs import OBS
 from repro.parallel.sharding import (DATA_AXIS, MODEL_AXIS, lattice_scheme,
                                      local_lattice, mesh_shape,
@@ -358,7 +359,10 @@ class AnalogExecutor:
         clears the corner (ideal hardware); ``age`` rewrites the
         scenario's ``drift_t`` (seconds since programming; the fleet ages,
         it is not refabricated); ``remap`` sets the stuck-fault-aware
-        remapping policy; ``params`` hot-swaps retrained emulator params;
+        remapping policy (``True`` = instantaneous; a sequence of
+        checkpoint ages in seconds = wear-aware horizon scoring,
+        ``nonideal.remap_plan``); ``params`` hot-swaps retrained emulator
+        params;
         ``key`` refabricates the fleet (a fixed key across deploys models
         the SAME devices under different conditions); ``states`` installs
         preloaded per-tag states (``core.deployment.load_deployment``).
@@ -376,10 +380,14 @@ class AnalogExecutor:
                 raise ValueError("deploy(age=...) needs a scenario to age")
             from repro.nonideal.lifetime import scenario_at_age
             sc = scenario_at_age(sc, age)
+        if remap is not _UNSET and isinstance(remap, (tuple, list)):
+            # wear-aware remapping: a horizon of checkpoint ages (seconds)
+            remap = tuple(float(t) for t in remap)
         new = Deployment(
             scenario=sc,
             key=dep.key if key is None else key,
-            remap=dep.remap if remap is _UNSET else bool(remap),
+            remap=(dep.remap if remap is _UNSET
+                   else remap if isinstance(remap, tuple) else bool(remap)),
             params=dep.params if params is _UNSET else params,
             states=dep.states if states is _UNSET else states)
         self._deployment = new
@@ -426,16 +434,22 @@ class AnalogExecutor:
     def _scenario_features(self) -> jax.Array:
         """Feature encoding of the active scenario, cached per Scenario
         object (the encode is a handful of scalar reductions, but matmul
-        is the serving hot path).  Forced eager: the deployment's scenario
-        leaves are concrete state, and under an ENCLOSING jit (serve loop)
-        the encode must come out concrete so the cache never holds a
-        leaked tracer."""
+        is the serving hot path).  A tile-indexed scenario encodes as the
+        per-tile ``(NB, NO, F)`` feature lattice
+        (``scenario_features_tiled``), so a conditioned net sees each
+        tile's own corner rather than fleet mean/max summaries; scalar
+        corners keep the flat ``(F,)`` vector (one extra executable per
+        tag when a deployment switches between the two shapes).  Forced
+        eager: the deployment's scenario leaves are concrete state, and
+        under an ENCLOSING jit (serve loop) the encode must come out
+        concrete so the cache never holds a leaked tracer."""
         sc = self.scenario
         ent = self._sfeat_ent
         if ent is not None and ent[0] is sc:
             return ent[1]
         with jax.ensure_compile_time_eval():
-            v = scenario_features(sc)
+            v = (scenario_features_tiled(sc)
+                 if sc.tile_shape is not None else scenario_features(sc))
         self._sfeat_ent = (sc, v)
         return v
 
@@ -485,7 +499,11 @@ class AnalogExecutor:
                 key = self._tag_key(tag)
                 base, operm = plan, jnp.arange(plan.N, dtype=jnp.int32)
                 if dep.remap and sc.has_stuck_off:
-                    base, operm = remap_plan(plan, self.acfg, sc, key)
+                    # a tuple remap policy is a wear-aware horizon of
+                    # checkpoint ages; True = instantaneous remapping
+                    hz = dep.remap if isinstance(dep.remap, tuple) else None
+                    base, operm = remap_plan(plan, self.acfg, sc, key,
+                                             horizon=hz)
                 pplan = perturb_plan(base, self.acfg, sc,
                                      key).with_perm(operm)
                 # read sigma always enters tile-shaped so scalar and
@@ -663,7 +681,10 @@ class AnalogExecutor:
 
         For a scenario-conditioned emulator the peripheral vector is
         widened to ``(gain, offset, *scenario_features)``; ``sfeat=None``
-        feeds the ideal corner's all-zero feature block."""
+        feeds the ideal corner's all-zero feature block.  A per-tile
+        ``(NB, NO, F)`` sfeat is tiled across the batch rows -- the block
+        rows are lattice-innermost (``ConductancePlan.build_x``), so each
+        block gets its own tile's features."""
         n = x.shape[0]
         periph = jnp.concatenate(
             [jnp.ones((n, 1), x.dtype), jnp.zeros((n, 1), x.dtype)], axis=-1)
@@ -672,11 +693,15 @@ class AnalogExecutor:
             npf = (conv4xbar.n_periph_of(params, self.geom)
                    if params is not None else 2)
             if npf > 2:
-                tail = (jnp.zeros((npf - 2,), x.dtype) if sfeat is None
-                        else sfeat.astype(x.dtype))
-                periph = jnp.concatenate(
-                    [periph, jnp.broadcast_to(tail[None], (n, npf - 2))],
-                    axis=-1)
+                if sfeat is None:
+                    tail = jnp.zeros((n, npf - 2), x.dtype)
+                elif sfeat.ndim >= 2:
+                    t2 = sfeat.reshape(-1, sfeat.shape[-1]).astype(x.dtype)
+                    tail = jnp.tile(t2, (n // t2.shape[0], 1))
+                else:
+                    tail = jnp.broadcast_to(sfeat.astype(x.dtype)[None],
+                                            (n, npf - 2))
+                periph = jnp.concatenate([periph, tail], axis=-1)
         return self._backend_fn(eparams)(x, periph)
 
     def _eval_blocks(self, plan: ConductancePlan, vb01: jax.Array,
@@ -840,8 +865,13 @@ class AnalogExecutor:
                 lp = plan.with_lattice(gf, self.acfg, NB=nb_l, NO=no_l)
                 laux = conv4xbar.blocklast_weights(ep, self.geom)
                 lpre = conv4xbar.blocklast_precompute(laux, lp.g_norm)
+                s = sh[0] if sh else None
+                if s is not None and s.ndim == 3:
+                    # per-tile shift: the spec sliced this shard's own
+                    # (nb_l, no_l) lattice window; flatten to block order
+                    s = s.reshape(-1, s.shape[-1])
                 y2 = emulator_block_unified(
-                    laux, lpre, u, pos, shift=sh[0] if sh else None,
+                    laux, lpre, u, pos, shift=s,
                     use_pallas=self.use_pallas, chunk=self.fast_chunk,
                     tune=False)
                 Ml = u.shape[0]
@@ -852,7 +882,10 @@ class AnalogExecutor:
             in_specs = (d_spec, d_spec, gf_spec, P())
             if shift is not None:
                 args += (shift,)
-                in_specs += (P(),)
+                # per-tile (NB, NO, fc0_out) shift rides the SAME lattice
+                # axis as gf so each shard sees its own tiles' epilogue;
+                # flat (fc0_out,) shifts replicate
+                in_specs += ((gf_spec if shift.ndim == 3 else P()),)
         else:
             v_read = self.acfg.v_read
 
@@ -868,7 +901,12 @@ class AnalogExecutor:
                 return _combine(y[:Ml] - y[Ml:], Ml)
 
             args = drives + (plan.g_feat, ep, sfeat)
-            in_specs = (d_spec, d_spec, gf_spec, P(), P())
+            # per-tile (NB, NO, F) features shard with the lattice (each
+            # shard's block_outputs tiles its own window); flat vectors
+            # and None replicate
+            sf_spec = (gf_spec if sfeat is not None and sfeat.ndim == 3
+                       else P())
+            in_specs = (d_spec, d_spec, gf_spec, P(), sf_spec)
 
         y = shard_map_compat(body, mesh, in_specs, P(DATA_AXIS))(*args)
         if Rp != R:
@@ -956,9 +994,13 @@ class AnalogExecutor:
             pre = self._pre_for(plan, tag, aux)
             shift = None
             if sfeat is not None and "f0_scen" in aux:
-                # conditioned corner contribution: one (fc0_out,) bias
-                # shift, exactly zero at the ideal (all-zero) encoding
+                # conditioned corner contribution: a (fc0_out,) bias
+                # shift, exactly zero at the ideal (all-zero) encoding;
+                # per-tile (NB, NO, F) operands flatten to one
+                # (NB*NO, fc0_out) shift per block in lattice order
                 shift = sfeat @ aux["f0_scen"]
+                if shift.ndim == 3:
+                    shift = shift.reshape(-1, shift.shape[-1])
             u = plan.tile_v(self._drive01(jnp.abs(x2d) / x_scale), 1.0)
             pos = plan.tile_v((x2d > 0).astype(jnp.float32), 1.0)
             y2 = emulator_block_unified(aux, pre, u, pos, shift=shift,

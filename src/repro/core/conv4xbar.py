@@ -260,7 +260,11 @@ def _tail_stages(aux: dict, h: jax.Array, n: int, shp,
     """Conv stages 2.. + FC head on channels-last rows.  h: 2-D (rows, C)
     laid out as shp=(n, D, W, G) x channels; -> (n, O).  ``fc0_shift`` is
     an optional per-call bias shift on fc0's pre-activation (the
-    conditioned emulator's scenario-feature contribution).  ``dot``
+    conditioned emulator's scenario-feature contribution): either a flat
+    ``(fc0_out,)`` vector (whole-plan corner) or a per-tile ``(nblk,
+    fc0_out)`` lattice -- rows are laid out block-innermost (NB*NO cycles
+    fastest), so a 2-D shift folds onto ``(n // nblk, nblk, fc0_out)``
+    and each block gets its own scenario contribution.  ``dot``
     overrides the contraction (the unified Pallas kernel passes its
     MXU/bf16 dot so this exact code runs inside the kernel body)."""
     if dot is None:
@@ -278,7 +282,11 @@ def _tail_stages(aux: dict, h: jax.Array, n: int, shp,
     for i, (fw, fb) in enumerate(fcs):
         h = dot(h, fw) + fb
         if i == 0 and fc0_shift is not None:
-            h = h + fc0_shift
+            if fc0_shift.ndim == 2:
+                nblk, f = fc0_shift.shape
+                h = (h.reshape(-1, nblk, f) + fc0_shift).reshape(n, f)
+            else:
+                h = h + fc0_shift
         if i < len(fcs) - 1:
             h = jax.nn.celu(h)
     return h
@@ -325,10 +333,12 @@ def apply_blocklast(aux: dict, pre: dict, u01: jax.Array, pos01: jax.Array,
 
     u01:   (M, NB, D, H) |x|-magnitude wordline drive in [0, 1]
     pos01: (M, NB, D, H) 1.0 where the positive rail is driven (x > 0)
-    fc0_shift: optional (fc0_out,) pre-activation shift -- a conditioned
-    emulator's scenario-feature contribution ``sfeat @ aux["f0_scen"]``,
-    traced so corner/age changes reuse the executable (exactly zero at the
-    ideal corner, where the plain path omits it entirely).
+    fc0_shift: optional pre-activation shift -- a conditioned emulator's
+    scenario-feature contribution ``sfeat @ aux["f0_scen"]``: either
+    ``(fc0_out,)`` (whole-plan corner) or ``(NB*NO, fc0_out)`` (per-tile
+    feature operands, one shift per block in lattice order), traced so
+    corner/age changes reuse the executable (exactly zero at the ideal
+    corner, where the plain path omits it entirely).
     Returns (2, M*NB*NO, O): block outputs of the (v+, v-) rails.
 
     The stage-0 CELU runs once on the magnitude drive; each rail's stage-1

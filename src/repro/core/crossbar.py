@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -243,9 +243,113 @@ def build_conductance_plan(w: jax.Array, acfg: AnalogConfig,
 # --------------------------------------------------------------------------- #
 # Stuck-fault-aware remapping (classic fault-tolerant mapping)
 # --------------------------------------------------------------------------- #
+def _horizon_damage(g: np.ndarray, live: np.ndarray, fault: np.ndarray,
+                    by_group, plan: ConductancePlan, acfg: AnalogConfig,
+                    horizon: Sequence[np.ndarray]) -> np.ndarray:
+    """Anticipated end-of-horizon damage matrix ``dmg[q, p]`` averaged
+    over a drift trajectory.  Two terms per checkpoint:
+
+      * **drifted stuck-off excess** -- at age t a live cell of logical
+        group q placed at physical position p holds
+        ``clip(g * df_p(t), g_min, g_max)`` (the decay multiplier
+        belongs to the *physical* die position), and a stuck cell there
+        reads g_min instead: the clipped, drifted overhang is what the
+        fault costs once periodic recalibration has re-centered the
+        fleet on its drifted response.
+      * **drift mismatch** -- the healthy cells of a group hosted at a
+        decay-outlier position deviate from the fleet-mean decay a
+        global affine refit absorbs: ``g * |df_p - mean_p df|`` per live
+        unfaulted cell.  Without this term a fast-drifting position
+        looks deceptively "clean" (its fault excess decays away) and the
+        assignment would park heavy groups on the die positions that
+        decay them hardest.
+
+    An all-ones trajectory zeroes the mismatch term and reduces the
+    fault term to the instantaneous matrix exactly (live plan
+    conductances already sit inside [g_min, g_max])."""
+    gg = by_group(g)                                   # (NO, C) logical
+    lv = by_group(live)
+    C = gg.shape[1]
+    cells_per_nb = C // plan.NB
+    dmg = np.zeros((plan.NO, plan.NO))
+    horizon = list(horizon)
+    for df in horizon:
+        d = np.asarray(df, np.float64)
+        if d.ndim == 0:
+            dfc = np.broadcast_to(d, (plan.NO, C))
+        elif d.shape == (plan.NB, plan.NO):
+            # per-tile decay -> per (physical group, cell) with the cell
+            # axis (NB, D, H, W)-flattened NB-outermost, matching by_group
+            dfc = np.repeat(d.T, cells_per_nb, axis=1)
+        else:
+            raise ValueError(
+                f"horizon drift factor shaped {d.shape}; expected a "
+                f"scalar or (NB, NO) = {(plan.NB, plan.NO)}")
+        dbar = dfc.mean(axis=0)                        # fleet-mean decay
+        for p in range(plan.NO):
+            gd = np.clip(gg * dfc[p], acfg.g_min, acfg.g_max)
+            ex = np.where(lv, (gd - acfg.g_min), 0.0)
+            dmg[:, p] += ex @ fault[p]
+            mis = np.where(lv, gg * np.abs(dfc[p] - dbar), 0.0)
+            dmg[:, p] += mis @ (1.0 - fault[p])
+    span = float(acfg.g_max - acfg.g_min)
+    return dmg / (span * max(len(horizon), 1))
+
+
+def _assignment_horizon_score(g: np.ndarray, off: np.ndarray,
+                              gperm: np.ndarray, plan: ConductancePlan,
+                              acfg: AnalogConfig,
+                              horizon: Sequence[np.ndarray]) -> float:
+    """Exact end-of-horizon weight-space deviation of an assignment.
+
+    For each horizon drift factor, realize the effective cell
+    conductances a device would serve with under the candidate
+    permutation -- stuck-off cells pinned at ``g_min`` (the fault mask
+    lives at *physical* positions), live cells decayed by the physical
+    host's retention factor and clipped back into range -- fold the
+    interleaved pos/neg pairs into differential weights, and measure
+    ``min_a ||W_young - a * W_eff||_F^2`` over the real (un-padded)
+    columns.  The scalar ``a`` is the global affine refit periodic
+    recalibration performs, solved in closed form.  Averaged over the
+    horizon; lower is better.  This is the model the greedy candidates
+    are judged under, so the returned winner can never model-worse than
+    instant remapping."""
+    gperm = np.asarray(gperm)
+    off_at = off[:, gperm]                             # fault mask seen by q
+    live = g > 0.0
+    # mask padded logical columns (dropped by the assemble gather)
+    no = plan.no
+    col = (np.arange(plan.NO)[:, None] * no + np.arange(no)[None, :])
+    valid = (col < plan.N).astype(np.float64)          # (NO, no)
+    vmask = valid[None, :, None, None, :]
+    w_young = (g[..., 0::2] - g[..., 1::2]) * vmask
+    total = 0.0
+    horizon = list(horizon)
+    for df in horizon:
+        d = np.asarray(df, np.float64)
+        if d.ndim == 0:
+            dfq = np.broadcast_to(d, (plan.NB, plan.NO))
+        elif d.shape == (plan.NB, plan.NO):
+            dfq = d[:, gperm]                          # decay of q's host
+        else:
+            raise ValueError(
+                f"horizon drift factor shaped {d.shape}; expected a "
+                f"scalar or (NB, NO) = {(plan.NB, plan.NO)}")
+        dfe = dfq[:, :, None, None, None]
+        aged = np.clip(g * dfe, acfg.g_min, acfg.g_max)
+        eff = np.where(off_at, acfg.g_min, np.where(live, aged, 0.0))
+        w_eff = (eff[..., 0::2] - eff[..., 1::2]) * vmask
+        ee = float((w_eff * w_eff).sum())
+        a = float((w_eff * w_young).sum()) / ee if ee > 0.0 else 1.0
+        r = w_young - a * w_eff
+        total += float((r * r).sum())
+    return total / max(len(horizon), 1)
+
+
 def fault_aware_group_perm(g_feat: np.ndarray, stuck_off: np.ndarray,
                            plan: ConductancePlan, acfg: AnalogConfig,
-                           top_q: float = 0.9
+                           top_q: float = 0.9,
+                           horizon: Optional[Sequence[np.ndarray]] = None
                            ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Permute logical output groups across physical block positions so
     large-magnitude weights avoid stuck-at-G_off cells.
@@ -263,12 +367,31 @@ def fault_aware_group_perm(g_feat: np.ndarray, stuck_off: np.ndarray,
     heuristic).  Deterministic; the identity permutation falls out exactly
     when no stuck-off cell overlaps any programmed cell.
 
+    Wear-aware mode (``horizon`` given): ``horizon`` is a sequence of
+    retention-decay multipliers (``nonideal.perturb.drift_factor`` at the
+    maintenance checkpoints), each a scalar or an (NB, NO) array indexed
+    by *physical* tile.  A second candidate assignment is grown greedily
+    under the anticipated-damage matrix (``_horizon_damage``: drifted
+    stuck-off excess + drift-mismatch of healthy cells), and the instant
+    and wear-aware candidates are then SCORED under the exact
+    end-of-horizon weight-space deviation model
+    (``_assignment_horizon_score``: realized differential weights under
+    faults + per-position decay, with the global affine refit absorbed)
+    -- the lower-scoring assignment wins, instant on ties.  Wear-aware
+    remapping therefore never models-worse than instant remapping over
+    the horizon, and genuinely wins when per-die drift heterogeneity
+    makes slow-decaying positions the riskier hosts.  ``horizon=None``
+    runs the instantaneous assignment, bit-identically to a call without
+    the argument.
+
     Args:
       g_feat:    (NB, NO, D, H, W) base-plan conductances (logical layout).
       stuck_off: (NB, NO, D, H, W) boolean stuck-off mask at *physical*
                  positions (from `nonideal.perturb.realized_fault_masks`).
       plan:      the base plan (geometry only).
       acfg:      conductance range (g_min for the excess measure).
+      top_q:     |w| quantile defining the protected cell set.
+      horizon:   optional drift-factor trajectory for wear-aware scoring.
 
     Returns `(out_perm, gperm, ginv)` int arrays: `out_perm[j]` = physical
     column of logical column j (the `assemble` gather), `gperm[q]` =
@@ -277,6 +400,37 @@ def fault_aware_group_perm(g_feat: np.ndarray, stuck_off: np.ndarray,
     """
     g = np.asarray(g_feat, np.float64)
     off = np.asarray(stuck_off, bool)
+    cands = _perm_candidates(g, off, plan, acfg, top_q, horizon)
+    gperm = cands[0]
+    if len(cands) > 1:
+        s_inst = _assignment_horizon_score(g, off, cands[0], plan, acfg,
+                                           horizon)
+        s_wear = _assignment_horizon_score(g, off, cands[1], plan, acfg,
+                                           horizon)
+        if s_wear < s_inst:                            # instant wins ties
+            gperm = cands[1]
+    return finish_group_perm(gperm, plan)
+
+
+def finish_group_perm(gperm: np.ndarray, plan: ConductancePlan
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Expand a logical->physical group assignment into the
+    `(out_perm, gperm, ginv)` triple `fault_aware_group_perm` returns."""
+    ginv = np.empty_like(gperm)
+    ginv[gperm] = np.arange(plan.NO, dtype=np.int32)
+    cols = np.arange(plan.N, dtype=np.int32)
+    out_perm = gperm[cols // plan.no] * plan.no + cols % plan.no
+    return out_perm.astype(np.int32), gperm, ginv
+
+
+def _perm_candidates(g: np.ndarray, off: np.ndarray, plan: ConductancePlan,
+                     acfg: AnalogConfig, top_q: float,
+                     horizon: Optional[Sequence[np.ndarray]]) -> list:
+    """Candidate group assignments: the instantaneous greedy first,
+    plus -- when a ``horizon`` is given and it disagrees -- the
+    wear-aware greedy grown under the anticipated-damage matrix.  The
+    caller selects between them (model score here, realized score in
+    ``nonideal.perturb.remap_plan``)."""
     span = float(acfg.g_max - acfg.g_min)
     live = g > 0.0
     # damage a stuck-off cell does = programmed excess over g_min, in
@@ -284,8 +438,7 @@ def fault_aware_group_perm(g_feat: np.ndarray, stuck_off: np.ndarray,
     excess = np.where(live, (g - acfg.g_min) / span, 0.0)
     pos_excess = excess[excess > 0.0]
     if pos_excess.size == 0:
-        ident = np.arange(plan.NO, dtype=np.int32)
-        return np.arange(plan.N, dtype=np.int32), ident, ident.copy()
+        return [np.arange(plan.NO, dtype=np.int32)]
     thr = np.quantile(pos_excess, top_q)
     top = (excess >= thr) & live                       # top-decile |w| cells
     # per-group flattening: (NB, NO, D, H, W) -> (NO, NB*D*H*W)
@@ -293,27 +446,32 @@ def fault_aware_group_perm(g_feat: np.ndarray, stuck_off: np.ndarray,
     fault = by_group(off)                              # physical positions
     excess_g = by_group(excess)                        # logical groups
     top_g = by_group(top).astype(np.float64)
-    dmg = np.einsum("pc,qc->qp", fault, excess_g)
     hits = np.einsum("pc,qc->qp", fault, top_g)
-    big = dmg.max() + 1.0
-    cost = hits * big + dmg                            # lexicographic
     # greedy: most-vulnerable logical groups pick first -- ordered by
     # top-decile cell count FIRST (its own scale: a group's total excess
     # routinely exceeds dmg.max(), which is damped by the sparse mask)
     vbig = excess_g.sum(axis=1).max() + 1.0
     vuln = top_g.sum(axis=1) * vbig + excess_g.sum(axis=1)
     order = np.argsort(-vuln, kind="stable")
-    gperm = np.full(plan.NO, -1, dtype=np.int32)
-    free = np.ones(plan.NO, bool)
-    for q in order:
-        c = np.where(free, cost[q], np.inf)
-        best = c.min()
-        # prefer staying home on ties -> identity when fault-free
-        p = int(q) if (free[q] and c[q] <= best) else int(np.argmin(c))
-        gperm[q] = p
-        free[p] = False
-    ginv = np.empty_like(gperm)
-    ginv[gperm] = np.arange(plan.NO, dtype=np.int32)
-    cols = np.arange(plan.N, dtype=np.int32)
-    out_perm = gperm[cols // plan.no] * plan.no + cols % plan.no
-    return out_perm.astype(np.int32), gperm, ginv
+
+    def greedy(dmg: np.ndarray) -> np.ndarray:
+        big = dmg.max() + 1.0
+        cost = hits * big + dmg                        # lexicographic
+        gp = np.full(plan.NO, -1, dtype=np.int32)
+        free = np.ones(plan.NO, bool)
+        for q in order:
+            c = np.where(free, cost[q], np.inf)
+            best = c.min()
+            # prefer staying home on ties -> identity when fault-free
+            p = int(q) if (free[q] and c[q] <= best) else int(np.argmin(c))
+            gp[q] = p
+            free[p] = False
+        return gp
+
+    cands = [greedy(np.einsum("pc,qc->qp", fault, excess_g))]
+    if horizon is not None:
+        cand = greedy(_horizon_damage(g, live, fault, by_group, plan, acfg,
+                                      horizon))
+        if not np.array_equal(cand, cands[0]):
+            cands.append(cand)
+    return cands

@@ -70,8 +70,10 @@ class DeploymentState:
       out_perm   -- (N,) int32 logical->physical output gather
                     (identity = exact identity)
       eparams    -- emulator params (hot-swappable; traced)
-      sfeat      -- (N_SCENARIO_FEATURES,) scenario feature encoding a
-                    conditioned emulator consumes (all-zero at ideal)
+      sfeat      -- scenario feature encoding a conditioned emulator
+                    consumes: (N_SCENARIO_FEATURES,) for a scalar corner
+                    or (NB, NO, N_SCENARIO_FEATURES) per-tile feature
+                    operands for a tiled corner (all-zero at ideal)
       cal_a/cal_b -- the per-layer volts->logical calibration affine
 
     Instances are immutable; derive variants with ``replace`` /
@@ -144,14 +146,16 @@ class Deployment:
 
       scenario -- device non-ideality corner (None = ideal hardware)
       key      -- fleet fabrication key (same key = same devices)
-      remap    -- stuck-fault-aware column remapping policy
+      remap    -- stuck-fault-aware column remapping policy: False/True
+                  (off / instantaneous) or a tuple of checkpoint ages in
+                  seconds (wear-aware horizon scoring)
       params   -- emulator param override (hot-swap; None = executor's)
       states   -- preloaded per-tag states (``load_deployment``), served
                   verbatim instead of being re-derived
     """
     scenario: Optional[object] = None          # nonideal.Scenario
     key: Optional[jax.Array] = None
-    remap: bool = False
+    remap: "bool | Tuple[float, ...]" = False
     params: Optional[dict] = None
     states: Optional[Dict[str, DeploymentState]] = None
 
@@ -169,7 +173,9 @@ class Deployment:
                          else json.loads(scenario_to_json(self.scenario))),
             "key": (None if self.key is None
                     else np.asarray(self.key).tolist()),
-            "remap": bool(self.remap),
+            "remap": (list(self.remap)
+                      if isinstance(self.remap, (tuple, list))
+                      else bool(self.remap)),
         }, sort_keys=True)
 
     @classmethod
@@ -179,12 +185,13 @@ class Deployment:
         d = json.loads(doc)
         sc = d.get("scenario")
         key = d.get("key")
+        rm = d.get("remap", False)
         return cls(
             scenario=(None if sc is None
                       else scenario_from_json(json.dumps(sc))),
             key=(None if key is None
                  else jnp.asarray(np.asarray(key, np.uint32))),
-            remap=bool(d.get("remap", False)))
+            remap=tuple(rm) if isinstance(rm, list) else bool(rm))
 
 
 # --------------------------------------------------------------------------- #

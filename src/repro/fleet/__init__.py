@@ -1,0 +1,46 @@
+"""repro.fleet -- million-device digital twin & predictive maintenance.
+
+A deployed crossbar product is not one device: it is a *fleet* of
+fabricated instances of the same weights, each with its own programming
+-variation draw, stuck-cell population, read-noise level and retention
+-drift rate.  This package simulates that fleet at scale and schedules
+its maintenance:
+
+  * ``population`` -- ``FleetSpec`` / ``Fleet``: N devices materialized
+    lazily from per-device PRNG keys (fab draw -> per-tile scenario
+    lattice -> deterministic drift), evaluated as chunked vmapped
+    populations through the serving executor's unified forward.  A
+    million devices fit in bounded memory and the whole campaign runs
+    through exactly ONE compiled chunk executable
+    (``obs.RecompileSentinel``-gated).
+  * ``forecast`` -- per-device accuracy trajectories across the drift
+    timeline via the scenario-conditioned emulator (zero retraining:
+    the net reads each device's aged corner off its per-tile feature
+    operands), plus a cheap quantile-regression surrogate fitted on a
+    probed subsample that ranks all N devices without simulating them.
+  * ``maintenance`` -- ``MaintenancePlanner``: per-device action
+    timelines (recalibrate / field-retrain / retire, plus a fleet-level
+    wear-aware remap decision) minimizing a cost model of action costs
+    and accuracy-SLO violation penalties, with per-cohort batched
+    recalibration.  ``simulate_policy`` replays any action table through
+    the same chunk executable, which is how
+    ``benchmarks/bench_fleet.py`` shows the planner dominating both
+    "never maintain" and "recalibrate everything every checkpoint".
+
+See docs/fleet.md for the narrative and tests/test_fleet.py for the
+determinism / compile-once contracts.
+"""
+from repro.fleet.forecast import SurrogateRanker, forecast_fleet
+from repro.fleet.maintenance import (A_NONE, A_RECAL, A_RETIRE, A_RETRAIN,
+                                     ACTION_NAMES, ActionCosts, FleetPlan,
+                                     MaintenancePlanner,
+                                     always_recalibrate_policy, never_policy,
+                                     simulate_policy)
+from repro.fleet.population import Fleet, FleetSpec
+
+__all__ = [
+    "ACTION_NAMES", "A_NONE", "A_RECAL", "A_RETIRE", "A_RETRAIN",
+    "ActionCosts", "Fleet", "FleetPlan", "FleetSpec",
+    "MaintenancePlanner", "SurrogateRanker", "always_recalibrate_policy",
+    "forecast_fleet", "never_policy", "simulate_policy",
+]

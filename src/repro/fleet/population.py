@@ -1,0 +1,352 @@
+"""Fleet population: N fabricated devices from one key, evaluated in chunks.
+
+A fleet is defined by a ``FleetSpec`` (population size, the base device
+corner, fab-spread magnitudes) and one fabrication key.  Device ``d`` is
+materialized lazily from ``fold_in(fleet_key, d)``:
+
+  fab draw        -- per-tile lognormal multipliers on the base corner's
+                     programming sigma, read sigma, stuck-off rate and
+                     drift exponent (the (NB, NO) scenario lattice:
+                     die-position heterogeneity, different per device);
+  deterministic drift -- the device at age ``t`` is the SAME draw with
+                     ``drift_t`` rewritten, so trajectories are exact
+                     replays, not stochastic walks.
+
+``Fleet.evaluate`` pushes any slice of the population through the
+serving executor's unified forward as vmapped chunks of a FIXED size
+(the last chunk is padded and the pad rows dropped), with per-device
+maintenance epoch (``cal_age``) as a traced operand -- so a whole
+maintenance campaign (every age x maintenance-cohort combination, for a
+million devices) reuses exactly ONE compiled chunk executable.
+``cal_age = tc`` means the device was last MAINTAINED at ``tc``
+seconds: its array was reprogrammed (a fresh programming draw for that
+epoch, drift clock reset -- stuck cells persist, they are fab defects)
+and its affine recalibrated against the probe batch right after the
+write.  Serving at age ``t`` then sees ``t - tc`` seconds of retention
+drift on that epoch's write -- the dominant lifetime failure mode
+(docs/lifetime.md), modeled exactly.  Each device is scored by the
+relative error of its calibrated output against the IDEAL device
+through the same backend (the day-zero ground truth,
+``bench_lifetime``'s convention -- scoring against the backend's own
+ideal output cancels the shared model floor).
+
+Determinism contract (tests/test_fleet.py): results are bitwise
+reproducible across chunk sizes and across processes -- chunking only
+regroups the same per-device computations, and every random quantity
+derives from ``fold_in(fleet_key, device_id)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.deployment import DeploymentState
+from repro.nonideal.perturb import (_broadcast_scenario, perturb_plan,
+                                    realized_fault_masks)
+from repro.nonideal.scenario import (N_SCENARIO_FEATURES, Scenario,
+                                     scenario_features_tiled)
+from repro.obs import OBS
+
+
+@dataclass(frozen=True)
+class FleetSpec:
+    """Shape of a device population.
+
+    Attributes:
+      n_devices:    population size N.
+      base:         the nominal device corner every instance is drawn
+                    around (scalar or per-tile ``tile_scenarios``).
+      sigma_spread: lognormal spread of per-tile programming/read sigma
+                    multipliers (0 = every device identical in sigma).
+      nu_spread:    lognormal spread of per-tile drift exponents -- fab
+                    lots that age at different rates.
+      fault_spread: lognormal spread of per-tile stuck-off rates.
+      chunk:        devices per compiled chunk (the ONE executable's
+                    batch size; memory high-water mark scales with it,
+                    never with ``n_devices``).
+    """
+    n_devices: int
+    base: Scenario
+    sigma_spread: float = 0.25
+    nu_spread: float = 0.25
+    fault_spread: float = 0.25
+    chunk: int = 256
+
+
+class Fleet:
+    """Chunk-compiled population evaluation of ``ex.matmul``-equivalent
+    serving error for every device in a ``FleetSpec``.
+
+    Like ``nonideal.ScenarioSweep``, the executor's own deployment state
+    is bypassed: each device's corner, conductance draw, read key,
+    scenario features and in-trace-fitted calibration affine are built
+    per vmap lane from the device key.  The executor contributes the
+    cached conductance plan, the (possibly conditioned) emulator params
+    and the backend forward.  Static circuit parameters cannot vary per
+    device, so the base corner must keep ``r_line_scale == 1.0``.
+    """
+
+    def __init__(self, ex, w: jax.Array, tag: str, spec: FleetSpec,
+                 key: Optional[jax.Array] = None, n_probe: int = 16):
+        if spec.base.r_line_scale != 1.0:
+            raise ValueError(
+                "Fleet populations vary traced scenario fields only; "
+                "r_line_scale is a static of the circuit backend "
+                "(see ScenarioSweep)")
+        self.ex = ex
+        self.w = w.astype(jnp.float32)
+        self.tag = tag
+        self.spec = spec
+        self.key = jax.random.PRNGKey(0) if key is None else key
+        self.n_probe = int(n_probe)
+        self.trace_count = 0
+        self._fn = None
+        self._feat_fn = None
+        # the in-trace calibration probe batch is part of the fleet
+        # identity: fixed at construction, same for every device
+        self._xp = jax.random.normal(
+            jax.random.fold_in(self.key, 0xF1EE7), (self.n_probe, w.shape[0]),
+        ) * 0.5
+        if OBS.enabled:
+            OBS.gauge("fleet_devices_total",
+                      "population size of the active fleet",
+                      tag=tag).set(float(spec.n_devices))
+
+    # ------------------------------------------------------------------ #
+    # per-device materialization (traced)
+    # ------------------------------------------------------------------ #
+    def _device_scenario(self, k: jax.Array, nb: int, no: int) -> Scenario:
+        """The fab draw: device ``k``'s per-tile scenario lattice.
+
+        Lognormal multipliers keep every leaf positive and the base
+        corner the population median; a zero spread collapses the
+        population to N identical devices (useful for isolating the
+        conductance-draw variance)."""
+        sp = self.spec
+        base = _broadcast_scenario(sp.base, (nb, no))
+        ks, kr, kn, kf = jax.random.split(k, 4)
+        logn = lambda kk, s: jnp.exp(
+            s * jax.random.normal(kk, (nb, no), jnp.float32))
+        return dataclasses.replace(
+            base,
+            prog_sigma=base.prog_sigma * logn(ks, sp.sigma_spread),
+            read_sigma=base.read_sigma * logn(kr, sp.sigma_spread),
+            drift_nu=base.drift_nu * logn(kn, sp.nu_spread),
+            p_stuck_off=jnp.clip(
+                base.p_stuck_off * logn(kf, sp.fault_spread), 0.0, 0.5))
+
+    def _build(self):
+        from repro.core.analog import _st_matmul_u
+        ex, w, tag = self.ex, self.w, self.tag
+        fleet_key = self.key
+
+        def fwd(x2, xp, ids, age, cal_age):
+            self.trace_count += 1          # trace-time side effect, by design
+            plan = ex._plan_for(w, tag)    # concrete w -> cached, baked
+            nb, no = plan.NB, plan.NO
+            ep = (ex.emulator_params
+                  if ex.acfg.backend == "emulator"
+                  and ex.emulator_params is not None else {})
+            conditioned = getattr(ex, "emulator_conditioned", False)
+            operm = jnp.arange(plan.N, dtype=jnp.int32)
+
+            # ground truth: the IDEAL device through the same backend --
+            # the day-zero computation lifetime management tries to
+            # preserve (benchmarks/bench_lifetime.py's convention).
+            # Scoring against the backend's own ideal output cancels the
+            # shared model floor, which would otherwise swamp the aging
+            # signal (the circuit -- and the emulator trained on it --
+            # deviates from the digital product by design: IR drop,
+            # nonlinearity).
+            st0 = DeploymentState.ideal(plan, eparams=ep)
+            yp_ref = _st_matmul_u(ex, tag, xp, w, st0)   # probe labels
+            y_ref = _st_matmul_u(ex, tag, x2, w, st0)
+
+            def fit_affine(yc):
+                # recalibration restores the day-zero mapping: fit the
+                # device's probe volts to the ideal reference labels in
+                # x_scale-normalized units, ex.calibrate's mechanism
+                # (the affine is applied pre-scale by the unified
+                # forward).  Device ~= perturbed ideal, so the fit is
+                # well-conditioned in every backend regime -- unlike a
+                # fit against the digital product, which degenerates to
+                # noise once the backend's model floor dominates.
+                xsp = jnp.maximum(jnp.max(jnp.abs(xp)), 1e-9)
+                yv, yd = (yc / xsp).ravel(), (yp_ref / xsp).ravel()
+                vm, dm = yv.mean(), yd.mean()
+                var = jnp.maximum(((yv - vm) ** 2).mean(), 1e-12)
+                a = ((yv - vm) * (yd - dm)).mean() / var
+                return a, dm - a * vm
+
+            live = plan.g_feat > 0.0       # padded lattice sites stay 0
+
+            def state_at(scen: Scenario, age, kp, kf, kr) -> DeploymentState:
+                # ``age`` is seconds SINCE PROGRAMMING (the drift clock
+                # resets when the array is rewritten); ``kp`` keys the
+                # programming draw of that epoch, ``kf`` the fab draw --
+                # stuck cells are permanent defects, so they come from
+                # the device key no matter how often we reprogram
+                aged = dataclasses.replace(
+                    scen, drift_t=jnp.full((nb, no), age, jnp.float32))
+                nofault = dataclasses.replace(
+                    aged, p_stuck_on=jnp.zeros((nb, no), jnp.float32),
+                    p_stuck_off=jnp.zeros((nb, no), jnp.float32))
+                p = perturb_plan(plan, ex.acfg, nofault, kp)
+                on, off = realized_fault_masks(plan, aged, kf)
+                gf = jnp.where(live & on, ex.acfg.g_max,
+                               jnp.where(live & off, ex.acfg.g_min,
+                                         p.g_feat))
+                sf = (scenario_features_tiled(aged) if conditioned
+                      else jnp.zeros((N_SCENARIO_FEATURES,), jnp.float32))
+                return DeploymentState(
+                    gf=gf, read_sigma=aged.read_sigma, read_key=kr,
+                    out_perm=operm, eparams=ep, sfeat=sf,
+                    cal_a=jnp.asarray(1.0, jnp.float32),
+                    cal_b=jnp.asarray(0.0, jnp.float32))
+
+            def one(i, t, tc):
+                k = jax.random.fold_in(fleet_key, i)
+                kd, kc, kr = jax.random.split(jax.random.fold_in(k, 7), 3)
+                scen = self._device_scenario(k, nb, no)
+                # ``tc`` is the last MAINTENANCE epoch: the array was
+                # reprogrammed (fresh conductance draw, drift clock
+                # reset) and its affine re-fitted then.  kp keys that
+                # epoch's programming draw; tc = 0 is the deployment
+                # write
+                kp = jax.random.fold_in(kd, tc.astype(jnp.int32))
+                a, b = fit_affine(_st_matmul_u(
+                    ex, tag, xp, w, state_at(scen, 0.0, kp, kd, kc)))
+                # serve: the same written state drifted for (t - tc)
+                # seconds, under the epoch's affine (kr: a fresh read)
+                st = state_at(scen, t - tc, kp, kd, kr) \
+                    .with_calibration(a, b)
+                y = _st_matmul_u(ex, tag, x2, w, st)
+                return jnp.linalg.norm(y - y_ref) \
+                    / jnp.maximum(jnp.linalg.norm(y_ref), 1e-12)
+
+            return jax.vmap(one)(ids, age, cal_age)
+
+        self._fn = jax.jit(fwd)
+
+    def cache_size(self) -> int:
+        """Compiled chunk executables (tests/bench assert this stays 1
+        across the whole campaign)."""
+        return self._fn._cache_size() if self._fn is not None else 0
+
+    # ------------------------------------------------------------------ #
+    # chunked evaluation (bounded memory, padded last chunk)
+    # ------------------------------------------------------------------ #
+    def evaluate(self, x: jax.Array, age,
+                 ids: Optional[np.ndarray] = None,
+                 cal_age=None) -> np.ndarray:
+        """Per-device serving relative error at ``age`` seconds.
+
+        ``ids`` selects a device subset (default: the whole population);
+        ``age`` and ``cal_age`` are scalars or per-device arrays.
+        ``cal_age`` is the device's last maintenance epoch -- array
+        reprogrammed and affine recalibrated then, so the serve sees
+        ``age - cal_age`` seconds of drift (default 0.0: written at
+        deployment, never maintained).  Work proceeds in fixed-size
+        chunks -- the last chunk is
+        padded by repeating its final device and the pad rows dropped --
+        so memory is bounded by ``spec.chunk`` and every call reuses the
+        one compiled executable."""
+        if self._fn is None:
+            self._build()
+        ids = (np.arange(self.spec.n_devices, dtype=np.int32)
+               if ids is None else np.asarray(ids, np.int32))
+        n = ids.shape[0]
+        age = np.broadcast_to(np.asarray(age, np.float32), (n,))
+        cal = np.broadcast_to(
+            np.asarray(0.0 if cal_age is None else cal_age, np.float32), (n,))
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        c = self.spec.chunk
+        out = np.empty((n,), np.float32)
+        for lo in range(0, n, c):
+            hi = min(lo + c, n)
+            pad = c - (hi - lo)
+            sl = lambda a: np.pad(a[lo:hi], (0, pad), mode="edge")
+            res = self._fn(x2, self._xp, jnp.asarray(sl(ids)),
+                           jnp.asarray(sl(age)), jnp.asarray(sl(cal)))
+            out[lo:hi] = np.asarray(res)[:hi - lo]
+            if OBS.enabled:
+                OBS.counter("fleet_chunk_evals_total",
+                            "compiled fleet chunk executions",
+                            tag=self.tag).inc()
+        if OBS.enabled:
+            OBS.counter("fleet_eval_devices_total",
+                        "devices evaluated across fleet campaigns",
+                        tag=self.tag).inc(float(n))
+            OBS.gauge("fleet_eval_rel_err",
+                      "serving relative error of the last fleet "
+                      "evaluation", tag=self.tag, stat="mean"
+                      ).set(float(out.mean()))
+            OBS.gauge("fleet_eval_rel_err",
+                      "serving relative error of the last fleet "
+                      "evaluation", tag=self.tag, stat="p95"
+                      ).set(float(np.quantile(out, 0.95)))
+        return out
+
+    # ------------------------------------------------------------------ #
+    # cheap per-device features (for the forecast surrogate)
+    # ------------------------------------------------------------------ #
+    def device_features(self, ids: np.ndarray, age) -> np.ndarray:
+        """(n, 2 * N_SCENARIO_FEATURES + 4) per-device summary features
+        at ``age`` (seconds since the array was written -- the DRIFT
+        age, see ``evaluate``): mean and max over the tile lattice of
+        each device's per-tile scenario feature encoding, plus the
+        device's REALIZED stuck-cell fractions (mean/max over tiles of
+        the fraction of live cells the fab draw actually stuck on/off).
+        The realized fractions -- not just the fab-drawn rates already
+        in the scenario encoding -- are what separate a device's
+        freshly-maintained error floor from its neighbors': stuck cells
+        are permanent, so an unlucky draw caps accuracy no matter how
+        often the array is rewritten.  No emulator execution -- this is
+        the surrogate ranker's input, cheap enough for the whole
+        population."""
+        if self._feat_fn is None:
+            fleet_key = self.key
+            plan = self.ex._plan_for(self.w, self.tag)
+            nb, no = plan.NB, plan.NO
+            live = plan.g_feat > 0.0
+            cell_axes = tuple(range(2, plan.g_feat.ndim))
+            n_live = jnp.maximum(live.sum(axis=cell_axes)
+                                 .astype(jnp.float32), 1.0)
+
+            def feats(i, t):
+                k = jax.random.fold_in(fleet_key, i)
+                # same key discipline as the chunk forward's ``one``:
+                # kd is the device's permanent fab/fault key
+                kd, _, _ = jax.random.split(jax.random.fold_in(k, 7), 3)
+                scen = self._device_scenario(k, nb, no)
+                aged = dataclasses.replace(
+                    scen, drift_t=jnp.full((nb, no), t, jnp.float32))
+                f = scenario_features_tiled(aged).reshape(
+                    -1, N_SCENARIO_FEATURES)
+                on, off = realized_fault_masks(plan, aged, kd)
+                fr_on = (live & on).sum(axis=cell_axes) / n_live
+                fr_off = (live & off).sum(axis=cell_axes) / n_live
+                return jnp.concatenate([
+                    f.mean(axis=0), f.max(axis=0),
+                    jnp.stack([fr_on.mean(), fr_on.max(),
+                               fr_off.mean(), fr_off.max()])])
+
+            self._feat_fn = jax.jit(jax.vmap(feats))
+        ids = np.asarray(ids, np.int32)
+        n = ids.shape[0]
+        age = np.broadcast_to(np.asarray(age, np.float32), (n,))
+        c = self.spec.chunk
+        out = np.empty((n, 2 * N_SCENARIO_FEATURES + 4), np.float32)
+        for lo in range(0, n, c):
+            hi = min(lo + c, n)
+            pad = c - (hi - lo)
+            sl = lambda a: np.pad(a[lo:hi], (0, pad), mode="edge")
+            out[lo:hi] = np.asarray(
+                self._feat_fn(jnp.asarray(sl(ids)),
+                              jnp.asarray(sl(age))))[:hi - lo]
+        return out

@@ -230,8 +230,10 @@ def _unified_kernel(*refs, tail_ks: Tuple[int, ...], kw: int, n_fc: int,
     The kernel body calls the same ``dual_rail_stage1``/``_tail_stages``
     code the CPU fast path (``conv4xbar.apply_blocklast``) runs, so the
     two paths are bit-identical by construction.  The scenario epilogue
-    is the precomputed fc0 shift ``sfeat @ f0_scen`` -- a grid-constant
-    operand, exactly zero at the ideal corner's all-zero encoding -- so
+    is the precomputed fc0 shift ``sfeat @ f0_scen`` -- grid-constant
+    for a whole-plan corner, block-indexed ``(1, fc0_out)`` for per-tile
+    feature operands, exactly zero at the ideal corner's all-zero
+    encoding -- so
     ONE compiled kernel serves ideal, conditioned and non-ideal corners
     (perturbed conductances arrive through the block-indexed g0/celu0/y0
     precompute operands).  ``compute_dtype=bfloat16`` runs every GEMM
@@ -301,8 +303,11 @@ def emulator_block_unified_pallas(aux: dict, pre: dict, u01: jax.Array,
     aux/pre: ``conv4xbar.blocklast_weights`` / ``blocklast_precompute``
     tensors (the precompute carries the deployed -- possibly perturbed --
     conductance state); u01/pos01: (M, NB, D, H) magnitude drive and
-    positive-rail mask; shift: optional (fc0_out,) scenario epilogue
-    ``sfeat @ aux["f0_scen"]`` (None = ideal, folds to an exact zero add).
+    positive-rail mask; shift: optional scenario epilogue
+    ``sfeat @ aux["f0_scen"]`` -- ``(fc0_out,)`` grid-constant for a
+    whole-plan corner, or ``(NB*NO, fc0_out)`` block-indexed for
+    per-tile feature operands (each grid cell then reads its own tile's
+    shift) -- None = ideal, folds to an exact zero add.
     Returns (2, M*NB*NO, O) rail block outputs, row-compatible with
     ``apply_blocklast``."""
     M, NB, D, H = u01.shape
@@ -341,7 +346,11 @@ def emulator_block_unified_pallas(aux: dict, pre: dict, u01: jax.Array,
         pl.BlockSpec((1, k1, D, W, G, C0),
                      lambda i, j: (j, 0, 0, 0, 0, 0)),
         pl.BlockSpec((1, D * W * G, O1), lambda i, j: (j, 0, 0)),
-        _const_spec(shift), _const_spec(aux["w0v"]), _const_spec(w1k),
+        # per-tile (NBLK, fc0_out) shift: each grid cell j reads row j;
+        # whole-plan (fc0_out,) shift: grid-constant
+        (pl.BlockSpec((1, shift.shape[1]), lambda i, j: (j, 0))
+         if shift.ndim == 2 else _const_spec(shift)),
+        _const_spec(aux["w0v"]), _const_spec(w1k),
     ]
     for wk, b, _ in tail:
         operands += [wk, b]

@@ -22,6 +22,7 @@ from repro.nonideal.lifetime import (DEFAULT_TIMELINE, LifetimeScheduler,
                                      make_noise_aware_retrainer,
                                      scenario_at_age)
 from repro.nonideal.perturb import (apply_read_noise, drift_factor,
+                                    drift_factor_at_age,
                                     perturb_conductance, perturb_plan,
                                     quantize_levels, realized_fault_masks,
                                     remap_plan, sample_fault_masks,
@@ -30,15 +31,17 @@ from repro.nonideal.scenario import (BUILTIN_SCENARIOS, N_SCENARIO_FEATURES,
                                      SCENARIO_FEATURE_NAMES, Scenario,
                                      collapse_tiles, get_scenario,
                                      list_scenarios, register_scenario,
-                                     scenario_features, scenario_from_json,
-                                     scenario_to_json, tile_scenarios)
+                                     scenario_features,
+                                     scenario_features_tiled,
+                                     scenario_from_json, scenario_to_json,
+                                     tile_scenarios)
 from repro.nonideal.sweep import ScenarioSweep
 
 __all__ = [
     "BUILTIN_SCENARIOS", "DEFAULT_TIMELINE", "LifetimeScheduler",
     "N_SCENARIO_FEATURES", "SCENARIO_FEATURE_NAMES", "Scenario",
     "ScenarioSpace", "ScenarioSweep", "apply_read_noise", "collapse_tiles",
-    "drift_factor", "generate_dataset_conditioned",
+    "drift_factor", "drift_factor_at_age", "generate_dataset_conditioned",
     "generate_dataset_nonideal", "get_scenario", "list_scenarios",
     "make_conditioned_field_calibrator", "make_field_retrainer",
     "make_noise_aware_retrainer",
@@ -46,6 +49,7 @@ __all__ = [
     "quantize_levels", "realized_fault_masks", "register_scenario",
     "remap_plan", "sample_fault_masks", "sample_scenarios",
     "scenario_at_age", "scenario_circuit_params", "scenario_features",
-    "scenario_from_json", "scenario_to_json", "tile_scenarios",
+    "scenario_features_tiled", "scenario_from_json", "scenario_to_json",
+    "tile_scenarios",
     "train_conditioned_emulator", "train_noise_aware_emulator",
 ]

@@ -195,7 +195,8 @@ def make_conditioned_field_calibrator(key: jax.Array,
     from repro.core.circuit import block_response
     from repro.nonideal.data import finetune_emulator
     from repro.nonideal.perturb import scenario_circuit_params
-    from repro.nonideal.scenario import scenario_features
+    from repro.nonideal.scenario import (scenario_features,
+                                         scenario_features_tiled)
 
     def retrain(scenario: Scenario, t: float, ex, w,
                 tag: str) -> Optional[dict]:
@@ -213,12 +214,18 @@ def make_conditioned_field_calibrator(key: jax.Array,
             X, periph2, y = _probe_blocks(ex, plan,
                                           jax.random.fold_in(key, i),
                                           n, w, solve)
-            sf = jnp.asarray(scenario_features(aged), jnp.float32)
+            if aged.tile_shape is not None:
+                # per-tile feature operands, exactly as serving feeds
+                # them: one vector per tile, tiled across the probe rows
+                # (build_x rows are lattice-innermost)
+                sf2 = jnp.asarray(scenario_features_tiled(aged), jnp.float32)
+                sf2 = sf2.reshape(-1, sf2.shape[-1])
+                sfr = jnp.tile(sf2, (X.shape[0] // sf2.shape[0], 1))
+            else:
+                sf = jnp.asarray(scenario_features(aged), jnp.float32)
+                sfr = jnp.broadcast_to(sf[None], (X.shape[0], sf.shape[0]))
             xs.append(X)
-            ps.append(jnp.concatenate(
-                [periph2,
-                 jnp.broadcast_to(sf[None], (X.shape[0], sf.shape[0]))],
-                axis=-1))
+            ps.append(jnp.concatenate([periph2, sfr], axis=-1))
             ys.append(y)
         ex.deploy(scenario=scenario_at_age(scenario, 0.0),
                   key=ex.scenario_key)

@@ -33,7 +33,7 @@ large-|w| columns away from stuck-off cells
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +41,8 @@ import numpy as np
 
 from repro.configs.base import AnalogConfig
 from repro.core.circuit import CircuitParams
-from repro.core.crossbar import ConductancePlan, fault_aware_group_perm
+from repro.core.crossbar import (ConductancePlan, _perm_candidates,
+                                 finish_group_perm)
 from repro.nonideal.scenario import _LEAF_FIELDS, _leaf_dtype, Scenario
 
 
@@ -184,8 +185,21 @@ def realized_fault_masks(plan: ConductancePlan, scenario: Scenario,
     return jax.vmap(jax.vmap(one))(scb, keys)
 
 
+def drift_factor_at_age(scenario: Scenario, age: float) -> jax.Array:
+    """Retention decay multiplier at ``age`` seconds since programming --
+    ``drift_factor`` with the scenario's ``drift_t`` replaced by ``age``.
+    Tile-aware: per-tile ``drift_nu`` / ``drift_t0`` leaves give an
+    (NB, NO) factor; exactly 1.0 wherever drift is inactive."""
+    t = jnp.asarray(age, jnp.float32)
+    nu = jnp.asarray(scenario.drift_nu, jnp.float32)
+    t0 = jnp.asarray(scenario.drift_t0, jnp.float32)
+    active = (nu != 0.0) & (t > 0.0)
+    return jnp.where(active, jnp.power(jnp.maximum(t, 1e-30) / t0, -nu), 1.0)
+
+
 def remap_plan(plan: ConductancePlan, acfg: AnalogConfig, scenario: Scenario,
-               key: jax.Array, top_q: float = 0.9
+               key: jax.Array, top_q: float = 0.9,
+               horizon: Optional[Sequence[float]] = None
                ) -> Tuple[ConductancePlan, jax.Array]:
     """Stuck-fault-aware remapped copy of a conductance plan.
 
@@ -198,15 +212,85 @@ def remap_plan(plan: ConductancePlan, acfg: AnalogConfig, scenario: Scenario,
     ``plan.assemble`` hands back logically-ordered outputs.  Identity when
     the scenario has no stuck-off faults.  Perturb the result with the
     SAME ``key``: the masks depend only on shapes, so the faults land on
-    the same physical cells the permutation was planned against."""
+    the same physical cells the permutation was planned against.
+
+    ``horizon`` -- optional sequence of ages (seconds since programming,
+    e.g. the maintenance-checkpoint timeline) -- switches the permutation
+    to *wear-aware* selection: a second candidate assignment is grown
+    greedily under the stuck-off damage anticipated over the whole drift
+    trajectory (``fault_aware_group_perm``'s horizon mode), then the
+    instant and wear-aware candidates are scored by REALIZING each
+    through ``perturb_plan`` at every horizon age -- the same
+    (scenario, key) perturbation the deployment will serve with, so
+    programming noise, stuck-on faults, drift and clipping are all in
+    the score -- and measuring the global-scale-invariant deviation of
+    the aged differential weights from the young programmed ones.  The
+    lower-deviation candidate wins, instant on ties: wear-aware
+    remapping never realizes a worse end-of-horizon weight deviation
+    than instant remapping, and genuinely wins when per-tile drift
+    heterogeneity makes slow-decaying die positions the riskier
+    long-term hosts.  ``horizon=None`` is bit-identical to the
+    instantaneous assignment."""
     if not scenario.has_stuck_off:
         return plan, jnp.arange(plan.N, dtype=jnp.int32)
     _, off = realized_fault_masks(plan, scenario, key)
-    out_perm, gperm, ginv = fault_aware_group_perm(
-        np.asarray(plan.g_feat), np.asarray(off), plan, acfg, top_q=top_q)
+    g = np.asarray(plan.g_feat)
+    hz = None
+    if horizon is not None:
+        with jax.ensure_compile_time_eval():
+            hz = [np.asarray(drift_factor_at_age(scenario, t))
+                  for t in horizon]
+    cands = _perm_candidates(np.asarray(g, np.float64),
+                             np.asarray(off, bool), plan, acfg, top_q, hz)
+    gperm = cands[0]
+    if len(cands) > 1:
+        scores = [_realized_horizon_score(plan, acfg, scenario, key, c,
+                                          horizon) for c in cands]
+        if scores[1] < scores[0]:                      # instant wins ties
+            gperm = cands[1]
+    out_perm, gperm, ginv = finish_group_perm(gperm, plan)
     remapped = plan.with_g(jnp.take(plan.g_feat, jnp.asarray(ginv), axis=1),
                            acfg).with_perm(jnp.asarray(out_perm, jnp.int32))
     return remapped, remapped.out_perm
+
+
+def _realized_horizon_score(plan: ConductancePlan, acfg: AnalogConfig,
+                            scenario: Scenario, key: jax.Array,
+                            gperm: np.ndarray,
+                            ages: Sequence[float]) -> float:
+    """Realized end-of-horizon weight deviation of a remap candidate.
+
+    Builds the candidate's remapped plan, perturbs it with the SAME
+    ``(scenario, key)`` the deployment will use at each checkpoint age
+    (programming noise, stuck faults, drift, clipping -- the exact
+    serving conductances), gathers the aged cells back into logical
+    order, and measures ``min_a ||W_young - a * W_aged||_F^2`` over the
+    real (un-padded) columns -- the global scale ``a`` standing in for
+    the affine refit periodic recalibration performs.  Averaged over the
+    ages; lower is better."""
+    gperm = np.asarray(gperm)
+    ginv = np.empty_like(gperm)
+    ginv[gperm] = np.arange(gperm.shape[0], dtype=gperm.dtype)
+    no = plan.no
+    col = np.arange(plan.NO)[:, None] * no + np.arange(no)[None, :]
+    vmask = (col < plan.N)[None, :, None, None, :].astype(np.float64)
+    g = np.asarray(plan.g_feat, np.float64)
+    w_young = (g[..., 0::2] - g[..., 1::2]) * vmask
+    with jax.ensure_compile_time_eval():
+        base = plan.with_g(jnp.take(plan.g_feat, jnp.asarray(ginv), axis=1),
+                           acfg)
+        total = 0.0
+        for t in ages:
+            aged = dataclasses.replace(scenario,
+                                       drift_t=jnp.asarray(t, jnp.float32))
+            eff = np.asarray(perturb_plan(base, acfg, aged, key).g_feat,
+                             np.float64)[:, gperm]
+            w_eff = (eff[..., 0::2] - eff[..., 1::2]) * vmask
+            ee = float((w_eff * w_eff).sum())
+            a = float((w_eff * w_young).sum()) / ee if ee > 0.0 else 1.0
+            r = w_young - a * w_eff
+            total += float((r * r).sum())
+    return total / max(len(list(ages)), 1)
 
 
 def scenario_circuit_params(cp: CircuitParams,

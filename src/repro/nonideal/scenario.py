@@ -290,6 +290,61 @@ def scenario_features(s: Scenario) -> jax.Array:
     ])
 
 
+def scenario_features_tiled(s: Scenario, nb: Optional[int] = None,
+                            no: Optional[int] = None) -> jax.Array:
+    """Per-tile feature operand: encode a scenario as an ``(NB, NO,
+    N_SCENARIO_FEATURES)`` f32 lattice, one feature vector per
+    (block-group, output-group) tile.
+
+    This is the heterogeneity-preserving sibling of
+    ``scenario_features``: instead of collapsing a tiled corner to fleet
+    (mean, max) summaries, every tile gets its own vector, encoded
+    exactly as if that tile were a scalar corner of its own values --
+    for each (mean, max) feature pair the tile's mean equals its max
+    equals its value, which is precisely the distribution the
+    conditioned net was trained on (its training corners are scalar
+    scenarios).  A *uniform* tile batch therefore encodes each tile
+    identically to ``scenario_features`` of the collapsed scalar corner,
+    and the ideal corner encodes to the all-zero lattice (so the plain
+    fast path stays bit-identical).
+
+    Scalar scenarios broadcast to the lattice; pass ``nb``/``no`` for
+    those (tiled scenarios carry their own ``tile_shape``).  Pure jnp on
+    the numeric leaves, so it traces -- aging / corner swaps through a
+    tiled feature operand never recompile.
+
+    >>> import numpy as np
+    >>> from repro.nonideal import (Scenario, scenario_features,
+    ...                             scenario_features_tiled, tile_scenarios)
+    >>> t = scenario_features_tiled(Scenario(), nb=2, no=3)
+    >>> t.shape == (2, 3, N_SCENARIO_FEATURES) and bool(np.all(t == 0))
+    True
+    >>> u = tile_scenarios(2, 3, prog_sigma=0.05, drift_nu=0.02)
+    >>> bool(np.allclose(scenario_features_tiled(u)[1, 2],
+    ...                  scenario_features(collapse_tiles(u))))
+    True
+    """
+    shape = s.tile_shape
+    if shape is None:
+        if nb is None or no is None:
+            raise ValueError("scalar scenario needs explicit (nb, no)")
+        shape = (int(nb), int(no))
+
+    def bc(v):
+        return jnp.broadcast_to(jnp.asarray(v, jnp.float32), shape)
+
+    age = jnp.log1p(bc(s.drift_t) / jnp.maximum(bc(s.drift_t0), 1e-30)) \
+        / _DRIFT_AGE_SCALE
+    nl = bc(s.n_levels)
+    quant = jnp.where(nl >= 2.0, 2.0 / jnp.maximum(nl, 2.0), 0.0)
+    ps, rs = bc(s.prog_sigma), bc(s.read_sigma)
+    on, off = bc(s.p_stuck_on), bc(s.p_stuck_off)
+    nu = bc(s.drift_nu)
+    rline = jnp.full(shape, s.r_line_scale - 1.0, jnp.float32)
+    return jnp.stack([ps, ps, rs, rs, on, on, off, off, nu, nu,
+                      age, rline, quant], axis=-1)
+
+
 # --------------------------------------------------------------------------- #
 # String-keyed registry + JSON (de)serialization
 # --------------------------------------------------------------------------- #

@@ -198,14 +198,22 @@ def test_corner_and_age_swaps_zero_recompiles():
     assert fn._cache_size() == 1
     # ages actually change the served numbers (the net sees drift_age)
     assert not np.allclose(outs[1], outs[2])
-    # per-tile batch rides the same executable too
+    # a per-tile batch switches the sfeat operand to its (NB, NO, F)
+    # per-tile encoding -- ONE extra executable for the tiled aval...
     plan = ex._plan_for(w, "t")
     ex.deploy(scenario=tile_scenarios(plan.NB, plan.NO, prog_sigma=0.06,
                                       drift_nu=0.05, drift_t=8.64e4,
                                       name="tiled"),
               key=jax.random.PRNGKey(2))
     ex.matmul(x, w, "t")
-    assert ex._fns["t"][2] is fn and fn._cache_size() == 1
+    assert ex._fns["t"][2] is fn and fn._cache_size() == 2
+    # ...and every further tiled corner / age swap reuses it
+    ex.deploy(scenario=tile_scenarios(plan.NB, plan.NO, prog_sigma=0.02,
+                                      drift_nu=0.08, drift_t=2.592e6,
+                                      name="tiled2"),
+              key=jax.random.PRNGKey(3))
+    ex.matmul(x, w, "t")
+    assert ex._fns["t"][2] is fn and fn._cache_size() == 2
 
 
 def test_conditioned_sweep_compiles_once():

@@ -1,0 +1,314 @@
+"""Tests for the fleet digital twin: bitwise determinism across chunk
+sizes and processes, padded-last-chunk correctness, the compile-once
+chunk-executable contract, maintenance (reprogram + recalibrate)
+semantics, planner cost-model units on synthetic forecast grids, and
+the wear-aware remap policy plumbing."""
+import os
+import subprocess
+import sys
+import types
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AnalogConfig
+from repro.configs.rram_ps32 import CASE_A
+from repro.core import conv4xbar
+from repro.core.analog import AnalogExecutor
+from repro.fleet import (A_NONE, A_RECAL, A_RETIRE, A_RETRAIN, ActionCosts,
+                         Fleet, FleetPlan, FleetSpec, MaintenancePlanner,
+                         SurrogateRanker, always_recalibrate_policy,
+                         never_policy, simulate_policy)
+from repro.fleet.maintenance import _realized_cal_ages
+from repro.models.common import init_params
+from repro.nonideal import (N_SCENARIO_FEATURES, Scenario, remap_plan,
+                            tile_scenarios)
+
+ACFG = AnalogConfig()
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+BASE = Scenario(name="fleet-test", prog_sigma=0.04, read_sigma=0.01,
+                p_stuck_off=0.05, drift_nu=0.03, drift_t=0.0)
+AGES = (3_600.0, 86_400.0)
+
+
+def _executor(backend="analytic", conditioned=False):
+    kw = {}
+    if backend == "emulator":
+        n_periph = 2 + (N_SCENARIO_FEATURES if conditioned else 0)
+        kw["emulator_params"] = init_params(
+            jax.random.PRNGKey(7),
+            conv4xbar.conv4xbar_schema(CASE_A, n_periph=n_periph))
+        kw["use_pallas"] = False
+    return AnalogExecutor(acfg=AnalogConfig(backend=backend), geom=CASE_A,
+                          **kw)
+
+
+def _fleet(n=24, chunk=8, backend="analytic", seed=0, n_probe=8,
+           conditioned=False):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (32, 8)) * 0.2
+    ex = _executor(backend, conditioned=conditioned)
+    spec = FleetSpec(n_devices=n, base=BASE, chunk=chunk)
+    return Fleet(ex, w, "twin", spec, key=jax.random.fold_in(key, 2),
+                 n_probe=n_probe)
+
+
+def _x(seed=0, B=2, K=32):
+    return jax.random.normal(jax.random.PRNGKey(100 + seed), (B, K)) * 0.5
+
+
+def _crc(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes())
+
+
+# --------------------------------------------------------------------- #
+# determinism + chunking
+# --------------------------------------------------------------------- #
+def test_chunk_size_bitwise_determinism():
+    """Chunking only regroups per-device computations: any chunk size
+    (including non-divisors that force a padded last chunk) yields
+    bit-identical per-device errors."""
+    x = _x()
+    ref = _fleet(n=24, chunk=24).evaluate(x, AGES[0])
+    for chunk in (8, 5, 17):
+        out = _fleet(n=24, chunk=chunk).evaluate(x, AGES[0])
+        assert _crc(out) == _crc(ref), f"chunk={chunk} diverged"
+
+
+def test_padded_last_chunk_matches_subset_eval():
+    """Pad rows (repeats of the final device) must be dropped, never
+    leak into results: a partial-id evaluation equals the same rows of
+    the full one."""
+    fleet = _fleet(n=10, chunk=8)
+    x = _x()
+    full = fleet.evaluate(x, AGES[1])
+    ids = np.array([3, 8, 9], np.int32)
+    sub = fleet.evaluate(x, AGES[1], ids=ids)
+    np.testing.assert_array_equal(sub, full[ids])
+
+
+def test_cross_process_bitwise_determinism():
+    """A fresh interpreter reproduces the same population bit-for-bit
+    (the determinism contract the module docstring promises)."""
+    snippet = (
+        "import zlib, numpy as np\n"
+        "from tests.test_fleet import _fleet, _x, _crc\n"
+        "out = _fleet(n=12, chunk=5).evaluate(_x(), 3600.0)\n"
+        "print(_crc(out))\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO, "src"), REPO,
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    proc = subprocess.run([sys.executable, "-c", snippet], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    here = _crc(_fleet(n=12, chunk=5).evaluate(_x(), 3600.0))
+    assert int(proc.stdout.strip().splitlines()[-1]) == here
+
+
+def test_compile_once_across_ages_and_cal_cohorts():
+    """Ages and maintenance epochs are traced operands: a whole campaign
+    (every age x cohort combination) reuses ONE chunk executable."""
+    fleet = _fleet(n=16, chunk=8)
+    x = _x()
+    rng = np.random.default_rng(0)
+    for t in (0.0,) + AGES:
+        fleet.evaluate(x, t)
+        fleet.evaluate(x, t, cal_age=t)
+        fleet.evaluate(x, t,
+                       cal_age=rng.choice([0.0, t], size=16).astype(
+                           np.float32))
+    assert fleet.cache_size() == 1
+
+
+def test_requires_unit_line_resistance():
+    ex = _executor()
+    sc = Scenario(name="ir", r_line_scale=3.0)
+    spec = FleetSpec(n_devices=4, base=sc, chunk=4)
+    with pytest.raises(ValueError, match="r_line"):
+        Fleet(ex, jnp.ones((32, 8)) * 0.1, "bad", spec,
+              key=jax.random.PRNGKey(0))
+
+
+# --------------------------------------------------------------------- #
+# maintenance (reprogram + recalibrate) semantics
+# --------------------------------------------------------------------- #
+def test_maintained_device_beats_stale_device():
+    """cal_age = age means the array was rewritten and recalibrated at
+    the serving checkpoint: the drift clock reset must pull the error
+    back to the deployment floor, below the never-maintained device."""
+    fleet = _fleet(n=32, chunk=16)
+    x = _x()
+    t = 2_592_000.0
+    fresh = fleet.evaluate(x, t, cal_age=t)
+    stale = fleet.evaluate(x, t, cal_age=0.0)
+    floor = fleet.evaluate(x, 0.0)
+    assert np.median(fresh) < np.median(stale)
+    assert np.median(fresh) < 2.0 * np.median(floor)
+
+
+def test_conditioned_fleet_runs_and_is_deterministic():
+    """The conditioned-emulator path (per-tile feature operands) keeps
+    the same determinism + compile-once contracts."""
+    fa = _fleet(n=8, chunk=8, backend="emulator", conditioned=True)
+    fb = _fleet(n=8, chunk=3, backend="emulator", conditioned=True)
+    assert fa.ex.emulator_conditioned
+    x = _x()
+    a, b = fa.evaluate(x, AGES[0]), fb.evaluate(x, AGES[0])
+    assert _crc(a) == _crc(b)
+    assert fa.cache_size() == 1
+
+
+# --------------------------------------------------------------------- #
+# planner cost model (synthetic forecast grids -> exact DP units)
+# --------------------------------------------------------------------- #
+def _stub_planner(E, timeline=AGES, **kw):
+    """Planner over a synthetic E[d, i, j] grid, no fleet evaluation."""
+    n = E.shape[0]
+    stub = types.SimpleNamespace(
+        spec=types.SimpleNamespace(n_devices=n, base=BASE), tag="stub")
+    planner = MaintenancePlanner(fleet=stub, timeline=list(timeline), **kw)
+    planner._forecast_grid = lambda x: np.asarray(E, np.float32)
+    return planner
+
+
+def test_planner_healthy_device_does_nothing():
+    E = np.full((3, 2, 3), 0.01, np.float32)
+    plan = _stub_planner(E, slo=0.1).plan(None)
+    assert (plan.actions == A_NONE).all()
+    assert plan.expected_cost == 0.0
+
+
+def test_planner_recalibrates_transient_drift():
+    """Stale forecasts violate, freshly maintained ones don't: one
+    recalibration (cost 1) beats eating the penalty (25) or retiring
+    (40)."""
+    E = np.full((2, 2, 3), 0.5, np.float32)
+    E[:, 0, 1] = 0.02                       # maintained at t1, serve t1
+    E[:, 1, 2] = 0.02                       # maintained at t2, serve t2
+    E[:, 1, 1] = 0.02                       # t1 write still fresh at t2
+    plan = _stub_planner(E, slo=0.1).plan(None)
+    assert (plan.actions[:, 0] == A_RECAL).all()
+    assert not (plan.actions == A_RETIRE).any()
+    assert plan.expected_cost == pytest.approx(2 * 1.0)  # one recal each
+
+
+def test_planner_retires_persistent_violation():
+    """When even a fresh rewrite forecasts above SLO at every remaining
+    checkpoint, the one-time retire cost undercuts the penalty stream
+    (3 x 25 > 40)."""
+    E = np.full((1, 3, 4), 0.9, np.float32)
+    plan = _stub_planner(E, timeline=(1.0, 2.0, 3.0), slo=0.1).plan(None)
+    assert plan.actions[0, 0] == A_RETIRE
+    assert plan.expected_cost == pytest.approx(ActionCosts().retire)
+
+
+def test_planner_never_retrains_under_conditioned_gain():
+    rng = np.random.default_rng(3)
+    E = rng.uniform(0.0, 0.6, size=(16, 2, 3)).astype(np.float32)
+    plan = _stub_planner(E, slo=0.1, retrain_gain=1.0).plan(None)
+    assert not (plan.actions == A_RETRAIN).any()
+
+
+def test_planner_wear_horizon_decision():
+    E = np.full((2, 2, 3), 0.01, np.float32)
+    plan = _stub_planner(E, slo=0.1).plan(None)
+    assert plan.remap_horizon == AGES       # stuck-off + drift corner
+    quiet = types.SimpleNamespace(
+        spec=types.SimpleNamespace(
+            n_devices=2,
+            base=Scenario(name="nodrift", p_stuck_off=0.05)), tag="s")
+    planner = MaintenancePlanner(fleet=quiet, timeline=list(AGES))
+    assert planner._choose_remap_horizon() is None
+
+
+def test_realized_cal_ages_and_cohorts():
+    acts = np.array([[A_NONE, A_RECAL, A_NONE],
+                     [A_RECAL, A_NONE, A_RETRAIN],
+                     [A_NONE, A_NONE, A_NONE]], np.int8)
+    tl = (10.0, 20.0, 30.0)
+    cal = _realized_cal_ages(acts, tl)
+    np.testing.assert_array_equal(
+        cal, np.array([[0, 20, 20], [10, 10, 30], [0, 0, 0]], np.float32))
+    plan = FleetPlan(timeline=tl, actions=acts, expected_cost=0.0)
+    c0 = plan.cohorts(0)
+    np.testing.assert_array_equal(c0["none"], [0, 2])
+    np.testing.assert_array_equal(c0["recalibrate"], [1])
+    assert "retire" not in c0
+
+
+def test_baseline_policies_shapes():
+    nv = never_policy(5, AGES)
+    al = always_recalibrate_policy(5, AGES)
+    assert nv.shape == al.shape == (5, len(AGES))
+    assert (nv == A_NONE).all() and (al == A_RECAL).all()
+
+
+def test_simulate_policy_costs_and_retire_semantics():
+    """Retired devices book one retire cost, then leave the error pool
+    (accuracy 1.0) and act no further; recal costs accumulate per
+    device-checkpoint; SLO violations price in."""
+    fleet = _fleet(n=8, chunk=8)
+    x = _x()
+    costs = ActionCosts()
+    acts = never_policy(8, AGES)
+    acts[0, 0] = A_RETIRE
+    acts[1, :] = A_RECAL
+    out = simulate_policy(fleet, x, AGES, acts, costs, slo=1e9)
+    assert len(out) == len(AGES)
+    assert out[0]["retired"] == out[1]["retired"] == 1
+    # slo=1e9 -> no penalties: cost is purely the action table
+    assert out[0]["action_cost"] == pytest.approx(costs.retire
+                                                 + costs.recalibrate)
+    assert out[1]["action_cost"] == pytest.approx(costs.recalibrate)
+    assert out[1]["cum_cost"] == pytest.approx(
+        costs.retire + 2 * costs.recalibrate)
+    viol = simulate_policy(fleet, x, AGES, never_policy(8, AGES), costs,
+                           slo=-1.0)       # every live device violates
+    assert viol[0]["violations"] == 8
+    assert viol[0]["cum_cost"] == pytest.approx(8 * costs.slo_penalty)
+
+
+# --------------------------------------------------------------------- #
+# forecasting surrogate
+# --------------------------------------------------------------------- #
+def test_surrogate_ranker_fits_and_predicts():
+    fleet = _fleet(n=16, chunk=8)
+    x = _x()
+    ranker = SurrogateRanker().fit(fleet, x, list(AGES), n_probe=8)
+    assert np.isfinite(ranker.train_pinball)
+    ids = np.arange(16, dtype=np.int32)
+    pred = ranker.predict(fleet, ids, AGES[1], cal_age=0.0)
+    assert pred.shape == (16,) and np.isfinite(pred).all()
+    # reprogram semantics: a freshly maintained device must be forecast
+    # strictly below the same device served stale from deployment
+    fresh = ranker.predict(fleet, ids, AGES[1], cal_age=AGES[1])
+    assert np.median(fresh) < np.median(pred)
+    # one compiled executable even after the probe grid
+    assert fleet.cache_size() == 1
+
+
+# --------------------------------------------------------------------- #
+# wear-aware remapping policy (fleet-level satellite)
+# --------------------------------------------------------------------- #
+def test_remap_horizon_none_bit_identical():
+    """horizon=None must reproduce the instantaneous remapper exactly
+    (the planner's 'not wear-aware' arm is the legacy behavior)."""
+    ex = _executor()
+    w = jax.random.normal(jax.random.PRNGKey(5), (32, 8)) * 0.3
+    plan = ex._plan_for(w, "wear")
+    sc = tile_scenarios(plan.NB, plan.NO, name="corner", p_stuck_off=0.2,
+                        drift_nu=0.03)
+    key = jax.random.PRNGKey(11)
+    base, operm = remap_plan(plan, ACFG, sc, key)
+    none, nperm = remap_plan(plan, ACFG, sc, key, horizon=None)
+    np.testing.assert_array_equal(np.asarray(operm), np.asarray(nperm))
+    np.testing.assert_array_equal(np.asarray(base.g_feat),
+                                  np.asarray(none.g_feat))
+    wear, wperm = remap_plan(plan, ACFG, sc, key, horizon=AGES)
+    assert np.array_equal(np.sort(np.asarray(wperm)), np.arange(plan.N))

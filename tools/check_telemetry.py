@@ -21,7 +21,10 @@ applies to both):
     schema key; CI telemetry-smoke);
   * ``serve``   -- the continuous-batching engine (``require_serve``;
     fed by ``benchmarks/bench_serve.py --telemetry`` in the CI
-    serve-smoke job).
+    serve-smoke job);
+  * ``fleet``   -- a fleet maintenance campaign (``require_fleet``;
+    fed by ``benchmarks/bench_fleet.py --telemetry`` in the CI
+    fleet-smoke job).
 
 Exit 1 with a per-rule report on any violation.
 
@@ -38,7 +41,8 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_SCHEMA = os.path.join(REPO, "tools", "telemetry_schema.json")
 
 
-PROFILES = {"session": "require", "serve": "require_serve"}
+PROFILES = {"session": "require", "serve": "require_serve",
+            "fleet": "require_fleet"}
 
 
 def check(snap: dict, schema: dict, profile: str = "session") -> list:
@@ -88,8 +92,9 @@ def main(argv=None) -> int:
                     help="schema file (default: tools/telemetry_schema.json)")
     ap.add_argument("--profile", default="session", choices=sorted(PROFILES),
                     help="which require list applies: 'session' (a "
-                         "ServeSession serve) or 'serve' (the "
-                         "continuous-batching engine)")
+                         "ServeSession serve), 'serve' (the "
+                         "continuous-batching engine) or 'fleet' (a "
+                         "fleet maintenance campaign)")
     args = ap.parse_args(argv)
     with open(args.snapshot) as f:
         snap = json.load(f)
